@@ -1,0 +1,45 @@
+"""Figure 1: Theorem 4.3 bound on |G|+|O| vs psi and n; empirical validation.
+
+Left panel: the bound C(D+n, D), D = ceil(-log psi / log 4), over a psi grid
+for several n.  Right panel: empirical |G|+|O| from CGAVI on random data in
+[0,1]^n (10k samples) vs the bound — the paper finds the empirical count
+slightly below the bound; we assert containment.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import oavi, terms
+from repro.core.oavi import OAVIConfig
+from repro.core.oracles import OracleConfig
+from repro.data.synthetic import random_cube
+
+from .common import Reporter
+
+
+def run(rep: Reporter, quick: bool = True):
+    # -- left: the bound surface
+    for n in [1, 2, 3, 5, 10]:
+        for psi in [0.2, 0.1, 0.05, 0.01, 0.005, 0.001]:
+            rep.add("fig1_bound", n=n, psi=psi,
+                    D=terms.theorem_4_3_degree_bound(psi),
+                    bound=terms.theorem_4_3_size_bound(psi, n))
+
+    # -- right: empirical vs bound on random data
+    m = 2000 if quick else 10000
+    ns = [1, 2, 3, 4] if quick else [1, 2, 3, 4, 5, 6]
+    psi = 0.005
+    for n in ns:
+        X = random_cube(m, n, seed=0)
+        model = oavi.fit(
+            X,
+            OAVIConfig(psi=psi, engine="oracle", ihb=True,
+                       solver=OracleConfig(name="cg"), cap_terms=128),
+        )
+        bound = terms.theorem_4_3_size_bound(psi, n)
+        emp = model.num_G + model.num_O
+        assert emp <= bound, (emp, bound)
+        rep.add("fig1_empirical", n=n, psi=psi, m=m,
+                G_plus_O=emp, bound=bound, n4=n**4,
+                time_s=round(model.stats["time_total"], 2))

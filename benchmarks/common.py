@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: timing, CSV emission, dataset access."""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+import time
+from typing import Callable, Dict, List
+
+
+class Reporter:
+    """Collects (benchmark, metric, value) rows; prints CSV at the end."""
+
+    def __init__(self):
+        self.rows: List[Dict] = []
+
+    def add(self, bench: str, **kv):
+        row = {"bench": bench, **kv}
+        self.rows.append(row)
+        parts = ", ".join(f"{k}={v}" for k, v in kv.items())
+        print(f"[{bench}] {parts}", flush=True)
+
+    def write_csv(self, path: str):
+        if not self.rows:
+            return
+        keys: List[str] = []
+        for r in self.rows:
+            for k in r:
+                if k not in keys:
+                    keys.append(k)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(self.rows)
+        print(f"wrote {path} ({len(self.rows)} rows)")
+
+
+def timeit(fn: Callable, *, repeat: int = 1) -> float:
+    """Best-of-repeat wall time in seconds."""
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best

@@ -1,0 +1,188 @@
+"""§Perf hillclimbing driver: lower a cell under config variants, report the
+roofline-term deltas per iteration.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell A|B|C|D
+
+Each cell runs its iteration ladder (baseline + candidate changes in
+predicted-win order) and appends records to results/hillclimb.json.  The
+narrative (hypothesis / napkin math / verdict) lives in EXPERIMENTS.md §Perf;
+this file is the measurement harness.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro import configs
+from repro.launch import dryrun as D
+from repro.launch import mesh as mesh_mod
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def measure(arch_id, shape_name, cfg, mesh, label):
+    """Compile the cell variant and its 1/2-period unrolled cost variants."""
+    t0 = time.time()
+    lowered, _ = D.lower_cell(arch_id, shape_name, mesh, cfg=cfg)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    def cost_for(n):
+        c = dataclasses.replace(cfg, n_periods=n, unroll_scan=True)
+        lw, _ = D.lower_cell(arch_id, shape_name, mesh, cfg=c)
+        cm = lw.compile()
+        cost = cm.cost_analysis()
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": D.collective_bytes(cm.as_text()),
+        }
+
+    c1, c2 = cost_for(1), cost_for(2)
+    n = cfg.n_periods
+    df = max(c2["flops"] - c1["flops"], 0.0)
+    db = max(c2["bytes"] - c1["bytes"], 0.0)
+    dc = max(c2["coll"]["total"] - c1["coll"]["total"], 0)
+    flops = c1["flops"] + (n - 1) * df
+    byts = c1["bytes"] + (n - 1) * db
+    coll = c1["coll"]["total"] + (n - 1) * dc
+    rec = {
+        "label": label,
+        "arch": arch_id,
+        "shape": shape_name,
+        "flops": flops,
+        "bytes": byts,
+        "coll": coll,
+        "t_compute_s": flops / PEAK_FLOPS,
+        "t_memory_s": byts / HBM_BW,
+        "t_collective_s": coll / ICI_BW,
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "compile_s": round(t_compile, 1),
+    }
+    terms = {k: rec[f"t_{k}_s"] for k in ("compute", "memory", "collective")}
+    rec["dominant"] = max(terms, key=terms.get)
+    rec["bound_s"] = terms[rec["dominant"]]
+    print(f"  [{label}] compute={rec['t_compute_s']:.2f}s "
+          f"memory={rec['t_memory_s']:.2f}s coll={rec['t_collective_s']:.2f}s "
+          f"dominant={rec['dominant']} temp={rec['temp_bytes']/2**30:.1f}GiB",
+          flush=True)
+    return rec
+
+
+def cell_A(mesh, iters=None):
+    """kimi-k2-1t-a32b x train_4k — collective-dominated (MoE dispatch)."""
+    arch, shape = "kimi-k2-1t-a32b", "train_4k"
+    base = configs.get_config(arch)
+    out = []
+    iters = iters or {"baseline", "1", "2"}
+    if "baseline" in iters:
+        out.append(measure(arch, shape, base, mesh, "baseline(global-dispatch)"))
+    row = dataclasses.replace(base, moe=base.moe._replace(dispatch="rowwise"))
+    if "1" in iters:
+        out.append(measure(arch, shape, row, mesh, "iter1:rowwise-dispatch"))
+    if "2" in iters:
+        row2 = dataclasses.replace(row, ce_impl="chunked")
+        out.append(measure(arch, shape, row2, mesh, "iter2:+chunked-ce"))
+    if "3" in iters:
+        # iter3 = rowwise + use-site expert-weight gathering (code change in
+        # moe._forward_rowwise; measured against the same config as iter1)
+        out.append(measure(arch, shape, row, mesh, "iter3:rowwise+weight-gather"))
+    return out
+
+
+def cell_B(mesh):
+    """qwen3-8b x train_4k — memory-dominated dense train."""
+    arch, shape = "qwen3-8b", "train_4k"
+    base = configs.get_config(arch)
+    out = [measure(arch, shape, base, mesh, "baseline(remat-full,plain-ce)")]
+    v1 = dataclasses.replace(base, remat_policy="dots")
+    out.append(measure(arch, shape, v1, mesh, "iter1:remat-dots"))
+    v2 = dataclasses.replace(v1, ce_impl="chunked")
+    out.append(measure(arch, shape, v2, mesh, "iter2:+chunked-ce"))
+    v3 = dataclasses.replace(v2, attn_impl="chunked")
+    out.append(measure(arch, shape, v3, mesh, "iter3:+chunked-attn"))
+    return out
+
+
+def cell_C(mesh):
+    """deepseek-v2-lite-16b x prefill_32k — worst useful_ratio (dense S^2)."""
+    arch, shape = "deepseek-v2-lite-16b", "prefill_32k"
+    base = configs.get_config(arch)
+    out = [measure(arch, shape, base, mesh, "baseline(reference-attn)")]
+    v1 = dataclasses.replace(base, attn_impl="chunked", attn_chunk=2048)
+    out.append(measure(arch, shape, v1, mesh, "iter1:chunked-attn-2k"))
+    v2 = dataclasses.replace(base, attn_impl="chunked", attn_chunk=8192)
+    out.append(measure(arch, shape, v2, mesh, "iter2:chunked-attn-8k"))
+    return out
+
+
+def _oavi_variant(mesh, label, **kw):
+    rec = D.run_oavi_cell(mesh, "pod16x16", **kw)
+    rec["label"] = label
+    rec["t_compute_s"] = rec["flops"] / PEAK_FLOPS
+    rec["t_memory_s"] = rec["bytes_accessed"] / HBM_BW
+    rec["t_collective_s"] = rec["collective_bytes"]["total"] / ICI_BW
+    terms = {k: rec[f"t_{k}_s"] for k in ("compute", "memory", "collective")}
+    rec["dominant"] = max(terms, key=terms.get)
+    rec["bound_s"] = terms[rec["dominant"]]
+    print(f"  [{label}] compute={rec['t_compute_s']*1e3:.3f}ms "
+          f"memory={rec['t_memory_s']*1e3:.3f}ms "
+          f"coll={rec['t_collective_s']*1e3:.3f}ms dominant={rec['dominant']}",
+          flush=True)
+    return rec
+
+
+def cell_D(mesh):
+    """oavi-gram-step — the paper's technique.
+
+    The degree step is memory-term-bound (arithmetic intensity ~= K per A
+    read); the ladder raises intensity (bigger candidate batches K) and
+    halves streaming bytes (bf16 A/X with the Gram psum'd in f32).
+    """
+    recs = [_oavi_variant(mesh, "baseline(K=64,f32)", Kcap=64)]
+    recs.append(_oavi_variant(mesh, "iter1:K=256", Kcap=256))
+    recs.append(_oavi_variant(mesh, "iter2:K=256,bf16", Kcap=256, dtype="bfloat16"))
+    return recs
+
+
+CELLS = {"A": cell_A, "B": cell_B, "C": cell_C, "D": cell_D}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--iters", default=None,
+                    help="comma-separated subset, e.g. 'baseline,1,3'")
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args()
+    mesh = mesh_mod.make_production_mesh()
+    print(f"=== hillclimb cell {args.cell} ===")
+    kw = {}
+    if args.iters and args.cell == "A":
+        kw["iters"] = set(args.iters.split(","))
+    recs = CELLS[args.cell](mesh, **kw)
+    existing = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            existing = json.load(f)
+    existing.extend(recs)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(existing, f, indent=1, default=str)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

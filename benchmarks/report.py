@@ -1,0 +1,60 @@
+"""Render EXPERIMENTS.md §Roofline table + §Dry-run memory notes from the
+results JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report > results/roofline.md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .roofline import ICI_BW, HBM_BW, PEAK_FLOPS, analyse
+
+
+def main():
+    path = "results/dryrun_pod16x16.json"
+    recs = json.load(open(path))
+    rows = []
+    for r in recs:
+        if "flops" not in r:
+            continue
+        a = analyse(r)
+        a["temp_gib"] = r.get("memory", {}).get("temp_size_bytes", 0) / 2**30
+        rows.append(a)
+    rows.sort(key=lambda a: (a["arch"], a["shape"]))
+
+    print("| arch | shape | compute s | memory s | collective s | dominant | "
+          "MODEL_FLOPS | useful | MFU-bound | temp GiB/dev |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---:|---:|")
+    for a in rows:
+        print(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.3g} | "
+            f"{a['t_memory_s']:.3g} | {a['t_collective_s']:.3g} | "
+            f"**{a['dominant']}** | {a['model_flops']:.2e} | "
+            f"{a['useful_ratio']:.3f} | {a['mfu_bound']:.3f} | "
+            f"{a['temp_gib']:.1f} |"
+        )
+
+    # one-sentence bottleneck notes per dominant category
+    print()
+    mem = [a for a in rows if a["dominant"] == "memory"]
+    col = [a for a in rows if a["dominant"] == "collective"]
+    cmp_ = [a for a in rows if a["dominant"] == "compute"]
+    print(f"- memory-dominated: {len(mem)} cells; "
+          f"collective-dominated: {len(col)}; compute-dominated: {len(cmp_)}.")
+
+    # multi-pod compile proof table
+    mp = "results/dryrun_pod2x16x16.json"
+    if os.path.exists(mp):
+        recs2 = json.load(open(mp))
+        print(f"\nMulti-pod (2x16x16 = 512 chips): {len(recs2)} cells "
+              "lower+compile OK:")
+        for r in sorted(recs2, key=lambda r: (r["arch"], r["shape"])):
+            print(f"  - {r['arch']} x {r['shape']}: compile "
+                  f"{r['time_compile_s']}s, raw coll/dev "
+                  f"{r['collective_bytes_raw']['total'] if 'collective_bytes_raw' in r else r['collective_bytes']['total']:.2e} B")
+
+
+if __name__ == "__main__":
+    main()

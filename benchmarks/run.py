@@ -1,0 +1,63 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,table3]
+
+Default (quick) sizes finish on CPU in ~10 minutes; ``--full`` uses the
+paper-scale sample counts (up to 2M).  Results go to results/benchmarks.csv.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    bench_ablation,
+    bench_bound,
+    bench_ihb,
+    bench_ordering,
+    bench_performance,
+    bench_scaling,
+    bench_solvers,
+    roofline,
+)
+from .common import Reporter
+
+BENCHES = {
+    "fig1_bound": bench_bound.run,
+    "fig2_solvers": bench_solvers.run,
+    "fig3_ihb": bench_ihb.run,
+    "fig4_scaling": bench_scaling.run,
+    "table1_ordering": bench_ordering.run,
+    "table3_performance": bench_performance.run,
+    "ablation_psi": bench_ablation.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--out", type=str, default="results/benchmarks.csv")
+    args = ap.parse_args(argv)
+
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    rep = Reporter()
+    t0 = time.time()
+    for name in names:
+        if name not in BENCHES:
+            print(f"unknown benchmark {name!r}", file=sys.stderr)
+            continue
+        print(f"=== {name} ===", flush=True)
+        t1 = time.time()
+        BENCHES[name](rep, quick=not args.full)
+        print(f"=== {name} done in {time.time() - t1:.1f}s ===", flush=True)
+    rep.write_csv(args.out)
+    print(f"all benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: construct approximate vanishing ideal generators with OAVI.
+
+Fits CGAVI-IHB to points near the unit circle, prints the recovered
+generators (the circle equation should appear), and evaluates them on
+unseen points of the same variety.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import oavi, terms
+from repro.core.oavi import OAVIConfig
+from repro.core.oracles import OracleConfig
+from repro.core.transform import MinMaxScaler
+
+
+def circle_points(m, seed=0, noise=0.01):
+    rng = np.random.default_rng(seed)
+    theta = rng.uniform(0, 2 * np.pi, m)
+    X = np.stack([np.cos(theta), np.sin(theta)], axis=1)
+    return X + rng.normal(0, noise, X.shape)
+
+
+def main():
+    scaler = MinMaxScaler()
+    X = scaler.fit_transform(circle_points(2000))
+
+    config = OAVIConfig(
+        psi=0.005,
+        engine="oracle",          # paper-faithful oracle engine
+        solver=OracleConfig(name="cg"),
+        ihb=True,                 # Inverse Hessian Boosting warm starts
+    )
+    model = oavi.fit(X, config)
+
+    print(f"|G| = {model.num_G} generators, |O| = {model.num_O} terms")
+    print(f"Theorem 4.3 bound on |G|+|O|: {model.stats['thm43_bound']}")
+    print(f"fit time: {model.stats['time_total']:.2f}s\n")
+
+    for g in model.generators[:5]:
+        parts = []
+        for c, t in zip(g.coeffs, model.book.terms):
+            if abs(c) > 1e-3:
+                parts.append(f"{c:+.3f}*{terms.term_to_str(t)}")
+        lead = terms.term_to_str(g.term)
+        print(f"  g = {lead} {' '.join(parts)}   (MSE {g.mse:.2e})")
+
+    Z = scaler.transform(circle_points(500, seed=1, noise=0.0))
+    mses = np.asarray(model.mse(Z))
+    print(f"\nout-of-sample MSE of generators: max {mses.max():.2e} "
+          f"(psi = {model.psi}) -> generators vanish on unseen variety points")
+
+
+if __name__ == "__main__":
+    main()

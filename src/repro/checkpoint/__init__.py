@@ -1,0 +1,4 @@
+"""Checkpoint substrate: atomic sharded save/restore with elastic re-shard."""
+from . import store
+from .store import save, restore, latest_step, cleanup, AsyncSaver
+__all__ = ["store", "save", "restore", "latest_step", "cleanup", "AsyncSaver"]

@@ -1,0 +1,91 @@
+"""Architecture registry: the 10 assigned configs + the paper's own setting.
+
+``get_config(arch_id)`` / ``get_reduced(arch_id)`` resolve ``--arch`` flags;
+``ARCHS`` lists every selectable id.  ``oavi_paper`` holds the paper's own
+(non-LM) experiment configuration defaults.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from ..models.model import ModelConfig
+from . import (
+    deepseek_v2_lite_16b,
+    hubert_xlarge,
+    jamba_1_5_large_398b,
+    kimi_k2_1t_a32b,
+    phi4_mini_3_8b,
+    qwen1_5_4b,
+    qwen2_1_5b,
+    qwen2_vl_2b,
+    qwen3_8b,
+    shapes,
+    xlstm_1_3b,
+)
+from .shapes import SHAPES, Shape, cell_supported, input_specs
+
+_MODULES = [
+    qwen3_8b,
+    qwen1_5_4b,
+    qwen2_1_5b,
+    phi4_mini_3_8b,
+    kimi_k2_1t_a32b,
+    deepseek_v2_lite_16b,
+    xlstm_1_3b,
+    hubert_xlarge,
+    qwen2_vl_2b,
+    jamba_1_5_large_398b,
+]
+
+ARCHS: Dict[str, object] = {m.ARCH_ID: m for m in _MODULES}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; options: {sorted(ARCHS)}")
+    return ARCHS[arch_id].config()
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; options: {sorted(ARCHS)}")
+    return ARCHS[arch_id].reduced()
+
+
+def get_optimized(arch_id: str) -> ModelConfig:
+    """The beyond-paper tuned profile from EXPERIMENTS.md §Perf: chunked
+    (flash-in-XLA) attention everywhere, row-local MoE dispatch.  The plain
+    ``get_config`` stays the paper-faithful baseline; both remain selectable
+    so the reproduction and the optimization are separately measurable."""
+    import dataclasses
+
+    cfg = get_config(arch_id)
+    cfg = dataclasses.replace(cfg, attn_impl="chunked", attn_chunk=1024)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=cfg.moe._replace(dispatch="rowwise"))
+    return cfg
+
+
+def all_cells():
+    """Every (arch_id, shape) pair with its supported/skip verdict."""
+    out = []
+    for arch_id in ARCHS:
+        cfg = get_config(arch_id)
+        for shape in SHAPES.values():
+            ok, why = cell_supported(cfg, shape)
+            out.append((arch_id, shape.name, ok, why))
+    return out
+
+
+__all__ = [
+    "ARCHS",
+    "get_config",
+    "get_reduced",
+    "all_cells",
+    "SHAPES",
+    "Shape",
+    "cell_supported",
+    "input_specs",
+    "shapes",
+]

@@ -1,0 +1,72 @@
+"""The assigned input-shape grid and per-cell input specs.
+
+Four shapes per architecture (40 cells total):
+
+    train_4k     seq=4096    global_batch=256   -> train_step
+    prefill_32k  seq=32768   global_batch=32    -> prefill_step
+    decode_32k   seq=32768   global_batch=128   -> decode_step (1 new token)
+    long_500k    seq=524288  global_batch=1     -> decode_step (sub-quadratic only)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (no allocation) for the
+step inputs; params/caches come from ``models.model.abstract_params`` /
+``abstract_cache``.  ``cell_supported`` encodes the documented skips
+(DESIGN.md §Arch-applicability): encoder-only archs have no decode step,
+pure full-attention archs skip long_500k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: Shape) -> Tuple[bool, str]:
+    if shape.kind == "decode":
+        if not cfg.supports_decode:
+            return False, "encoder-only: no autoregressive decode"
+        if shape.name == "long_500k" and not cfg.sub_quadratic:
+            return False, "full quadratic attention: 500k decode excluded (DESIGN.md)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.frontend == "tokens":
+            # +1 position: loss_fn shifts inputs/labels internally
+            return {"tokens": jax.ShapeDtypeStruct((B, S + 1), i32)}
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.jax_dtype()),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if shape.kind == "prefill":
+        if cfg.frontend == "tokens":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.jax_dtype())}
+    # decode: one token against a seq_len-deep cache
+    return {
+        "token": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+    }

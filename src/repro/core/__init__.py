@@ -1,0 +1,19 @@
+"""Core library: the paper's contribution (OAVI / BPCG / IHB / ordering)."""
+
+from .oavi import OAVIConfig, OAVIModel, Generator, fit, evaluate_terms
+from .oracles import OracleConfig, solve_agd, solve_cg, solve_pcg, solve_bpcg
+from .ordering import pearson_order, pearson_scores
+from .pipeline import PipelineConfig, VanishingIdealClassifier, VARIANTS
+from .svm import LinearSVM, LinearSVMConfig, PolySVM, PolySVMConfig
+from .transform import MinMaxScaler, feature_transform
+from . import abm, distributed, ihb, terms, vca
+
+__all__ = [
+    "OAVIConfig", "OAVIModel", "Generator", "fit", "evaluate_terms",
+    "OracleConfig", "solve_agd", "solve_cg", "solve_pcg", "solve_bpcg",
+    "pearson_order", "pearson_scores",
+    "PipelineConfig", "VanishingIdealClassifier", "VARIANTS",
+    "LinearSVM", "LinearSVMConfig", "PolySVM", "PolySVMConfig",
+    "MinMaxScaler", "feature_transform",
+    "abm", "distributed", "ihb", "terms", "vca",
+]

@@ -1,0 +1,110 @@
+"""Inverse Hessian Boosting (IHB) — Section 4.4 / Theorem 4.9.
+
+OAVI solves a sequence of least-squares problems ``min_y ||A y + b||^2`` in
+which ``A = O(X)`` grows by one column whenever a border term is appended to
+``O``.  IHB maintains ``N = (A^T A)^{-1}`` across appends with the block
+inverse update of Theorem 4.9 in ``O(l^2)`` elementary operations, so the
+closed-form optimum ``y* = -N A^T b`` is available essentially for free and
+serves as a (usually eps-accurate) warm start for the convex oracle.
+
+All state is fixed-capacity: ``N`` is ``(L, L)`` with the *inactive* block set
+to the identity (so the padded ``N`` is the exact inverse of the padded
+``A^T A + I_inactive``), which keeps every update a dense masked operation
+that jits once.
+
+Beyond the paper, we also provide a Cholesky-factor engine (maintain the
+upper-triangular ``R`` with ``A^T A = R^T R``; appends are triangular solves)
+whose conditioning is ``kappa(A)`` instead of ``kappa(A)^2`` — recorded as a
+beyond-paper optimization in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+
+class IHBState(NamedTuple):
+    AtA: jax.Array  # (L, L) Gram matrix of active columns (zeros elsewhere)
+    N: jax.Array  # (L, L) inverse of (AtA_active ⊕ I_inactive)
+    R: jax.Array  # (L, L) upper-triangular Cholesky factor (ditto)
+
+
+def init_state(Lcap: int, diag0: jax.Array, dtype=jnp.float32) -> IHBState:
+    """State after the constant-1 column: AtA[0,0] = ||1||^2 = m."""
+    eye = jnp.eye(Lcap, dtype=dtype)
+    AtA = jnp.zeros((Lcap, Lcap), dtype).at[0, 0].set(diag0)
+    N = eye.at[0, 0].set(1.0 / diag0)
+    R = eye.at[0, 0].set(jnp.sqrt(diag0))
+    return IHBState(AtA=AtA, N=N, R=R)
+
+
+def closed_form_inverse(state: IHBState, q: jax.Array) -> jax.Array:
+    """``y* = -N q`` (paper's IHB warm start).  ``q = A^T b`` padded."""
+    return -(state.N @ q)
+
+
+def closed_form_cholesky(state: IHBState, q: jax.Array) -> jax.Array:
+    """``y* = -(R^T R)^{-1} q`` via two triangular solves (beyond-paper)."""
+    z = solve_triangular(state.R, q, trans=1, lower=False)
+    return -solve_triangular(state.R, z, trans=0, lower=False)
+
+
+def mse_from_solution(q: jax.Array, btb: jax.Array, y: jax.Array, m) -> jax.Array:
+    """MSE(g, X) = (btb + q^T y) / m at the closed-form optimum y = -N q.
+
+    (||A y + b||^2 = y^T AtA y + 2 q^T y + btb = -q^T y - ... collapses to
+    btb + q^T y when y is the exact minimizer.)
+    """
+    return (btb + q @ y) / m
+
+
+def append_column(
+    state: IHBState,
+    q: jax.Array,  # (L,) A^T b for the new column b (zeros at inactive idx)
+    btb: jax.Array,  # ||b||^2
+    ell: jax.Array,  # current active count == index where b lands
+) -> IHBState:
+    """Theorem 4.9 block inverse update + Cholesky append, both O(l^2)."""
+    dtype = state.N.dtype
+    Lcap = state.N.shape[0]
+    onehot = (jnp.arange(Lcap) == ell).astype(dtype)
+
+    # ---- AtA update: add row/col ell = (q, btb)
+    AtA = (
+        state.AtA
+        + jnp.outer(onehot, q)
+        + jnp.outer(q, onehot)
+        + btb * jnp.outer(onehot, onehot)
+    )
+
+    # ---- inverse update (Thm 4.9).  u = N q, s = btb - q^T u (Schur compl.)
+    u = state.N @ q
+    s = btb - q @ u
+    s = jnp.maximum(s, jnp.asarray(1e-30, dtype))  # guarded; caller checks s
+    P = state.N + jnp.outer(u, u) / s
+    # zero out row/col ell (currently identity), then write n2 / n3 blocks
+    keep = 1.0 - onehot
+    P = P * keep[:, None] * keep[None, :]
+    n2 = -u / s  # (zero outside active block since u is)
+    N = P + jnp.outer(onehot, n2) + jnp.outer(n2, onehot) + (1.0 / s) * jnp.outer(onehot, onehot)
+
+    # ---- Cholesky append: R^T r = q ; rho = sqrt(btb - r^T r)
+    r = solve_triangular(state.R, q, trans=1, lower=False)
+    r = r * keep  # the inactive identity block must not leak into r
+    rho2 = jnp.maximum(btb - r @ r, jnp.asarray(1e-30, dtype))
+    rho = jnp.sqrt(rho2)
+    col = r + rho * onehot
+    # overwrite column ell of R (previously e_ell from the identity padding)
+    R = state.R * (1.0 - onehot)[None, :] + jnp.outer(col, onehot)
+
+    return IHBState(AtA=AtA, N=N, R=R)
+
+
+def schur_complement(state: IHBState, q: jax.Array, btb: jax.Array) -> jax.Array:
+    """``s = ||b||^2 - q^T N q`` — the (INF)/singularity guard of §4.4.3:
+    if s <= 0 the new column is (numerically) dependent and IHB must stop."""
+    return btb - q @ (state.N @ q)

@@ -1,0 +1,417 @@
+"""OAVI — the Oracle Approximate Vanishing Ideal algorithm (Algorithm 1).
+
+Structure
+---------
+Host-side Python owns the *combinatorics* (term book, DegLex borders — a few
+hundred items, Theorem 4.3), jitted JAX owns the *linear algebra*.  Per degree
+``d`` the whole border is processed by one jitted ``_degree_step``:
+
+1.  Candidate columns ``B = A[:, parents] * X[:, vars]``  (gather + product)
+2.  Gram blocks   ``QL = A^T B`` (L x K) and ``C = B^T B`` (K x K)
+    — these two matmuls are the *only* O(m) work in the whole degree.
+3.  A small ``fori_loop`` over the K candidates replays the exact sequential
+    semantics of Algorithm 1 (a term appended to O changes A for all later
+    candidates of the same degree) using only the precomputed Gram blocks:
+    the ``A^T b`` vector of candidate ``a`` is ``QL[:, a]`` plus ``C[j, a]``
+    scattered into the slots of the candidates ``j < a`` appended this degree.
+
+This "degree-batched Gram" formulation is bit-exact w.r.t. the sequential
+algorithm yet makes OAVI matmul-bound (MXU-friendly) — the per-candidate work
+inside the loop is O(l^2), independent of m.  It is also the unit of
+distribution: with X sharded over samples, step (1)+(2) are local matmuls
+followed by a psum of (L x K) + (K x K) buffers (see
+:mod:`repro.core.distributed`).
+
+Engines
+-------
+* ``engine='oracle'`` — paper-faithful: each candidate is decided by the
+  configured convex oracle (AGD / CG / PCG / BPCG), optionally warm-started by
+  IHB (CGAVI-IHB / AGDAVI-IHB), optionally re-solved sparsely (WIHB).
+* ``engine='fast'``  — beyond-paper: pure closed-form IHB decisions
+  (exact unconstrained optima; equals AGDAVI-IHB with an accurate oracle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from functools import partial
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ihb as ihb_mod
+from . import terms as terms_mod
+from .oracles import OracleConfig, SolveResult, quad_f, solve_agd, solve_bpcg, solve_cg, solve_pcg
+from .ordering import pearson_order
+
+_SOLVER_FNS = {"agd": solve_agd, "cg": solve_cg, "pcg": solve_pcg, "bpcg": solve_bpcg}
+
+
+@dataclasses.dataclass(frozen=True)
+class OAVIConfig:
+    psi: float = 0.005
+    engine: str = "fast"  # 'fast' | 'oracle'
+    solver: OracleConfig = dataclasses.field(default_factory=OracleConfig)
+    ihb: bool = True  # warm-start oracle with the closed-form optimum
+    wihb: bool = False  # re-solve accepted generators sparsely (BPCGAVI-WIHB)
+    inverse_engine: str = "inverse"  # 'inverse' (Thm 4.9) | 'chol' (beyond-paper)
+    max_degree: int = 10
+    cap_terms: int = 256  # initial capacity for |O|; grows on demand
+    cap_border: int = 64  # initial border capacity; grows on demand
+    dtype: str = "float32"
+    ordering: str = "pearson"  # 'pearson' | 'none' | 'reverse_pearson'
+    tol_dependent: float = 1e-9  # Schur-complement guard (relative)
+
+    def jax_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+class Generator(NamedTuple):
+    term: terms_mod.Term  # leading term
+    parent_idx: int  # index (into O) of the parent term, term = parent * x_var
+    var: int
+    coeffs: np.ndarray  # coefficients over O terms (length = |O| at accept time)
+    mse: float
+
+
+@dataclasses.dataclass
+class OAVIModel:
+    """Output of OAVI: term book for O, generators G, and transform machinery."""
+
+    n: int
+    psi: float
+    book: terms_mod.TermBook
+    generators: List[Generator]
+    feature_perm: Optional[np.ndarray]  # Pearson ordering permutation (or None)
+    stats: Dict
+    dtype: str = "float32"
+
+    @property
+    def num_O(self) -> int:
+        return len(self.book)
+
+    @property
+    def num_G(self) -> int:
+        return len(self.generators)
+
+    def term_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        return (
+            np.asarray(self.book.parents, dtype=np.int32),
+            np.asarray(self.book.vars, dtype=np.int32),
+        )
+
+    def generator_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        k = len(self.generators)
+        ell = len(self.book)
+        C = np.zeros((ell, k), dtype=self.dtype)
+        gp = np.zeros((k,), dtype=np.int32)
+        gv = np.zeros((k,), dtype=np.int32)
+        for j, g in enumerate(self.generators):
+            C[: len(g.coeffs), j] = g.coeffs
+            gp[j] = g.parent_idx
+            gv[j] = g.var
+        return C, gp, gv
+
+    def evaluate_O(self, Z: jax.Array) -> jax.Array:
+        """Evaluation matrix O(Z): (q, |O|)."""
+        parents, vars_ = self.term_arrays()
+        return evaluate_terms(
+            jnp.asarray(Z, self.dtype), jnp.asarray(parents), jnp.asarray(vars_)
+        )
+
+    def evaluate_G(self, Z: jax.Array) -> jax.Array:
+        """Evaluation matrix G(Z): (q, |G|).  Theorem 4.2 machinery."""
+        Z = jnp.asarray(Z, self.dtype)
+        if self.feature_perm is not None:
+            Z = Z[:, self.feature_perm]
+        cols = self.evaluate_O(Z)
+        if not self.generators:
+            return jnp.zeros((Z.shape[0], 0), self.dtype)
+        C, gp, gv = self.generator_arrays()
+        lead = cols[:, gp] * Z[:, gv]  # leading-term columns
+        return cols @ jnp.asarray(C) + lead
+
+    def mse(self, Z: jax.Array) -> jax.Array:
+        """Per-generator MSE over Z."""
+        G = self.evaluate_G(Z)
+        return jnp.mean(G * G, axis=0)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _append_columns(A, B, slots, appended):
+    """Scatter appended candidate columns of B into A at their slots."""
+    safe_slots = jnp.where(appended, slots, 0)
+    contrib = jnp.where(appended[None, :], B, 0.0)
+    return A.at[:, safe_slots].add(contrib, mode="drop")
+
+
+def evaluate_terms(Z: jax.Array, parents: jax.Array, vars_: jax.Array) -> jax.Array:
+    """Evaluate all O terms over Z incrementally: col_i = col_parent * Z[:, var]."""
+    q = Z.shape[0]
+    ell = parents.shape[0]
+    cols0 = jnp.zeros((q, ell), Z.dtype).at[:, 0].set(1.0)
+
+    def body(i, cols):
+        col = cols[:, parents[i]] * Z[:, vars_[i]]
+        return jax.lax.dynamic_update_slice(cols, col[:, None], (0, i))
+
+    return jax.lax.fori_loop(1, ell, body, cols0)
+
+
+class _LoopState(NamedTuple):
+    ihb: ihb_mod.IHBState
+    ell: jax.Array  # active |O|
+    ihb_live: jax.Array  # bool: IHB still enabled (INF guard, §4.4.3)
+    accepted: jax.Array  # (K,) bool
+    slots: jax.Array  # (K,) slot index for appended candidates
+    coeffs: jax.Array  # (K, L)
+    mses: jax.Array  # (K,)
+    iters: jax.Array  # (K,) solver iterations (0 for pure closed-form)
+
+
+def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
+    """Build the jitted degree step.  ``reduce_fn`` (e.g. a psum) is applied
+    to every Gram quantity; None means single-device."""
+
+    solver = _SOLVER_FNS[cfg.solver.name]
+    use_chol = cfg.inverse_engine == "chol"
+    rfn = reduce_fn if reduce_fn is not None else (lambda x: x)
+
+    def degree_step(A, X, state: ihb_mod.IHBState, ell0, parents, vars_, valid, m_total):
+        dtype = A.dtype
+        Lcap = A.shape[1]
+        K = parents.shape[0]
+        psi = jnp.asarray(cfg.psi, dtype)
+        # All Gram quantities are normalized by m (work with Abar = A/sqrt(m)):
+        # entries stay in [0,1] (X in [0,1]^n), which keeps fp32 well behaved
+        # for m in the millions, and MSE(g) = btb + q^T y exactly.
+        inv_m = jnp.asarray(1.0 / m_total, dtype)
+        one = jnp.asarray(1.0, dtype)
+
+        # ---- (1)+(2): all O(m) work, as two matmuls -------------------
+        P = jnp.take(A, parents, axis=1)  # (m, K) parent columns
+        B = P * jnp.take(X, vars_, axis=1)  # (m, K) candidate columns
+        QL = rfn(A.T @ B) * inv_m  # (L, K)
+        C = rfn(B.T @ B) * inv_m  # (K, K)
+
+        # ---- (3): sequential acceptance over candidates ---------------
+        def body(a, st: _LoopState) -> _LoopState:
+            q = QL[:, a]
+            # correction for columns appended earlier in this degree:
+            appended_before = (jnp.arange(K) < a) & (~st.accepted) & (st.slots < Lcap) & valid
+            safe_slots = jnp.where(appended_before, st.slots, 0)
+            q = q.at[safe_slots].add(jnp.where(appended_before, C[:, a], 0.0), mode="drop")
+            btb = C[a, a]
+
+            mask = jnp.arange(Lcap) < st.ell
+            if use_chol:
+                y0 = ihb_mod.closed_form_cholesky(st.ihb, q)
+            else:
+                y0 = ihb_mod.closed_form_inverse(st.ihb, q)
+            y0 = jnp.where(mask, y0, 0.0)
+            mse0 = btb + q @ y0
+
+            if cfg.engine == "fast":
+                y, mse_final, it = y0, mse0, jnp.asarray(0, jnp.int32)
+                ihb_live = st.ihb_live
+            else:
+                # (INF) guard: if the warm start leaves the l1 ball, stop
+                # using IHB from now on (paper §4.4.3, second approach).
+                feasible = jnp.sum(jnp.abs(y0)) <= (cfg.solver.tau - 1.0)
+                use_warm = st.ihb_live & feasible if cfg.ihb else jnp.asarray(False)
+                ihb_live = st.ihb_live & (feasible | jnp.asarray(not cfg.ihb))
+                warm = jnp.where(use_warm, y0, 0.0)
+                res = solver(st.ihb.AtA, q, btb, one, mask, psi, cfg.solver, warm)
+                y, mse_final, it = res.y, res.f, res.iters
+
+            accept = (mse_final <= psi) & valid[a]
+
+            if cfg.wihb:
+                # re-solve accepted generators sparsely from a cold start
+                def resolve():
+                    res = solve_bpcg(st.ihb.AtA, q, btb, one, mask, psi, cfg.solver, None)
+                    ok = res.f <= psi
+                    return jnp.where(ok, res.y, y), jnp.where(ok, res.f, mse_final), res.iters
+
+                y, mse_final, extra = jax.lax.cond(
+                    accept, resolve, lambda: (y, mse_final, jnp.asarray(0, jnp.int32))
+                )
+                it = it + extra
+
+            # On reject: append column to O (slot = ell), update Gram/inverse.
+            do_append = (~accept) & valid[a]
+
+            def appended(st_in: _LoopState):
+                new_ihb = ihb_mod.append_column(st_in.ihb, q, btb, st_in.ell)
+                return st_in._replace(
+                    ihb=new_ihb,
+                    ell=st_in.ell + 1,
+                    slots=st_in.slots.at[a].set(st_in.ell),
+                )
+
+            st = jax.lax.cond(do_append, appended, lambda s: s, st)
+            st = st._replace(
+                ihb_live=ihb_live,
+                accepted=st.accepted.at[a].set(accept),
+                coeffs=st.coeffs.at[a].set(jnp.where(accept, y, 0.0)),
+                mses=st.mses.at[a].set(mse_final),
+                iters=st.iters.at[a].set(it),
+            )
+            return st
+
+        st0 = _LoopState(
+            ihb=state,
+            ell=ell0,
+            ihb_live=jnp.asarray(True),
+            accepted=jnp.zeros((K,), bool),
+            slots=jnp.full((K,), Lcap, jnp.int32),
+            coeffs=jnp.zeros((K, Lcap), dtype),
+            mses=jnp.zeros((K,), dtype),
+            iters=jnp.zeros((K,), jnp.int32),
+        )
+        st = jax.lax.fori_loop(0, K, body, st0)
+
+        # ---- write appended columns into A -----------------------------
+        appended = (~st.accepted) & valid & (st.slots < Lcap)
+        A = _append_columns(A, B, st.slots, appended)
+        return A, st
+
+    return degree_step
+
+
+def _grow(arr: np.ndarray, axis: int, new_size: int) -> np.ndarray:
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, new_size - arr.shape[axis])
+    return np.pad(arr, pad)
+
+
+def fit(
+    X,
+    config: OAVIConfig = OAVIConfig(),
+    _degree_step_factory=None,
+) -> OAVIModel:
+    """Run OAVI on ``X`` (m, n) in [0,1]^n.  Returns the fitted model."""
+    t_start = time.perf_counter()
+    dtype = config.jax_dtype()
+    X = np.asarray(X)
+    m, n = X.shape
+
+    perm = None
+    if config.ordering in ("pearson", "reverse_pearson"):
+        perm = pearson_order(X, reverse=(config.ordering == "reverse_pearson"))
+        X = X[:, perm]
+
+    Xd = jnp.asarray(X, dtype)
+    book = terms_mod.TermBook(n=n)
+    generators: List[Generator] = []
+
+    Lcap = int(config.cap_terms)
+    A = jnp.zeros((m, Lcap), dtype).at[:, 0].set(1.0)
+    # normalized Gram convention: AtA[0,0] = ||1||^2 / m = 1
+    state = ihb_mod.init_state(Lcap, jnp.asarray(1.0, dtype), dtype)
+    ell = 1
+
+    factory = _degree_step_factory or (lambda: _make_degree_step(config))
+    degree_step = jax.jit(factory())
+
+    stats = {
+        "border_sizes": [],
+        "solver_iters": [],
+        "degrees": [],
+        "time_total": 0.0,
+        "m": m,
+        "n": n,
+    }
+
+    d = 0
+    while True:
+        d += 1
+        if d > config.max_degree:
+            stats["termination"] = f"max_degree={config.max_degree}"
+            break
+        border = book.border(d)
+        if not border:
+            stats["termination"] = "empty_border"
+            break
+        K = len(border)
+        stats["border_sizes"].append(K)
+        stats["degrees"].append(d)
+
+        # capacity management (regrowth triggers one re-jit per growth)
+        while ell + K > Lcap:
+            Lcap *= 2
+            A = jnp.asarray(_grow(np.asarray(A), 1, Lcap))
+            AtA = _grow(np.asarray(state.AtA), 0, Lcap)
+            AtA = _grow(AtA, 1, Lcap)
+            N = np.asarray(state.N)
+            Nn = np.eye(Lcap, dtype=N.dtype)
+            Nn[: N.shape[0], : N.shape[1]] = N
+            for i in range(N.shape[0], Lcap):
+                Nn[i, i] = 1.0
+            R = np.asarray(state.R)
+            Rn = np.eye(Lcap, dtype=R.dtype)
+            Rn[: R.shape[0], : R.shape[1]] = R
+            state = ihb_mod.IHBState(
+                AtA=jnp.asarray(AtA), N=jnp.asarray(Nn), R=jnp.asarray(Rn)
+            )
+
+        Kcap = max(config.cap_border, 1 << (K - 1).bit_length())
+        parents = np.zeros((Kcap,), np.int32)
+        vars_ = np.zeros((Kcap,), np.int32)
+        valid = np.zeros((Kcap,), bool)
+        for i, (term, parent, j) in enumerate(border):
+            parents[i] = book.index[parent]
+            vars_[i] = j
+            valid[i] = True
+
+        A, st = degree_step(
+            A,
+            Xd,
+            state,
+            jnp.asarray(ell, jnp.int32),
+            jnp.asarray(parents),
+            jnp.asarray(vars_),
+            jnp.asarray(valid),
+            float(m),
+        )
+        state = st.ihb
+        accepted = np.asarray(st.accepted)
+        mses = np.asarray(st.mses)
+        coeffs = np.asarray(st.coeffs)
+        iters = np.asarray(st.iters)
+        stats["solver_iters"].append(int(iters[:K].sum()))
+
+        for i, (term, parent, j) in enumerate(border):
+            if accepted[i]:
+                ell_at = len(book)
+                generators.append(
+                    Generator(
+                        term=term,
+                        parent_idx=book.index[parent],
+                        var=j,
+                        coeffs=coeffs[i, :ell_at].copy(),
+                        mse=float(mses[i]),
+                    )
+                )
+            else:
+                book.append(term, parent, j)
+        ell = len(book)
+
+    stats["time_total"] = time.perf_counter() - t_start
+    stats["num_G"] = len(generators)
+    stats["num_O"] = len(book)
+    stats["G_plus_O"] = len(generators) + len(book)
+    stats["thm43_bound"] = terms_mod.theorem_4_3_size_bound(config.psi, n)
+    return OAVIModel(
+        n=n,
+        psi=config.psi,
+        book=book,
+        generators=generators,
+        feature_perm=perm,
+        stats=stats,
+        dtype=config.dtype,
+    )

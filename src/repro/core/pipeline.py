@@ -1,0 +1,127 @@
+"""Algorithm 2: per-class generator construction -> (FT) -> linear SVM.
+
+The paper's end-to-end classification pipeline.  ``method`` selects the
+generator constructor: OAVI variants (CGAVI-IHB, AGDAVI-IHB, BPCGAVI,
+BPCGAVI-WIHB, PCGAVI, fast), ABM, or VCA.  The feature-transformed data is
+classified by the l1 squared-hinge :class:`~repro.core.svm.LinearSVM`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import abm as abm_mod
+from . import oavi as oavi_mod
+from . import vca as vca_mod
+from .oracles import OracleConfig
+from .svm import LinearSVM, LinearSVMConfig
+from .transform import MinMaxScaler, feature_transform
+
+# Named algorithm variants from the paper (Section 6.1).
+VARIANTS = {
+    # name: (engine, solver, ihb, wihb)
+    "cgavi-ihb": ("oracle", "cg", True, False),
+    "agdavi-ihb": ("oracle", "agd", True, False),
+    "bpcgavi": ("oracle", "bpcg", False, False),
+    "bpcgavi-wihb": ("oracle", "bpcg", True, True),
+    "pcgavi": ("oracle", "pcg", False, False),
+    "cgavi": ("oracle", "cg", False, False),
+    "agdavi": ("oracle", "agd", False, False),
+    "fast": ("fast", "bpcg", True, False),  # beyond-paper closed-form engine
+}
+
+
+def oavi_config_for(variant: str, psi: float, **kw) -> oavi_mod.OAVIConfig:
+    engine, solver, ihb, wihb = VARIANTS[variant]
+    solver_cfg = OracleConfig(name=solver, **kw.pop("solver_kw", {}))
+    return oavi_mod.OAVIConfig(
+        psi=psi, engine=engine, solver=solver_cfg, ihb=ihb, wihb=wihb, **kw
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    method: str = "fast"  # VARIANTS key | 'abm' | 'vca'
+    psi: float = 0.005
+    svm: LinearSVMConfig = dataclasses.field(default_factory=LinearSVMConfig)
+    oavi_kw: Optional[Dict] = None
+
+
+class VanishingIdealClassifier:
+    """Fit per-class generators, transform, train a linear SVM (Algorithm 2)."""
+
+    def __init__(self, config: PipelineConfig = PipelineConfig()):
+        self.config = config
+        self.scaler = MinMaxScaler()
+        self.models: List = []
+        self.svm = LinearSVM(config.svm)
+        self.classes_: Optional[np.ndarray] = None
+        self.stats: Dict = {}
+
+    def _fit_generator_model(self, Xc: np.ndarray):
+        cfg = self.config
+        kw = dict(cfg.oavi_kw or {})
+        if cfg.method == "abm":
+            return abm_mod.fit(Xc, abm_mod.ABMConfig(psi=cfg.psi, **kw))
+        if cfg.method == "vca":
+            return vca_mod.fit(Xc, vca_mod.VCAConfig(psi=cfg.psi, **kw))
+        return oavi_mod.fit(Xc, oavi_config_for(cfg.method, cfg.psi, **kw))
+
+    def fit(self, X, y) -> "VanishingIdealClassifier":
+        t0 = time.perf_counter()
+        X = self.scaler.fit_transform(X)
+        y = np.asarray(y)
+        self.classes_ = np.unique(y)
+        self.models = []
+        gen_stats = []
+        for c in self.classes_:
+            model = self._fit_generator_model(X[y == c])
+            self.models.append(model)
+            gen_stats.append(model.stats)
+        t_gen = time.perf_counter() - t0
+        Xt = feature_transform(self.models, X)
+        self.svm.fit(Xt, y)
+        self.stats = {
+            "time_generators": t_gen,
+            "time_total": time.perf_counter() - t0,
+            "num_features": Xt.shape[1],
+            "G_plus_O": sum(s.get("G_plus_O", 0) for s in gen_stats),
+            "per_class": gen_stats,
+            "svm": self.svm.stats,
+        }
+        return self
+
+    def transform(self, X) -> np.ndarray:
+        return feature_transform(self.models, self.scaler.transform(X))
+
+    def predict(self, X) -> np.ndarray:
+        return self.svm.predict(self.transform(X))
+
+    def score(self, X, y) -> float:
+        return float(np.mean(self.predict(X) == np.asarray(y)))
+
+    # -- reporting helpers (Table 3 quantities) ---------------------------
+
+    def average_degree(self) -> float:
+        degs = []
+        for model in self.models:
+            gens = getattr(model, "generators", None)
+            if gens is not None:
+                degs += [sum(g.term) for g in gens]
+        return float(np.mean(degs)) if degs else 0.0
+
+    def sparsity(self) -> float:
+        """(SPAR): fraction of zero non-leading coefficients over all G."""
+        z = e = 0
+        for model in self.models:
+            gens = getattr(model, "generators", None)
+            if gens is None:
+                continue
+            for g in gens:
+                e += len(g.coeffs)
+                z += int(np.sum(g.coeffs == 0.0))
+        return z / e if e else 0.0

@@ -1,0 +1,49 @@
+"""Feature transformation (FT) and scaling utilities (Section 3.2).
+
+``x -> (|g_1(x)|, ..., |g_|G|(x)|)`` over the union of per-class generator
+sets, plus the min-max scaler the paper applies to bring data into [0,1]^n.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MinMaxScaler:
+    """Min-max feature scaling into [0, 1]^n (fit on train, reused on test)."""
+
+    lo: Optional[np.ndarray] = None
+    scale: Optional[np.ndarray] = None
+
+    def fit(self, X) -> "MinMaxScaler":
+        X = np.asarray(X, dtype=np.float64)
+        self.lo = X.min(axis=0)
+        rng = X.max(axis=0) - self.lo
+        self.scale = np.where(rng > 0, 1.0 / np.maximum(rng, 1e-300), 0.0)
+        return self
+
+    def transform(self, X) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        return np.clip((X - self.lo) * self.scale, 0.0, 1.0)
+
+    def fit_transform(self, X) -> np.ndarray:
+        return self.fit(X).transform(X)
+
+
+def feature_transform(models: Sequence, Z) -> np.ndarray:
+    """(FT): stack ``|g(Z)|`` over the generators of every per-class model.
+
+    ``models`` — one fitted generator model per class (OAVIModel / VCAModel /
+    anything exposing ``evaluate_G``).  Returns (q, sum_i |G^i|).
+    """
+    cols: List[np.ndarray] = []
+    for model in models:
+        G = np.asarray(model.evaluate_G(Z))
+        cols.append(np.abs(G))
+    if not cols:
+        return np.zeros((np.asarray(Z).shape[0], 0))
+    return np.concatenate(cols, axis=1)

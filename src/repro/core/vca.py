@@ -1,0 +1,211 @@
+"""VCA — Vanishing Component Analysis (Livni et al. 2013).
+
+Monomial-agnostic baseline used by the paper (Section 6).  Degree-wise, VCA
+maintains a set of *non-vanishing* polynomials ``F`` (normalized so their
+evaluation vectors have unit norm) and a set of *vanishing components* ``V``
+(the generators).  At degree ``d`` the candidates are all pairwise products
+``f * g`` with ``f in F_{d-1}`` and ``g in F_1``; candidates are projected
+onto the orthogonal complement of ``span F`` and an SVD of the residual
+matrix splits the span into vanishing directions (singular value small) and
+new non-vanishing directions.
+
+Acceptance uses the paper's MSE convention (``sigma^2 / m <= psi``) so VCA,
+ABM and OAVI are compared on the same vanishing scale.  As the paper
+discusses (Section 1.2), VCA is susceptible to the spurious-vanishing
+problem and may construct many more generators than monomial-aware methods —
+we reproduce that behaviour, not fix it.
+
+Evaluation on unseen data replays the construction tree: each degree-d
+polynomial is a linear combination of (candidate products of lower-degree
+polynomials) minus its projection onto previously constructed ``F`` polys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class VCAConfig:
+    psi: float = 0.005
+    max_degree: int = 10
+    dtype: str = "float32"
+    # cap on |F_d| per degree to bound candidate blow-up (paper's VCA has no
+    # cap; ours triggers only on pathological data and is recorded in stats)
+    max_components_per_degree: int = 512
+
+
+@dataclasses.dataclass
+class _DegreeBlock:
+    """Replayable construction of one degree's polynomials.
+
+    candidates = F_{d-1}(Z)[:, pair_f] * F_1(Z)[:, pair_g]       (q, K)
+    raw        = candidates - F_all(Z) @ proj                    (q, K)
+    polys      = raw @ combo                                     (q, r)
+    of which the first ``num_vanishing`` columns are generators (V_d) and the
+    rest are the normalized non-vanishing components appended to F_d.
+    """
+
+    pair_f: np.ndarray  # (K,) indices into F_{d-1}
+    pair_g: np.ndarray  # (K,) indices into F_1
+    proj: np.ndarray  # (|F_all_before|, K) projection coefficients
+    combo: np.ndarray  # (K, r) SVD combination
+    num_vanishing: int
+    num_nonvanishing: int
+
+
+@dataclasses.dataclass
+class VCAModel:
+    n: int
+    psi: float
+    deg1_coeffs: np.ndarray  # (n+1, r1) polys over [1, x_1..x_n]
+    deg1_num_vanishing: int
+    blocks: List[_DegreeBlock]
+    stats: Dict
+    sqrt_m: float = 1.0  # train-time normalization of the constant component
+    dtype: str = "float32"
+
+    @property
+    def num_G(self) -> int:
+        k = self.deg1_num_vanishing
+        return k + sum(b.num_vanishing for b in self.blocks)
+
+    @property
+    def num_F(self) -> int:
+        k = (self.deg1_coeffs.shape[1] - self.deg1_num_vanishing) + 1  # + const
+        return k + sum(b.num_nonvanishing for b in self.blocks)
+
+    def evaluate_G(self, Z) -> np.ndarray:
+        """Evaluation matrix of all vanishing components over Z: (q, |G|)."""
+        Z = np.asarray(Z, dtype=self.dtype)
+        q = Z.shape[0]
+        ones = np.ones((q, 1), dtype=self.dtype)
+        basis1 = np.concatenate([ones, Z], axis=1)  # (q, n+1)
+        deg1 = basis1 @ self.deg1_coeffs  # (q, r1)
+        kv = self.deg1_num_vanishing
+        V_cols = [deg1[:, :kv]]
+        F_prev = deg1[:, kv:]  # F_1 (normalized on train)
+        F1 = F_prev
+        # constant component is the *function* x -> 1/sqrt(m_train)
+        F_all = np.concatenate([ones / self.sqrt_m, F_prev], axis=1)
+        for b in self.blocks:
+            cand = F_prev[:, b.pair_f] * F1[:, b.pair_g]  # (q, K)
+            raw = cand - F_all[:, : b.proj.shape[0]] @ b.proj
+            polys = raw @ b.combo
+            V_cols.append(polys[:, : b.num_vanishing])
+            F_new = polys[:, b.num_vanishing :]
+            F_all = np.concatenate([F_all, F_new], axis=1)
+            F_prev = F_new
+        return np.concatenate(V_cols, axis=1)
+
+    def mse(self, Z) -> np.ndarray:
+        G = self.evaluate_G(Z)
+        return (G * G).mean(axis=0)
+
+
+def fit(X, config: VCAConfig = VCAConfig()) -> VCAModel:
+    t0 = time.perf_counter()
+    dt = np.dtype(config.dtype)
+    X = np.asarray(X, dtype=dt)
+    m, n = X.shape
+    psi = config.psi
+    sqrt_m = np.sqrt(float(m))
+
+    stats: Dict = {"border_sizes": [], "degrees": [], "m": m, "n": n}
+
+    # ---- degree 1 --------------------------------------------------------
+    ones = np.ones((m, 1), dtype=dt)
+    basis1 = np.concatenate([ones, X], axis=1)  # (m, n+1)
+    const = ones / sqrt_m  # normalized constant component
+    # project x_i onto the constant, SVD the residual
+    resid = X - const @ (const.T @ X)  # mean-centered columns
+    # combo over [1, x]: subtracting the projection = -1 * mean per column
+    proj_coeff = (const.T @ X) / sqrt_m  # (1, n) over the *raw* ones column
+    U, S, Vt = np.linalg.svd(resid, full_matrices=False)
+    # polynomials: resid @ Vt.T, with singular values S; MSE = S^2 / m
+    mses = (S * S) / m
+    vanishing = mses <= psi
+    # order: vanishing first (generators), then non-vanishing (normalized)
+    idx_v = np.where(vanishing)[0]
+    idx_f = np.where(~vanishing)[0]
+    combos = []
+    for j in idx_v:
+        combos.append(Vt[j])  # keep raw scale (LTC-analogue: unit combo)
+    for j in idx_f:
+        combos.append(Vt[j] / max(S[j], 1e-30))  # normalize eval to unit norm
+    C = np.stack(combos, axis=1) if combos else np.zeros((n, 0), dt)
+    # deg1 polys over [1, x]: x @ C - ones @ (proj_coeff @ C)
+    deg1_coeffs = np.concatenate([-(proj_coeff @ C), C], axis=0).astype(dt)
+    deg1 = basis1 @ deg1_coeffs
+    kv1 = len(idx_v)
+    F1 = deg1[:, kv1:]
+    F_all = np.concatenate([const, F1], axis=1)
+    F_prev = F1
+    stats["degrees"].append(1)
+    stats["border_sizes"].append(n)
+
+    blocks: List[_DegreeBlock] = []
+    capped = False
+    for d in range(2, config.max_degree + 1):
+        if F_prev.shape[1] == 0 or F1.shape[1] == 0:
+            stats["termination"] = "no_nonvanishing_left"
+            break
+        kf, kg = F_prev.shape[1], F1.shape[1]
+        pair_f = np.repeat(np.arange(kf), kg).astype(np.int32)
+        pair_g = np.tile(np.arange(kg), kf).astype(np.int32)
+        cand = F_prev[:, pair_f] * F1[:, pair_g]  # (m, K)
+        proj = F_all.T @ cand  # (|F_all|, K)
+        raw = cand - F_all @ proj
+        U, S, Vt = np.linalg.svd(raw, full_matrices=False)
+        mses = (S * S) / m
+        vanishing = mses <= psi
+        idx_v = np.where(vanishing)[0]
+        idx_f = np.where(~vanishing)[0]
+        if len(idx_f) > config.max_components_per_degree:
+            idx_f = idx_f[: config.max_components_per_degree]
+            capped = True
+        combos = [Vt[j] for j in idx_v]
+        combos += [Vt[j] / max(S[j], 1e-30) for j in idx_f]
+        combo = np.stack(combos, axis=1) if combos else np.zeros((len(pair_f), 0), dt)
+        blocks.append(
+            _DegreeBlock(
+                pair_f=pair_f,
+                pair_g=pair_g,
+                proj=proj.astype(dt),
+                combo=combo.astype(dt),
+                num_vanishing=len(idx_v),
+                num_nonvanishing=len(idx_f),
+            )
+        )
+        stats["degrees"].append(d)
+        stats["border_sizes"].append(len(pair_f))
+        polys = raw @ combo
+        F_new = polys[:, len(idx_v) :]
+        F_all = np.concatenate([F_all, F_new], axis=1)
+        F_prev = F_new
+        if F_new.shape[1] == 0:
+            stats["termination"] = "no_nonvanishing_left"
+            break
+    else:
+        stats["termination"] = "max_degree"
+
+    stats["time_total"] = time.perf_counter() - t0
+    stats["capped"] = capped
+    model = VCAModel(
+        n=n,
+        psi=psi,
+        deg1_coeffs=deg1_coeffs,
+        deg1_num_vanishing=kv1,
+        blocks=blocks,
+        stats=stats,
+        sqrt_m=float(sqrt_m),
+        dtype=config.dtype,
+    )
+    stats["num_G"] = model.num_G
+    stats["num_O"] = model.num_F  # F plays the role of O for size comparisons
+    stats["G_plus_O"] = model.num_G + model.num_F
+    return model

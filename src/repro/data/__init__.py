@@ -1,0 +1,7 @@
+"""Data substrate: synthetic datasets (paper App. C + UCI shapes) and the
+deterministic sharded LM token pipeline."""
+
+from . import lm, synthetic
+from .synthetic import appendix_c, random_cube, train_test_split, uci_like
+
+__all__ = ["lm", "synthetic", "appendix_c", "random_cube", "train_test_split", "uci_like"]

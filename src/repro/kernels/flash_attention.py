@@ -1,0 +1,121 @@
+"""Blocked (flash-style) causal GQA attention — Pallas TPU kernel.
+
+The LM substrate's dominant compute hot spot.  Online-softmax attention,
+streaming K/V through VMEM in ``bk``-row blocks while Q stays resident in
+``bq``-row blocks:
+
+    grid = (batch * q_heads, S_q / bq, S_k / bk)       (kv innermost)
+
+GQA is folded into the K/V index maps: query head ``h`` reads kv head
+``h // group`` — no materialized broadcast of K/V (saves HBM bandwidth,
+which is the roofline term this kernel attacks; see EXPERIMENTS.md §Perf).
+
+Causal masking skips whole (iq, ik) blocks above the diagonal via
+``pl.when`` — for long sequences that halves the FLOPs, and the mask inside
+the diagonal block is an iota comparison on the VPU.
+
+VMEM per step: bq*d + 2*bk*d + bq*bk + 2*(bq,) accumulators; defaults
+(bq=bk=512, d=128) ≈ 1.8 MB.  MXU shapes (bq x d) @ (d x bk) are 128-aligned.
+
+``ops.py`` provides the jit wrapper with padding + reference fallback;
+``ref.py`` holds the pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, scale, causal, bq, bk):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: block row iq attends to block cols ik with ik*bk <= iq*bq + bq-1
+    run = (ik * bk <= iq * bq + (bq - 1)) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]  # (bq, d)
+        k = k_ref[0]  # (bk, d)
+        v = v_ref[0]  # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]  # (bq, 1)
+        l_prev = l_ref[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "q_heads_per_kv", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (BH_q, S_q, d)   flattened batch*q_heads
+    k: jax.Array,  # (BH_kv, S_k, d)  flattened batch*kv_heads
+    v: jax.Array,  # (BH_kv, S_k, d)
+    *,
+    causal: bool = True,
+    q_heads_per_kv: int = 1,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    BHq, Sq, d = q.shape
+    BHkv, Sk, _ = k.shape
+    dv = v.shape[-1]  # v head dim may differ (e.g. MLA nope+rope keys)
+    assert BHq == BHkv * q_heads_per_kv
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    scale = 1.0 / (d**0.5)
+    grid = (BHq, Sq // bq, Sk // bk)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kv_map = lambda h, iq, ik: (h // q_heads_per_kv, ik, 0)  # noqa: E731
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, dv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHq, Sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,113 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op pads its inputs to kernel-aligned shapes, dispatches to the Pallas
+kernel on TPU (or ``interpret=True`` when requested), and falls back to the
+pure-jnp reference on backends without Pallas-TPU support (this container's
+CPU, and the dry-run's 512 fake CPU devices).  The fallback is semantically
+identical — ``ref.py`` *is* the spec — so models can be built against these
+ops unconditionally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .flash_attention import flash_attention as _flash_kernel
+from .gram_update import gram_update as _gram_kernel
+from .ihb_update import ihb_update as _ihb_kernel
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # backend not initialized yet
+        return False
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def selection_matrices(parents, vars_, L: int, n: int, dtype=jnp.float32):
+    """One-hot (L, K) / (n, K) selectors for gather-as-matmul (gram kernel)."""
+    parents = jnp.asarray(parents)
+    vars_ = jnp.asarray(vars_)
+    K = parents.shape[0]
+    Psel = (parents[None, :] == jnp.arange(L)[:, None]).astype(dtype)
+    Vsel = (vars_[None, :] == jnp.arange(n)[:, None]).astype(dtype)
+    return Psel, Vsel
+
+
+def gram_update(A, X, parents, vars_, *, bm: int = 512, use_pallas=None, interpret=False):
+    """``(QL, C) = (A^T B, B^T B)`` with ``B = A[:, parents] * X[:, vars]``.
+
+    Un-normalized (caller divides by m).  Pads m to a multiple of ``bm``.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    L, n = A.shape[1], X.shape[1]
+    Psel, Vsel = selection_matrices(parents, vars_, L, n, A.dtype)
+    if not (use_pallas or interpret):
+        return ref.gram_update_ref(A, X, Psel, Vsel)
+    m = A.shape[0]
+    m_pad = _round_up(m, bm)
+    if m_pad != m:
+        A = jnp.pad(A, ((0, m_pad - m), (0, 0)))
+        X = jnp.pad(X, ((0, m_pad - m), (0, 0)))
+    return _gram_kernel(A, X, Psel, Vsel, bm=min(bm, m_pad), interpret=interpret)
+
+
+def ihb_update(N, q, btb, ell, *, use_pallas=None, interpret=False):
+    """Theorem 4.9 padded block-inverse update."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not (use_pallas or interpret):
+        return ref.ihb_update_ref(N, q, btb, ell)
+    return _ihb_kernel(
+        N, q, jnp.asarray(btb, N.dtype), jnp.asarray(ell, jnp.int32), interpret=interpret
+    )
+
+
+def multihead_attention(
+    q, k, v, *, causal=True, bq=512, bk=512, use_pallas=None, interpret=False
+):
+    """Flash attention over (B, Hq, S, d) / (B, Hkv, S, d) tensors (GQA-aware).
+
+    Pads S to block multiples.  Padding keys are masked out by causality for
+    causal=True; for non-causal we mask via an explicit -inf pad on scores in
+    the reference path and rely on zero-padded V rows contributing ~0 weight
+    otherwise, so non-causal padded shapes route to the reference.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    B, Hq, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # may differ from d (MLA)
+    group = Hq // Hkv
+    qf = q.reshape(B * Hq, Sq, d)
+    kf = k.reshape(B * Hkv, Sk, d)
+    vf = v.reshape(B * Hkv, Sk, dv)
+    pad_q = _round_up(Sq, bq) - Sq
+    pad_k = _round_up(Sk, bk) - Sk
+    padded = pad_q > 0 or pad_k > 0
+    if not (use_pallas or interpret) or (padded and not causal):
+        out = ref.attention_ref(qf, kf, vf, causal=causal, q_heads_per_kv=group)
+        return out.reshape(B, Hq, Sq, dv)
+    if padded:
+        # causal: padded (future) keys are masked by the causal test; padded
+        # query rows produce garbage rows that are sliced off below.
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    out = _flash_kernel(
+        qf, kf, vf,
+        causal=causal, q_heads_per_kv=group,
+        bq=min(bq, qf.shape[1]), bk=min(bk, kf.shape[1]),
+        interpret=interpret,
+    )
+    return out[:, :Sq].reshape(B, Hq, Sq, dv)

@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These define the semantics; the kernels must match them (tests sweep shapes
+and dtypes and assert allclose against these, with the kernels run in
+interpret=True mode on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_update_ref(A, X, Psel, Vsel):
+    """(QL, C): candidate columns via one-hot selection, then both Grams."""
+    B = (A @ Psel) * (X @ Vsel)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    return Af.T @ Bf, Bf.T @ Bf
+
+
+def border_columns_ref(A, X, parents, vars_):
+    """Candidate columns by direct gather (semantic ground truth)."""
+    return jnp.take(A, parents, axis=1) * jnp.take(X, vars_, axis=1)
+
+
+def ihb_update_ref(N, q, btb, ell):
+    """Theorem 4.9 block-inverse update on the padded inverse (identity in
+    the inactive block) — mirrors :func:`repro.core.ihb.append_column`."""
+    dtype = N.dtype
+    L = N.shape[0]
+    onehot = (jnp.arange(L) == ell).astype(dtype)
+    u = N @ q
+    s = jnp.maximum(btb - q @ u, jnp.asarray(1e-30, dtype))
+    P = N + jnp.outer(u, u) / s
+    keep = 1.0 - onehot
+    P = P * keep[:, None] * keep[None, :]
+    n2 = -u / s
+    return (
+        P
+        + jnp.outer(onehot, n2)
+        + jnp.outer(n2, onehot)
+        + (1.0 / s) * jnp.outer(onehot, onehot)
+    )
+
+
+def attention_ref(q, k, v, *, causal=True, q_heads_per_kv=1):
+    """Dense softmax attention oracle.
+
+    q: (BHq, Sq, d); k, v: (BHkv, Sk, d) with BHq = BHkv * q_heads_per_kv.
+    """
+    BHq, Sq, d = q.shape
+    BHkv, Sk, _ = k.shape
+    if q_heads_per_kv != 1:
+        k = jnp.repeat(k, q_heads_per_kv, axis=0)
+        v = jnp.repeat(v, q_heads_per_kv, axis=0)
+    scale = 1.0 / (d**0.5)
+    s = jnp.einsum("hqd,hkd->hqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p.astype(v.dtype), v).astype(q.dtype)

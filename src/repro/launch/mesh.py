@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 v5e chips.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis extends
+data parallelism across the inter-pod DCI links.
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} "
+            "(dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import)"
+        )
+    dev_array = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / examples on CPU)."""
+    devices = jax.devices()
+    n = len(devices)
+    assert n % model_parallel == 0
+    shape = (n // model_parallel, model_parallel)
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, ("data", "model"))

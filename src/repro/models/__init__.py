@@ -1,0 +1,9 @@
+"""LM substrate: config-driven architectures (dense/MoE/MLA/SSM/hybrid)."""
+
+from . import attention, layers, mla, model, moe, ssm
+from .model import ModelConfig, init_params, abstract_params, forward, loss_fn
+
+__all__ = [
+    "attention", "layers", "mla", "model", "moe", "ssm",
+    "ModelConfig", "init_params", "abstract_params", "forward", "loss_fn",
+]

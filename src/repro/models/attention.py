@@ -1,0 +1,223 @@
+"""GQA attention block (qk-norm / QKV-bias variants) + KV-cache decode.
+
+Forward uses :func:`repro.kernels.ops.multihead_attention` (Pallas flash
+kernel on TPU, jnp reference elsewhere).  Decode is a dense one-token
+attention over the cache (no kernel needed — it is bandwidth-bound on the
+cache read, which the roofline analysis attributes to the memory term).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import hints, layers
+
+
+class AttnDims(NamedTuple):
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qk_norm: bool
+    qkv_bias: bool
+    rope_theta: float
+    causal: bool
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # M-RoPE if set
+    impl: str = "reference"  # "reference" | "chunked" (flash-in-XLA)
+    chunk: int = 1024
+    unroll: bool = False  # cost-extraction: unroll the kv-chunk scan
+
+
+def init_params(key, d_model: int, dims: AttnDims, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    H, Hkv, dh = dims.n_heads, dims.n_kv_heads, dims.d_head
+    p = {
+        "norm_scale": layers.init_rms_scale(d_model, dtype),
+        "wq": layers.dense_init(ks[0], (d_model, H * dh), dtype),
+        "wk": layers.dense_init(ks[1], (d_model, Hkv * dh), dtype),
+        "wv": layers.dense_init(ks[2], (d_model, Hkv * dh), dtype),
+        "wo": layers.dense_init(ks[3], (H * dh, d_model), dtype),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((Hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((Hkv * dh,), dtype)
+    if dims.qk_norm:
+        p["q_norm"] = layers.init_rms_scale(dh, dtype)
+        p["k_norm"] = layers.init_rms_scale(dh, dtype)
+    return p
+
+
+def _project_qkv(p, x, dims: AttnDims, positions):
+    B, S, _ = x.shape
+    H, Hkv, dh = dims.n_heads, dims.n_kv_heads, dims.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if dims.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Hkv, dh)
+    v = v.reshape(B, S, Hkv, dh)
+    # keep the batch axes pinned through the head split; shard heads over
+    # `model` only where divisible (GSPMD otherwise replicates — see hints.py)
+    ba = hints.batch_axes()
+    if ba:
+        bspec = ba if len(ba) > 1 else ba[0]
+        q = hints.constrain(q, bspec, None, ("model?", H), None)
+        k = hints.constrain(k, bspec, None, ("model?", Hkv), None)
+        v = hints.constrain(v, bspec, None, ("model?", Hkv), None)
+    if dims.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    if dims.mrope_sections is not None:
+        if positions.ndim == 2:
+            positions = layers.text_mrope_positions(positions)
+        q = layers.apply_mrope(q, positions, dims.rope_theta, dims.mrope_sections)
+        k = layers.apply_mrope(k, positions, dims.rope_theta, dims.mrope_sections)
+    else:
+        q = layers.apply_rope(q, positions, dims.rope_theta)
+        k = layers.apply_rope(k, positions, dims.rope_theta)
+    return q, k, v
+
+
+def _chunked_attention(q, k, v, dims: AttnDims):
+    """Online-softmax attention, streaming KV in ``dims.chunk`` blocks via
+    lax.scan — the flash-attention schedule expressed in XLA (no Pallas), so
+    the (Sq, Sk) score matrix never materializes beyond (Sq, chunk).  Used
+    on CPU/dry-run paths; on TPU the Pallas kernel supersedes it.
+
+    q: (B, H, Sq, dh); k, v: (B, Hkv, Sk, dh*).  §Perf Cell C iteration.
+    """
+    B, H, Sq, dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = H // Hkv
+    ck = min(dims.chunk, Sk)
+    nck = Sk // ck if Sk % ck == 0 else -1
+    if nck <= 0:  # ragged: fall back to the reference path
+        return ops.multihead_attention(q, k, v, causal=dims.causal)
+    scale = 1.0 / (dh**0.5)
+    kc = k.reshape(B, Hkv, nck, ck, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, nck, ck, dv).transpose(2, 0, 1, 3, 4)
+    q_pos = jax.lax.broadcasted_iota(jnp.int32, (Sq, ck), 0)
+
+    def step(carry, inp):
+        m_run, s_run, acc = carry
+        k_c, v_c, cidx = inp  # (B, Hkv, ck, dh), ..., scalar
+        if group != 1:
+            k_c = jnp.repeat(k_c, group, axis=1)
+            v_c = jnp.repeat(v_c, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k_c).astype(jnp.float32) * scale
+        if dims.causal:
+            kv_pos = cidx * ck + jax.lax.broadcasted_iota(jnp.int32, (Sq, ck), 1)
+            s = jnp.where((q_pos >= kv_pos)[None, None], s, -1e30)
+        m_c = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_run, m_c)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        s_run = s_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(v_c.dtype), v_c
+        ).astype(jnp.float32)
+        return (m_new, s_run, acc), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    s0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, dv), jnp.float32)
+    (m_f, s_f, acc), _ = jax.lax.scan(
+        step, (m0, s0, a0), (kc, vc, jnp.arange(nck, dtype=jnp.int32)),
+        unroll=nck if dims.unroll else 1,
+    )
+    return (acc / jnp.maximum(s_f, 1e-30)[..., None]).astype(q.dtype)
+
+
+def _attend(q, k, v, dims: AttnDims):
+    """(B, H, S, dh) attention dispatch: Pallas kernel on TPU, chunked
+    flash-in-XLA when configured, dense reference otherwise."""
+    if dims.impl == "chunked":
+        return _chunked_attention(q, k, v, dims)
+    return ops.multihead_attention(q, k, v, causal=dims.causal)
+
+
+def forward(p: Dict, x: jax.Array, dims: AttnDims, positions: jax.Array) -> jax.Array:
+    """Full-sequence attention (training / prefill).  x: (B, S, d_model)."""
+    B, S, _ = x.shape
+    h = layers.rms_norm(x, p["norm_scale"])
+    q, k, v = _project_qkv(p, h, dims, positions)
+    out = _attend(
+        q.transpose(0, 2, 1, 3),  # (B, H, S, dh)
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        dims,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, dims.n_heads * dims.d_head)
+    out = hints.constrain_batch(out)
+    return x + out @ p["wo"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, Hkv, dh)
+    v: jax.Array  # (B, S_max, Hkv, dh)
+
+
+def init_cache(B: int, S_max: int, dims: AttnDims, dtype) -> KVCache:
+    shape = (B, S_max, dims.n_kv_heads, dims.d_head)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def prefill(
+    p: Dict, x: jax.Array, dims: AttnDims, positions: jax.Array, S_max: int
+) -> Tuple[jax.Array, KVCache]:
+    """Forward + cache fill (cache padded to S_max)."""
+    B, S, _ = x.shape
+    h = layers.rms_norm(x, p["norm_scale"])
+    q, k, v = _project_qkv(p, h, dims, positions)
+    out = _attend(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        dims,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, dims.n_heads * dims.d_head)
+    pad = S_max - S
+    cache = KVCache(
+        k=jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        v=jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+    )
+    return x + out @ p["wo"], cache
+
+
+def decode_step(
+    p: Dict,
+    x: jax.Array,  # (B, 1, d_model) — the new token
+    cache: KVCache,
+    dims: AttnDims,
+    pos: jax.Array,  # (B,) int32 — index of the new token
+) -> Tuple[jax.Array, KVCache]:
+    """One-token decode against a (B, S_max) KV cache.
+
+    The cache is treated as fully populated up to ``pos`` (entries beyond are
+    masked).  Bandwidth-bound: reads the whole cache once.
+    """
+    B, _, _ = x.shape
+    H, Hkv, dh = dims.n_heads, dims.n_kv_heads, dims.d_head
+    h = layers.rms_norm(x, p["norm_scale"])
+    q, k_new, v_new = _project_qkv(p, h, dims, pos[:, None])
+    # write the new kv at position pos
+    S_max = cache.k.shape[1]
+    onehot = (jnp.arange(S_max)[None, :] == pos[:, None]).astype(cache.k.dtype)
+    k = cache.k + onehot[:, :, None, None] * k_new
+    v = cache.v + onehot[:, :, None, None] * v_new
+    # dense one-token attention over the cache (GQA broadcast via reshape)
+    group = H // Hkv
+    qg = q.reshape(B, 1, Hkv, group, dh)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, k).astype(jnp.float32)
+    scores = scores / (dh**0.5)
+    valid = (jnp.arange(S_max)[None, :] <= pos[:, None])[:, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v)
+    out = out.reshape(B, 1, H * dh)
+    return x + out @ p["wo"], KVCache(k=k, v=v)

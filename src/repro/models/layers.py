@@ -1,0 +1,116 @@
+"""Shared neural blocks for the LM substrate: norms, RoPE / M-RoPE, MLPs,
+embeddings.  Pure functions over explicit param pytrees (no flax) so that
+pjit sharding rules can be assigned by parameter path (see model.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype) * scale
+
+
+def init_rms_scale(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head_rot: int, theta: float, dtype=jnp.float32) -> jax.Array:
+    """Inverse frequencies for the rotary half-dim (d_head_rot // 2)."""
+    half = d_head_rot // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)).astype(
+        dtype
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE.  x: (B, S, H, dh) — rotates the full head dim.
+    positions: (B, S) int32."""
+    B, S, H, dh = x.shape
+    inv = rope_freqs(dh, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv[None, None, :]  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: Tuple[int, int, int]
+) -> jax.Array:
+    """M-RoPE (Qwen2-VL): the rotary half-dim is partitioned into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, H, dh); positions: (B, S, 3) int32; sections sums to dh // 2.
+    """
+    B, S, H, dh = x.shape
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(dh, theta)  # (half,)
+    # section id per frequency slot
+    sec_pos = []
+    start = 0
+    for i, sec in enumerate(sections):
+        sec_pos.append(jnp.broadcast_to(positions[..., i : i + 1], (B, S, sec)))
+        start += sec
+    pos = jnp.concatenate(sec_pos, axis=-1)  # (B, S, half)
+    ang = pos.astype(jnp.float32) * inv[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Pure-text M-RoPE: t = h = w = sequence index.  (B, S) -> (B, S, 3)."""
+    return jnp.broadcast_to(positions[..., None], (*positions.shape, 3))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_in: jax.Array, w_out: jax.Array) -> jax.Array:
+    """Fused-gate SwiGLU: w_in packs [gate | up] along the output dim."""
+    h = x @ w_in
+    gate, up = jnp.split(h, 2, axis=-1)
+    return (jax.nn.silu(gate) * up) @ w_out
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, w_out: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w_in, approximate=True) @ w_out
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jax.Array:
+    """Truncated-normal fan-in init (std = 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = 1.0 / (fan_in**0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

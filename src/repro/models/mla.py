@@ -1,0 +1,164 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — compressed KV cache.
+
+The KV path is factored through a low-rank latent ``c_kv`` of dimension
+``kv_lora_rank`` plus a shared rotary key ``k_pe`` of dimension
+``rope_head_dim``; only ``(c_kv, k_pe)`` are cached, shrinking the decode
+cache by ~an order of magnitude versus GQA.  Implemented in the explicit
+(non-absorbed) form for training/prefill; decode uses the same up-projection
+per step.  (The absorbed-matmul decode optimization is a recorded
+hillclimbing candidate in EXPERIMENTS.md §Perf.)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import layers
+
+
+class MLADims(NamedTuple):
+    n_heads: int
+    kv_lora_rank: int  # r
+    qk_nope_dim: int  # per-head non-rotary q/k dim
+    qk_rope_dim: int  # shared rotary dim
+    v_head_dim: int
+    rope_theta: float
+    causal: bool = True
+    impl: str = "reference"  # "reference" | "chunked" (shares attention.py's)
+    chunk: int = 1024
+    unroll: bool = False
+
+
+def init_params(key, d_model: int, dims: MLADims, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    H = dims.n_heads
+    r = dims.kv_lora_rank
+    return {
+        "norm_scale": layers.init_rms_scale(d_model, dtype),
+        # queries: full-rank projection to per-head (nope + rope) dims
+        "wq": layers.dense_init(ks[0], (d_model, H * (dims.qk_nope_dim + dims.qk_rope_dim)), dtype),
+        # KV down-projection to the latent + shared rotary key
+        "w_dkv": layers.dense_init(ks[1], (d_model, r + dims.qk_rope_dim), dtype),
+        "kv_norm": layers.init_rms_scale(r, dtype),
+        # up-projections from the latent
+        "w_uk": layers.dense_init(ks[2], (r, H * dims.qk_nope_dim), dtype),
+        "w_uv": layers.dense_init(ks[3], (r, H * dims.v_head_dim), dtype),
+        "wo": layers.dense_init(ks[4], (H * dims.v_head_dim, d_model), dtype),
+    }
+
+
+def _latent(p, h, dims: MLADims, positions):
+    """Compressed KV latent and rotary key from the (normed) input."""
+    B, S, _ = h.shape
+    dkv = h @ p["w_dkv"]
+    c_kv, k_pe = jnp.split(dkv, [dims.kv_lora_rank], axis=-1)
+    c_kv = layers.rms_norm(c_kv, p["kv_norm"])
+    k_pe = layers.apply_rope(
+        k_pe.reshape(B, S, 1, dims.qk_rope_dim), positions, dims.rope_theta
+    ).reshape(B, S, dims.qk_rope_dim)
+    return c_kv, k_pe
+
+
+def _q_heads(p, h, dims: MLADims, positions):
+    B, S, _ = h.shape
+    H = dims.n_heads
+    q = (h @ p["wq"]).reshape(B, S, H, dims.qk_nope_dim + dims.qk_rope_dim)
+    q_nope, q_pe = jnp.split(q, [dims.qk_nope_dim], axis=-1)
+    q_pe = layers.apply_rope(q_pe, positions, dims.rope_theta)
+    return q_nope, q_pe
+
+
+def _expand_kv(p, c_kv, dims: MLADims):
+    B, S, _ = c_kv.shape
+    H = dims.n_heads
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, dims.qk_nope_dim)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, dims.v_head_dim)
+    return k_nope, v
+
+
+def forward(p: Dict, x: jax.Array, dims: MLADims, positions: jax.Array) -> jax.Array:
+    B, S, _ = x.shape
+    H = dims.n_heads
+    h = layers.rms_norm(x, p["norm_scale"])
+    c_kv, k_pe = _latent(p, h, dims, positions)
+    q_nope, q_pe = _q_heads(p, h, dims, positions)
+    k_nope, v = _expand_kv(p, c_kv, dims)
+    # concat (nope | rope) per head; rope part of K is shared across heads
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, dims.qk_rope_dim))],
+        axis=-1,
+    )
+    if dims.impl == "chunked":
+        from .attention import _chunked_attention
+
+        out = _chunked_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), dims,
+        )
+    else:
+        out = ops.multihead_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=dims.causal,
+        )
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * dims.v_head_dim)
+    return x + out @ p["wo"]
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array  # (B, S_max, r)
+    k_pe: jax.Array  # (B, S_max, qk_rope_dim)
+
+
+def init_cache(B: int, S_max: int, dims: MLADims, dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((B, S_max, dims.kv_lora_rank), dtype),
+        k_pe=jnp.zeros((B, S_max, dims.qk_rope_dim), dtype),
+    )
+
+
+def prefill(
+    p: Dict, x: jax.Array, dims: MLADims, positions: jax.Array, S_max: int
+) -> Tuple[jax.Array, MLACache]:
+    B, S, _ = x.shape
+    out = forward(p, x, dims, positions)
+    h = layers.rms_norm(x, p["norm_scale"])
+    c_kv, k_pe = _latent(p, h, dims, positions)
+    pad = S_max - S
+    cache = MLACache(
+        c_kv=jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        k_pe=jnp.pad(k_pe, ((0, 0), (0, pad), (0, 0))),
+    )
+    return out, cache
+
+
+def decode_step(
+    p: Dict, x: jax.Array, cache: MLACache, dims: MLADims, pos: jax.Array
+) -> Tuple[jax.Array, MLACache]:
+    """One-token decode: only the latent (r + rope) row is appended; K/V are
+    re-expanded from the latent cache (explicit form)."""
+    B = x.shape[0]
+    H = dims.n_heads
+    S_max = cache.c_kv.shape[1]
+    h = layers.rms_norm(x, p["norm_scale"])
+    c_new, kpe_new = _latent(p, h, dims, pos[:, None])
+    onehot = (jnp.arange(S_max)[None, :] == pos[:, None]).astype(cache.c_kv.dtype)
+    c_kv = cache.c_kv + onehot[:, :, None] * c_new
+    k_pe = cache.k_pe + onehot[:, :, None] * kpe_new
+    q_nope, q_pe = _q_heads(p, h, dims, pos[:, None])
+    k_nope, v = _expand_kv(p, c_kv, dims)  # (B, S_max, H, ...)
+    scores = (
+        jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+        + jnp.einsum("bqhd,bsd->bhqs", q_pe, k_pe)
+    ).astype(jnp.float32)
+    scores = scores / ((dims.qk_nope_dim + dims.qk_rope_dim) ** 0.5)
+    valid = (jnp.arange(S_max)[None, :] <= pos[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
+    out = out.reshape(B, 1, H * dims.v_head_dim)
+    return x + out @ p["wo"], MLACache(c_kv=c_kv, k_pe=k_pe)

@@ -1,0 +1,214 @@
+"""Mixture-of-Experts FFN: top-k router + sort-based capacity dispatch.
+
+TPU/pjit adaptation: instead of per-expert ragged batching (GPU style), the
+dispatch is expressed as dense, statically-shaped ops that GSPMD shards
+cleanly — tokens stay sharded over the ``data`` axes, the expert buffer
+``(E, C, d)`` and expert weights ``(E, d, f)`` shard over ``model`` (expert
+parallelism); the token->buffer scatter and buffer->token gather become the
+all-to-alls of the EP pattern.
+
+Dispatch algorithm (per call, static shapes):
+  1. router logits -> softmax -> top-k (gates, expert ids)
+  2. flatten (token, choice) pairs; stable-sort by expert id
+  3. position-within-expert via cumsum; drop pairs beyond capacity C
+  4. scatter kept tokens into the (E*C, d) buffer (one-hot-free `.at[].add`)
+  5. grouped GEMM: (E, C, d) x (E, d, f) einsums (MXU-aligned)
+  6. gather back per (token, choice), weight by gate, sum over choices
+
+Capacity: C = ceil(T * k / E * capacity_factor), statically derived from the
+global token count.  Dropped tokens (beyond capacity) contribute zero — the
+standard capacity-dropout semantics.
+
+An auxiliary load-balance loss (Switch-style) is returned for training.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hints, layers
+
+
+class MoEDims(NamedTuple):
+    num_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden dim
+    n_shared: int = 0  # shared (always-on) experts
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+    # dispatch = "global": one global (E, C, d) buffer (paper-faithful naive
+    # EP; GSPMD all-reduces the whole buffer across data shards).
+    # dispatch = "rowwise": per-data-shard local dispatch with per-shard
+    # capacity — the scatter/gather stay device-local and the only cross-
+    # device traffic is the expert einsum's (data x model) alignment.
+    # Beyond-paper optimization, EXPERIMENTS.md §Perf Cell A.
+    dispatch: str = "global"
+
+
+def init_params(key, d_model: int, dims: MoEDims, dtype) -> Dict:
+    ks = jax.random.split(key, 5)
+    E, f = dims.num_experts, dims.d_ff
+    p = {
+        "norm_scale": layers.init_rms_scale(d_model, dtype),
+        "router": layers.dense_init(ks[0], (d_model, E), dtype),
+        # fused swiglu in-proj: [gate | up]
+        "w_in": layers.dense_init(ks[1], (E, d_model, 2 * f), dtype, in_axis=1),
+        "w_out": layers.dense_init(ks[2], (E, f, d_model), dtype, in_axis=1),
+    }
+    if dims.n_shared > 0:
+        fs = dims.n_shared * f
+        p["sw_in"] = layers.dense_init(ks[3], (d_model, 2 * fs), dtype)
+        p["sw_out"] = layers.dense_init(ks[4], (fs, d_model), dtype)
+    return p
+
+
+def capacity(T: int, dims: MoEDims) -> int:
+    c = math.ceil(T * dims.top_k / dims.num_experts * dims.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)  # pad to an 8-multiple for layout
+
+
+def forward(p: Dict, x: jax.Array, dims: MoEDims) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d).  Returns (residual output, aux load-balance loss)."""
+    if dims.dispatch == "rowwise":
+        return _forward_rowwise(p, x, dims)
+    B, S, d = x.shape
+    T = B * S
+    E, k = dims.num_experts, dims.top_k
+    C = capacity(T, dims)
+    h = layers.rms_norm(x, p["norm_scale"]).reshape(T, d)
+
+    # 1. route
+    logits = (h @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss: mean prob per expert x mean routed fraction per expert
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (T * k)
+    aux = dims.aux_coef * E * jnp.sum(me * ce)
+
+    # 2-3. sort (token, choice) pairs by expert; positions within expert
+    flat_e = eidx.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)  # (T*k,)
+    sorted_e = flat_e[order]
+    tok_of = order // k  # original token per sorted pair
+    # position within expert = rank - first rank of that expert (contiguous
+    # after the stable sort)
+    rank = jnp.arange(T * k, dtype=jnp.int32)
+    seg_start = jnp.full((E,), T * k, jnp.int32).at[sorted_e].min(rank)
+    pos_in_e = rank - seg_start[sorted_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)  # E*C = drop bin
+
+    # 4. scatter into the expert buffer
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[slot].add(h[tok_of])
+    buf = buf[: E * C].reshape(E, C, d)
+
+    # 5. grouped GEMM (swiglu)
+    mid = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    gate_h, up_h = jnp.split(mid, 2, axis=-1)
+    act = jax.nn.silu(gate_h) * up_h
+    y = jnp.einsum("ecf,efd->ecd", act, p["w_out"]).reshape(E * C, d)
+
+    # 6. combine: gather per sorted pair, weight, sum over the k choices
+    pair_out = jnp.where(keep[:, None], y[jnp.minimum(slot, E * C - 1)], 0.0)
+    pair_gate = gates.reshape(T * k)[order]
+    out = jnp.zeros((T, d), x.dtype).at[tok_of].add(
+        pair_out * pair_gate[:, None].astype(x.dtype)
+    )
+
+    if dims.n_shared > 0:
+        out = out + layers.swiglu(h, p["sw_in"], p["sw_out"])
+    return x + out.reshape(B, S, d), aux
+
+
+def _forward_rowwise(p: Dict, x: jax.Array, dims: MoEDims) -> Tuple[jax.Array, jax.Array]:
+    """Row-local dispatch (EXPERIMENTS.md §Perf Cell A).
+
+    Tokens are viewed as (rows, T/rows) with ``rows`` = the data-parallel
+    degree; routing/sort/scatter/combine are vmapped over rows so every
+    memory-movement op stays *within* a data shard, with a per-row capacity
+    C_row = C/rows (per-device capacity — the semantics real MoE systems
+    enforce).  The expert einsum carries (rows->data, E->model) sharding on
+    both operands, so GSPMD needs no buffer-wide all-reduce — the measured
+    collective bytes drop by ~the DP degree (see §Perf).
+
+    On a single device (rows=1) this is numerically identical to the global
+    dispatch with the same capacity.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = dims.num_experts, dims.top_k
+    sizes = hints.axis_sizes()
+    rows = 1
+    for a in ("pod", "data"):
+        rows *= sizes.get(a, 1)
+    if T % rows != 0:
+        rows = 1
+    Tr = T // rows
+    Cr = capacity(Tr, dims)
+    ba = hints.batch_axes()
+    bspec = (ba if len(ba) > 1 else ba[0]) if ba else None
+
+    h = layers.rms_norm(x, p["norm_scale"]).reshape(rows, Tr, d)
+    h = hints.constrain(h, bspec, None, None)
+
+    logits = (h @ p["router"]).astype(jnp.float32)  # (rows, Tr, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)  # (rows, Tr, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (T * k)
+    aux = dims.aux_coef * E * jnp.sum(me * ce)
+
+    def one_row(h_r, gates_r, eidx_r):
+        flat_e = eidx_r.reshape(Tr * k)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        tok_of = order // k
+        rank = jnp.arange(Tr * k, dtype=jnp.int32)
+        seg_start = jnp.full((E,), Tr * k, jnp.int32).at[sorted_e].min(rank)
+        pos_in_e = rank - seg_start[sorted_e]
+        keep = pos_in_e < Cr
+        slot = jnp.where(keep, sorted_e * Cr + pos_in_e, E * Cr)
+        buf = jnp.zeros((E * Cr + 1, d), h_r.dtype).at[slot].add(h_r[tok_of])
+        return buf[: E * Cr].reshape(E, Cr, d), (order, tok_of, keep, slot)
+
+    buf, meta = jax.vmap(one_row)(h, gates, eidx)  # (rows, E, Cr, d)
+    buf = hints.constrain(buf, bspec, "model", None, None)
+    # ZeRO-3-style use-site weight gathering: expert weights live FSDP-
+    # sharded (E over model, d over data) at rest, but are all-gathered
+    # over the data axis here so the expert GEMMs contract locally —
+    # gathering ~GBs of weights beats all-reducing ~100 GB of activation
+    # partial sums (measured in §Perf Cell A iter3).  The backward pass
+    # reduce-scatters the weight grads automatically (GSPMD transpose).
+    w_in = hints.constrain(p["w_in"], "model", None, None)
+    w_out = hints.constrain(p["w_out"], "model", None, None)
+    mid = jnp.einsum("recd,edf->recf", buf, w_in)
+    gate_h, up_h = jnp.split(mid, 2, axis=-1)
+    act = jax.nn.silu(gate_h) * up_h
+    y = jnp.einsum("recf,efd->recd", act, w_out)
+    y = hints.constrain(y, bspec, "model", None, None)
+
+    def combine_row(y_r, gates_r, meta_r):
+        order, tok_of, keep, slot = meta_r
+        flat = y_r.reshape(E * Cr, d)
+        pair_out = jnp.where(keep[:, None], flat[jnp.minimum(slot, E * Cr - 1)], 0.0)
+        pair_gate = gates_r.reshape(Tr * k)[order]
+        return jnp.zeros((Tr, d), y_r.dtype).at[tok_of].add(
+            pair_out * pair_gate[:, None].astype(y_r.dtype)
+        )
+
+    out = jax.vmap(combine_row)(y, gates, meta)  # (rows, Tr, d)
+    out = hints.constrain(out, bspec, None, None)
+    out = out.reshape(T, d)
+    if dims.n_shared > 0:
+        out = out + layers.swiglu(h.reshape(T, d), p["sw_in"], p["sw_out"])
+    return x + out.reshape(B, S, d), aux

@@ -1,0 +1,5 @@
+"""Optimizer substrate: AdamW (fp32 / 8-bit states), schedules, compression."""
+
+from .adamw import AdamW, AdamWState, warmup_cosine, compress_grads, decompress_grads, init_residuals
+
+__all__ = ["AdamW", "AdamWState", "warmup_cosine", "compress_grads", "decompress_grads", "init_residuals"]

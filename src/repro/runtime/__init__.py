@@ -1,0 +1,4 @@
+"""Runtime substrate: fault tolerance (checkpoint-restart, stragglers, elasticity)."""
+from . import fault_tolerance
+from .fault_tolerance import TrainLoop, TrainLoopConfig, StepFailure, reshard_tree
+__all__ = ["fault_tolerance", "TrainLoop", "TrainLoopConfig", "StepFailure", "reshard_tree"]

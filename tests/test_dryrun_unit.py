@@ -1,0 +1,104 @@
+"""Unit tests for dry-run machinery that don't need 512 devices:
+HLO collective parsing, batch/cache spec divisibility, shape registry."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch.hlo_analysis import _shape_bytes, collective_bytes
+from repro.models import model as M
+
+
+HLO_SAMPLE = """
+HloModule test
+  %x = bf16[256,4096]{1,0} parameter(0)
+  %ar = bf16[256,4096]{1,0} all-reduce(bf16[256,4096]{1,0} %x), replica_groups={}
+  %ag = f32[512,128]{1,0} all-gather(f32[256,128]{1,0} %y), dimensions={0}
+  %rs = f32[128]{0} reduce-scatter(f32[512]{0} %z), dimensions={0}
+  %a2a = (s32[64]{0}, s32[64]{0}) all-to-all(s32[64]{0} %a, s32[64]{0} %b)
+  %cp-start = bf16[32,32]{1,0} collective-permute-start(bf16[32,32]{1,0} %c)
+  %cp-done = bf16[32,32]{1,0} collective-permute-done(bf16[32,32]{1,0} %cp-start)
+  %not-a-collective = f32[1024]{0} add(f32[1024]{0} %p, f32[1024]{0} %q)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[256,4096]") == 256 * 4096 * 2
+    assert _shape_bytes("f32[128]") == 512
+    assert _shape_bytes("(s32[64], s32[64])") == 512
+    assert _shape_bytes("pred[]") == 1  # scalar: one element
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 256 * 4096 * 2
+    assert out["all-gather"] == 512 * 128 * 4
+    assert out["reduce-scatter"] == 128 * 4
+    assert out["all-to-all"] == 64 * 4 * 2
+    assert out["collective-permute"] == 32 * 32 * 2  # -start counted, -done not
+    assert out["total"] == sum(
+        out[k] for k in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+
+
+@pytest.fixture()
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_batch_specs_divisibility(mesh11):
+    cfg = configs.get_config("qwen3-8b")
+    # batch 1 cannot shard over data=1? (divides trivially) — use a fake mesh
+    # shape check via the helper directly
+    assert M._batch_spec_entry(mesh11, 4) is not None
+    specs = M.batch_specs(cfg, mesh11, "decode", 1)
+    assert set(specs) == {"token", "pos"}
+
+
+def test_cell_registry_counts():
+    cells = configs.all_cells()
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    assert len(runnable) == 31  # 9 documented skips
+    skips = {(c[0], c[1]) for c in cells if not c[2]}
+    assert ("hubert-xlarge", "decode_32k") in skips
+    assert ("xlstm-1.3b", "long_500k") not in skips
+    assert ("jamba-1.5-large-398b", "long_500k") not in skips
+
+
+def test_input_specs_shapes():
+    cfg = configs.get_config("qwen3-8b")
+    sp = configs.input_specs(cfg, configs.SHAPES["train_4k"])
+    assert sp["tokens"].shape == (256, 4097)
+    sp = configs.input_specs(cfg, configs.SHAPES["decode_32k"])
+    assert sp["token"].shape == (128,)
+    enc = configs.get_config("hubert-xlarge")
+    sp = configs.input_specs(enc, configs.SHAPES["train_4k"])
+    assert sp["frames"].shape == (256, 4096, 1280)
+    assert sp["labels"].shape == (256, 4096)
+
+
+def test_abstract_cache_shapes():
+    cfg = configs.get_config("deepseek-v2-lite-16b")
+    cache = M.abstract_cache(cfg, B=4, S_max=128)
+    mla_leaf = cache["00_mla"]
+    assert mla_leaf.c_kv.shape == (cfg.n_periods, 4, 128, 512)
+    assert mla_leaf.k_pe.shape == (cfg.n_periods, 4, 128, 64)
+    jam = configs.get_config("jamba-1.5-large-398b")
+    cache = M.abstract_cache(jam, B=2, S_max=64)
+    # mamba state cache: conv window + (di, ds) state
+    key = [k for k in cache if "mamba" in k][0]
+    assert cache[key].h.shape == (jam.n_periods, 2, 16384, 16)
+
+
+def test_param_spec_rules_moe_expert_major():
+    cfg = configs.get_config("kimi-k2-1t-a32b")
+    ap = M.abstract_params(cfg)
+    specs = M.param_specs(cfg, ap)
+    moe_key = [k for k in specs["blocks"] if "moe" in k][0]
+    assert tuple(specs["blocks"][moe_key]["w_in"]) == (None, "model", "data", None)
+    attn_key = [k for k in specs["blocks"] if "attn" in k][0]
+    assert tuple(specs["blocks"][attn_key]["wq"]) == (None, "data", "model")
+    assert tuple(specs["final_norm"]) == ()

@@ -1,0 +1,148 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# gram_update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,L,n,K,bm", [
+    (256, 8, 4, 8, 128),
+    (512, 32, 8, 16, 256),
+    (1000, 16, 3, 32, 512),   # padded m
+    (128, 64, 16, 8, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_gram_update_shapes(m, L, n, K, bm, dtype):
+    rng = np.random.default_rng(m + L + K)
+    A = jnp.asarray(rng.uniform(0, 1, (m, L)), dtype)
+    X = jnp.asarray(rng.uniform(0, 1, (m, n)), dtype)
+    parents = jnp.asarray(rng.integers(0, L, K), jnp.int32)
+    vars_ = jnp.asarray(rng.integers(0, n, K), jnp.int32)
+    QL_k, C_k = ops.gram_update(A, X, parents, vars_, bm=bm, interpret=True)
+    Psel, Vsel = ops.selection_matrices(parents, vars_, L, n, dtype)
+    QL_r, C_r = ref.gram_update_ref(A, X, Psel, Vsel)
+    np.testing.assert_allclose(QL_k, QL_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(C_k, C_r, rtol=1e-5, atol=1e-5)
+
+
+def test_gram_matches_direct_gather():
+    """The one-hot-matmul formulation == direct gather semantics."""
+    rng = np.random.default_rng(0)
+    m, L, n, K = 300, 12, 5, 9
+    A = jnp.asarray(rng.uniform(0, 1, (m, L)), jnp.float32)
+    X = jnp.asarray(rng.uniform(0, 1, (m, n)), jnp.float32)
+    parents = jnp.asarray(rng.integers(0, L, K), jnp.int32)
+    vars_ = jnp.asarray(rng.integers(0, n, K), jnp.int32)
+    B = ref.border_columns_ref(A, X, parents, vars_)
+    QL, C = ops.gram_update(A, X, parents, vars_, bm=128, interpret=True)
+    np.testing.assert_allclose(QL, np.asarray(A.T @ B), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(C, np.asarray(B.T @ B), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_gram_property_symmetry_psd(seed):
+    rng = np.random.default_rng(seed)
+    m, L, n, K = 200, 8, 4, 8
+    A = jnp.asarray(rng.uniform(0, 1, (m, L)), jnp.float32)
+    X = jnp.asarray(rng.uniform(0, 1, (m, n)), jnp.float32)
+    parents = jnp.asarray(rng.integers(0, L, K), jnp.int32)
+    vars_ = jnp.asarray(rng.integers(0, n, K), jnp.int32)
+    _, C = ops.gram_update(A, X, parents, vars_, bm=128, interpret=True)
+    C = np.asarray(C)
+    np.testing.assert_allclose(C, C.T, atol=1e-5)  # symmetric
+    evals = np.linalg.eigvalsh(C)
+    assert evals.min() > -1e-3  # PSD up to fp noise
+
+
+# ---------------------------------------------------------------------------
+# ihb_update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("L,ell", [(8, 3), (16, 7), (32, 20), (64, 1)])
+def test_ihb_update_vs_ref(L, ell):
+    rng = np.random.default_rng(L * 31 + ell)
+    m = 200
+    Araw = rng.uniform(0, 1, (m, ell)).astype(np.float32)
+    G = Araw.T @ Araw / m + 1e-3 * np.eye(ell, dtype=np.float32)
+    N = np.eye(L, dtype=np.float32)
+    N[:ell, :ell] = np.linalg.inv(G)
+    b = rng.uniform(0, 1, m).astype(np.float32)
+    q = np.zeros(L, np.float32)
+    q[:ell] = Araw.T @ b / m
+    btb = np.float32(b @ b / m)
+    got = ops.ihb_update(jnp.asarray(N), jnp.asarray(q), btb, ell, interpret=True)
+    want = ref.ihb_update_ref(jnp.asarray(N), jnp.asarray(q), btb, ell)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,d,bq,bk", [
+    (1, 2, 2, 128, 32, 64, 64),
+    (2, 4, 2, 256, 32, 64, 64),     # GQA group 2
+    (2, 8, 1, 128, 16, 64, 32),     # MQA
+    (1, 2, 2, 192, 32, 64, 64),     # padded seq
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(B, Hq, Hkv, S, d, bq, bk, causal):
+    rng = np.random.default_rng(B * 100 + S)
+    q = jnp.asarray(rng.standard_normal((B, Hq, S, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, d)), jnp.float32)
+    got = ops.multihead_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)
+    want = ops.multihead_attention(q, k, v, causal=causal, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_mla_vdim():
+    """v head dim != qk head dim (MLA layout)."""
+    rng = np.random.default_rng(5)
+    B, H, S, d, dv = 1, 2, 128, 24, 16
+    q = jnp.asarray(rng.standard_normal((B, H, S, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, S, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, S, dv)), jnp.float32)
+    got = ops.multihead_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = ops.multihead_attention(q, k, v, causal=True, use_pallas=False)
+    assert got.shape == (B, H, S, dv)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(9)
+    B, H, S, d = 1, 2, 128, 32
+    q = jnp.asarray(rng.standard_normal((B, H, S, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, H, S, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, H, S, d)), jnp.bfloat16)
+    got = ops.multihead_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = ops.multihead_attention(q, k, v, causal=True, use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_flash_attention_causality():
+    """Changing future tokens must not change past outputs."""
+    rng = np.random.default_rng(11)
+    B, H, S, d = 1, 2, 128, 32
+    q = jnp.asarray(rng.standard_normal((B, H, S, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, S, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, S, d)), jnp.float32)
+    out1 = ops.multihead_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    k2 = k.at[:, :, 100:].set(1000.0)
+    v2 = v.at[:, :, 100:].set(-7.0)
+    out2 = ops.multihead_attention(q, k2, v2, causal=True, bq=64, bk=64, interpret=True)
+    np.testing.assert_allclose(out1[:, :, :100], out2[:, :, :100], rtol=1e-5, atol=1e-5)

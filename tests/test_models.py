@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency.
+
+Every assigned architecture: instantiate the reduced config, run one forward
+and one train step on CPU, assert output shapes and no NaNs (deliverable f).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.optim import AdamW
+
+ARCH_IDS = sorted(configs.ARCHS)
+
+
+def _batch_for(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "tokens":
+        return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)}
+    return {
+        "frames": jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_forward_shapes_and_finite(arch_id):
+    cfg = configs.get_reduced(arch_id)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch_for(cfg)
+    if cfg.frontend == "tokens":
+        inputs = {"tokens": batch["tokens"][:, :-1]}
+        B, S = inputs["tokens"].shape
+    else:
+        inputs = {"frames": batch["frames"]}
+        B, S = batch["frames"].shape[:2]
+    logits, aux = M.forward(params, inputs, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_train_step(arch_id):
+    cfg = configs.get_reduced(arch_id)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(peak_lr=1e-3, warmup_steps=1, total_steps=10)
+    opt_state = opt.init(params)
+    step = jax.jit(M.make_train_step(cfg, opt))
+    batch = _batch_for(cfg)
+    l0, params, opt_state = step(params, opt_state, batch)
+    l1, params, opt_state = step(params, opt_state, batch)
+    l2, _, _ = step(params, opt_state, batch)
+    assert np.isfinite(float(l0)) and np.isfinite(float(l2))
+    assert float(l2) < float(l0)  # optimizing the same batch must descend
+
+
+@pytest.mark.parametrize("arch_id", [a for a in ARCH_IDS
+                                     if configs.get_reduced(a).supports_decode])
+def test_arch_decode_matches_forward(arch_id):
+    """prefill(P) + decode(t) logits == forward(P+t) next-token logits."""
+    cfg = configs.get_reduced(arch_id)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 17)), jnp.int32)
+    lf, cache = M.prefill(params, {"tokens": toks[:, :16]}, cfg, S_max=18)
+    full16, _ = M.forward(params, {"tokens": toks[:, :16]}, cfg)
+    np.testing.assert_allclose(np.asarray(lf[:, 0]), np.asarray(full16[:, -1]),
+                               rtol=5e-3, atol=5e-3)
+    # attention/mla archs carry exact caches; ssm/hybrid prefill leaves a
+    # fresh state (documented in model.prefill), so only check decode runs
+    pos = jnp.full((2,), 16, jnp.int32)
+    ld, cache2 = M.decode_step(params, cache, toks[:, 16], pos, cfg)
+    assert ld.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(ld).all())
+    if all(b in ("attn", "mla", "mlp", "moe") for b in cfg.period):
+        full17, _ = M.forward(params, {"tokens": toks[:, :17]}, cfg)
+        np.testing.assert_allclose(np.asarray(ld[:, 0]), np.asarray(full17[:, -1]),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_ssm_decode_matches_forward_stepwise():
+    """For the recurrent families, decoding token-by-token from scratch must
+    match the chunked/parallel forward pass (state correctness)."""
+    cfg = configs.get_reduced("xlstm-1.3b")
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(2)
+    T = 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, T)), jnp.int32)
+    logits_par, _ = M.forward(params, {"tokens": toks}, cfg)
+    cache = M.init_cache(cfg, B=1, S_max=T)
+    outs = []
+    for t in range(T):
+        ld, cache = M.decode_step(params, cache, toks[:, t], jnp.asarray([t], jnp.int32), cfg)
+        outs.append(np.asarray(ld[:, 0]))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, np.asarray(logits_par), rtol=2e-2, atol=2e-2)
+
+
+def test_mamba_decode_matches_forward_stepwise():
+    from repro.models.ssm import MambaDims
+    cfg = M.ModelConfig(
+        name="mamba-test", family="ssm", n_periods=2, period=("mamba",),
+        d_model=32, vocab_size=64, dtype="float32", ssm_chunk=4,
+        mamba=MambaDims(d_inner=64, d_state=8), sub_quadratic=True,
+    )
+    params = M.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(3)
+    T = 8
+    toks = jnp.asarray(rng.integers(0, 64, (1, T)), jnp.int32)
+    logits_par, _ = M.forward(params, {"tokens": toks}, cfg)
+    cache = M.init_cache(cfg, B=1, S_max=T)
+    outs = []
+    for t in range(T):
+        ld, cache = M.decode_step(params, cache, toks[:, t], jnp.asarray([t], jnp.int32), cfg)
+        outs.append(np.asarray(ld[:, 0]))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, np.asarray(logits_par), rtol=2e-3, atol=2e-3)
+
+
+def test_cost_mode_preserves_loss_value():
+    """unroll_scan (cost-extraction mode) must not change train-path numerics
+    for non-slstm archs (slstm swaps in the FLOP-equivalent parallel form)."""
+    import dataclasses
+    cfg = configs.get_reduced("jamba-1.5-large-398b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch_for(cfg)
+    l_scan = float(M.loss_fn(params, batch, cfg))
+    l_unroll = float(M.loss_fn(params, batch, dataclasses.replace(cfg, unroll_scan=True)))
+    assert abs(l_scan - l_unroll) < 1e-4
+
+
+def test_param_specs_cover_tree_and_divide():
+    """Every param leaf gets a spec; sharded dims divide the mesh axes."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch_id in ARCH_IDS:
+        cfg = configs.get_config(arch_id)
+        ap = M.abstract_params(cfg)
+        specs = M.param_specs(cfg, ap, mesh)
+        flat_p = jax.tree.leaves(ap)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        assert len(flat_p) == len(flat_s)

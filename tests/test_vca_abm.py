@@ -1,0 +1,63 @@
+"""Baseline algorithms: ABM and VCA behaviour tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import abm, vca
+
+
+def test_abm_generators_monic_and_vanishing(planted_cube):
+    model = abm.fit(planted_cube, abm.ABMConfig(psi=0.005, cap_terms=64))
+    assert model.num_G > 0
+    # ABM acceptance is on the unit-norm polynomial (spurious-vanishing-prone
+    # per the paper) — monic MSE may exceed psi but must stay small
+    assert np.asarray(model.mse(planted_cube)).max() < 0.1
+
+
+def test_abm_finds_planted_relation(planted_cube):
+    model = abm.fit(planted_cube, abm.ABMConfig(psi=0.005, cap_terms=64))
+    leads = {g.term for g in model.generators}
+    # the relation x3 = x0*x1 should produce a degree-<=2 generator whose
+    # leading term involves x3 or x0*x1
+    assert any(t[3] > 0 or (t[0] and t[1]) for t in leads)
+
+
+def test_vca_train_eval_consistency(planted_cube):
+    model = vca.fit(planted_cube, vca.VCAConfig(psi=0.005))
+    # replaying the construction tree on the training data reproduces
+    # vanishing components
+    assert model.num_G > 0
+    assert model.mse(planted_cube).max() <= 0.005 * (1 + 1e-4)
+
+
+def test_vca_eval_new_points(planted_cube):
+    model = vca.fit(planted_cube, vca.VCAConfig(psi=0.005))
+    rng = np.random.default_rng(1)
+    Z = rng.uniform(0, 1, (200, 4))
+    Z[:, 3] = np.clip(Z[:, 0] * Z[:, 1], 0, 1)
+    G = model.evaluate_G(Z)
+    assert G.shape == (200, model.num_G)
+    assert np.isfinite(G).all()
+
+
+def test_vca_is_permutation_invariant(planted_cube):
+    """Monomial-agnostic methods are data-driven by construction (§1.2)."""
+    perm = np.array([2, 0, 3, 1])
+    a = vca.fit(planted_cube, vca.VCAConfig(psi=0.005))
+    b = vca.fit(planted_cube[:, perm], vca.VCAConfig(psi=0.005))
+    assert a.num_G == b.num_G
+    np.testing.assert_allclose(
+        np.sort(np.abs(a.evaluate_G(planted_cube)), axis=None),
+        np.sort(np.abs(b.evaluate_G(planted_cube[:, perm])), axis=None),
+        rtol=5e-2, atol=5e-3,
+    )
+
+
+def test_vca_spurious_vanishing_on_many_features():
+    """The paper's §6.2: VCA constructs many more components on
+    high-dimensional data (spam-like n) than monomial-aware methods."""
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (300, 12))
+    v = vca.fit(X, vca.VCAConfig(psi=0.005, max_degree=3))
+    a = abm.fit(X, abm.ABMConfig(psi=0.005, cap_terms=256, max_degree=3))
+    assert v.num_G >= a.num_G
