@@ -1,0 +1,27 @@
+# Canonical entry points for verification and benchmarks.
+#
+#   make test             tier-1 test suite (the CI / verify command)
+#   make test-api         just the unified-API tests (fast)
+#   make bench-transform  fused-vs-legacy transform benchmark (BENCH_*.json)
+#   make bench            full quick benchmark sweep
+#   make dev-deps         install dev-only deps (pytest, hypothesis)
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-api bench bench-transform dev-deps
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-api:
+	$(PYTHON) -m pytest -q tests/test_api.py
+
+bench-transform:
+	$(PYTHON) -m benchmarks.run --only transform_fused
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+dev-deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -17,7 +17,8 @@ from repro.data.synthetic import appendix_c, train_test_split, uci_like
 
 from .common import Reporter
 
-METHODS = ["cgavi-ihb", "agdavi-ihb", "bpcgavi-wihb", "abm", "vca"]
+# repro.api method specs (Table 3 rows)
+METHODS = ["oavi:cgavi-ihb", "oavi:agdavi-ihb", "oavi:bpcgavi-wihb", "abm", "vca"]
 
 
 def run(rep: Reporter, quick: bool = True):

@@ -8,9 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import oavi
-from repro.core.oavi import OAVIConfig
-from repro.core.oracles import OracleConfig
+from repro import api
 from repro.core.transform import MinMaxScaler
 from repro.data.synthetic import appendix_c, uci_like
 
@@ -37,13 +35,12 @@ def run(rep: Reporter, quick: bool = True):
                 continue
             times = {}
             iters = {}
-            for solver in ["pcg", "bpcg"]:
-                cfg = OAVIConfig(
-                    psi=psi, engine="oracle", ihb=False,
-                    solver=OracleConfig(name=solver, max_iter=2000), cap_terms=64,
-                )
-                model = oavi.fit(X, cfg)  # includes jit warmup on first size
-                t = timeit(lambda: oavi.fit(X, cfg))
+            for solver, spec in [("pcg", "oavi:pcgavi"), ("bpcg", "oavi:bpcgavi")]:
+                kw = dict(solver_kw={"max_iter": 2000}, cap_terms=64)
+                # includes jit warmup on first size
+                model = api.fit(X, method=spec, psi=psi, backend="local", **kw)
+                t = timeit(lambda: api.fit(X, method=spec, psi=psi,
+                                           backend="local", **kw))
                 times[solver] = t
                 iters[solver] = sum(model.stats["solver_iters"])
             rep.add("fig2_solvers", dataset=name, m=m,

@@ -1,0 +1,78 @@
+"""Fused batched feature transform vs. the legacy per-model loop.
+
+Fits one small OAVI model per class once, then transforms m in
+{1e4, 1e5, 1e6} rows with (a) the legacy per-model numpy loop
+(:func:`repro.core.transform.feature_transform`) and (b) the fused
+single-dispatch evaluation (:func:`repro.api.feature_transform`, one
+``evaluate_terms`` sweep + one matmul, ``batch_size``-chunked).  Emits the
+standard ``BENCH_transform.json`` artifact via
+:func:`benchmarks.common.write_bench_json`.
+
+    PYTHONPATH=src python -m benchmarks.run --only transform_fused
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro import api
+from repro.core.transform import MinMaxScaler, feature_transform as legacy_transform
+from repro.data.synthetic import appendix_c
+
+from .common import Reporter, timeit, write_bench_json
+
+BATCH_SIZE = 131_072
+
+
+def run(rep: Reporter, quick: bool = True):
+    sizes = [10_000, 100_000] if quick else [10_000, 100_000, 1_000_000]
+
+    # fit per-class models once on a modest training slice
+    Xtr, ytr = appendix_c(m=4000, seed=0)
+    scaler = MinMaxScaler(dtype="float32")
+    Xtr = scaler.fit_transform(Xtr)
+    models = [
+        api.fit(Xtr[ytr == c], method="oavi:fast", psi=0.005,
+                backend="local", cap_terms=64)
+        for c in np.unique(ytr)
+    ]
+    num_features = sum(m.num_G for m in models)
+
+    rows = []
+    for m in sizes:
+        Z, _ = appendix_c(m=m, seed=1)
+        Z = scaler.transform(Z)
+        # one full-size pass per path: warms the jit traces at the timed
+        # shape and provides the correctness comparison without extra runs
+        ref = legacy_transform(models, Z)
+        fused = api.feature_transform(models, Z, batch_size=BATCH_SIZE)
+        np.testing.assert_allclose(fused, ref, rtol=1e-4, atol=1e-5)
+        diff = float(np.abs(np.asarray(fused) - ref).max())
+
+        t_legacy = timeit(lambda: legacy_transform(models, Z), repeat=3)
+        t_fused = timeit(
+            lambda: api.feature_transform(models, Z, batch_size=BATCH_SIZE),
+            repeat=3,
+        )
+        row = {
+            "m": m,
+            "num_models": len(models),
+            "num_features": num_features,
+            "t_legacy_s": round(t_legacy, 4),
+            "t_fused_s": round(t_fused, 4),
+            "speedup": round(t_legacy / max(t_fused, 1e-9), 2),
+            "max_abs_diff": diff,
+        }
+        rows.append(row)
+        rep.add("transform_fused", **row)
+
+    write_bench_json(
+        "transform",
+        rows,
+        meta={
+            "batch_size": BATCH_SIZE,
+            "method": "oavi:fast",
+            "psi": 0.005,
+            "quick": quick,
+        },
+    )

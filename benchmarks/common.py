@@ -1,12 +1,13 @@
-"""Shared benchmark utilities: timing, CSV emission, dataset access."""
+"""Shared benchmark utilities: timing, CSV/JSON emission, dataset access."""
 
 from __future__ import annotations
 
 import csv
 import io
+import json
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 
 class Reporter:
@@ -35,6 +36,35 @@ class Reporter:
             w.writeheader()
             w.writerows(self.rows)
         print(f"wrote {path} ({len(self.rows)} rows)")
+
+
+def write_bench_json(
+    name: str,
+    rows: List[Dict],
+    *,
+    meta: Optional[Dict] = None,
+    out_dir: str = "results",
+) -> str:
+    """Emit the standard ``BENCH_<name>.json`` artifact.
+
+    Schema (``bench.v1``)::
+
+        {"bench": <name>, "schema": "bench.v1", "created_unix": <float>,
+         "meta": {...}, "rows": [{...}, ...]}
+    """
+    payload = {
+        "bench": name,
+        "schema": "bench.v1",
+        "created_unix": time.time(),
+        "meta": meta or {},
+        "rows": rows,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path} ({len(rows)} rows)")
+    return path
 
 
 def timeit(fn: Callable, *, repeat: int = 1) -> float:

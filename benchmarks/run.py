@@ -20,6 +20,7 @@ from . import (
     bench_performance,
     bench_scaling,
     bench_solvers,
+    bench_transform,
     roofline,
 )
 from .common import Reporter
@@ -32,6 +33,7 @@ BENCHES = {
     "table1_ordering": bench_ordering.run,
     "table3_performance": bench_performance.run,
     "ablation_psi": bench_ablation.run,
+    "transform_fused": bench_transform.run,
     "roofline": roofline.run,
 }
 

@@ -1,7 +1,9 @@
 """The paper's technique at scale: data-parallel OAVI via shard_map.
 
-Shards one million Appendix-C samples over 8 (fake, on CPU) devices and
-verifies the distributed fit matches the single-device reference — the
+Shards one million Appendix-C samples over 8 (fake, on CPU) devices through
+the unified estimator API — ``repro.api.fit(..., backend="sharded")`` routes
+to :mod:`repro.core.distributed` without the caller ever importing it — and
+verifies the distributed fit matches the single-device reference.  The
 collectives are two small psums per degree, independent of m (weak-scaling).
 
     PYTHONPATH=src python examples/distributed_oavi.py
@@ -17,8 +19,7 @@ import time  # noqa: E402
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import distributed, oavi  # noqa: E402
-from repro.core.oavi import OAVIConfig  # noqa: E402
+from repro import api  # noqa: E402
 from repro.core.transform import MinMaxScaler  # noqa: E402
 from repro.data.synthetic import appendix_c  # noqa: E402
 
@@ -26,19 +27,21 @@ from repro.data.synthetic import appendix_c  # noqa: E402
 def main():
     m = 1_000_000
     X, _ = appendix_c(m=m, seed=0)
-    X = MinMaxScaler().fit_transform(X)
-    cfg = OAVIConfig(psi=0.005, engine="fast", cap_terms=64)
+    X = MinMaxScaler(dtype="float32").fit_transform(X)
 
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     print(f"devices: {len(jax.devices())}, samples: {m}")
 
     t0 = time.perf_counter()
-    dist = distributed.fit(X, cfg, mesh=mesh)
+    dist = api.fit(X, method="oavi:fast", psi=0.005, backend="sharded",
+                   mesh=mesh, cap_terms=64)
     t_dist = time.perf_counter() - t0
-    print(f"distributed: |G|={dist.num_G} |O|={dist.num_O} in {t_dist:.2f}s")
+    print(f"distributed: |G|={dist.num_G} |O|={dist.num_O} in {t_dist:.2f}s "
+          f"(backend={dist.stats['api']['backend']})")
 
     t0 = time.perf_counter()
-    ref = oavi.fit(X[:100_000], cfg)  # reference on a 10% slice
+    ref = api.fit(X[:100_000], method="oavi:fast", psi=0.005, backend="local",
+                  cap_terms=64)  # reference on a 10% slice
     t_ref = time.perf_counter() - t0
     print(f"single-dev (100k slice): |G|={ref.num_G} |O|={ref.num_O} in {t_ref:.2f}s")
 

@@ -1,0 +1,568 @@
+"""Unified estimator API for vanishing-ideal generator construction.
+
+One entry point over every algorithm family in the repo:
+
+* **method registry** — algorithms register themselves with
+  :func:`register`; callers pick one with a spec string such as ``"oavi"``,
+  ``"oavi:bpcgavi-wihb"``, ``"abm"`` or ``"vca"`` (bare OAVI variant names
+  like ``"cgavi-ihb"`` are accepted for backward compatibility).
+  :func:`available_methods` lists every valid spec.
+* **backend dispatch** — :func:`fit` routes OAVI to
+  :mod:`repro.core.distributed` when a mesh is supplied (or, under
+  ``backend="auto"``, when multiple devices are visible and ``m`` is large
+  enough), so callers never import the distributed module directly.
+* **VanishingIdealModel protocol** — every fitted model exposes
+  ``evaluate_G`` / ``transform`` / ``to_state_dict`` / ``from_state_dict``;
+  :func:`save` / :func:`load` persist models through the atomic
+  :mod:`repro.checkpoint.store` manifest machinery, so a fitted model
+  survives restarts and can be shipped to a serving process.
+* **fused batched transform** — :func:`feature_transform` concatenates all
+  per-class term books and generator matrices into a *single* jitted
+  ``evaluate_terms`` call plus one matmul, with ``batch_size`` chunking so
+  million-row transforms stream through device memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
+
+# Canonical OAVI variant table (was ``pipeline.VARIANTS``; Section 6.1).
+# name: (engine, solver, ihb, wihb)
+OAVI_VARIANTS: Dict[str, Tuple[str, str, bool, bool]] = {
+    "cgavi-ihb": ("oracle", "cg", True, False),
+    "agdavi-ihb": ("oracle", "agd", True, False),
+    "bpcgavi": ("oracle", "bpcg", False, False),
+    "bpcgavi-wihb": ("oracle", "bpcg", True, True),
+    "pcgavi": ("oracle", "pcg", False, False),
+    "cgavi": ("oracle", "cg", False, False),
+    "agdavi": ("oracle", "agd", False, False),
+    "fast": ("fast", "bpcg", True, False),  # beyond-paper closed-form engine
+}
+
+# OAVI_VARIANTS must be defined before the core imports below:
+# ``repro.core.pipeline`` lazily imports this module for its deprecated
+# ``VARIANTS`` alias, which may happen while this module is mid-import.
+import jax
+import jax.numpy as jnp
+
+from .checkpoint import store as ckpt_store
+from .core import abm as abm_mod
+from .core import distributed as distributed_mod
+from .core import oavi as oavi_mod
+from .core import vca as vca_mod
+from .core.oavi import OAVIModel, evaluate_terms
+from .core.oracles import OracleConfig
+from .core.transform import feature_transform as _legacy_feature_transform
+from .core.vca import VCAModel
+
+# ``backend="auto"``: shard only when the sample count amortizes the psum +
+# shard_map overhead (the collectives are m-independent, the fixed cost isn't).
+AUTO_SHARD_MIN_M = 100_000
+
+
+# ---------------------------------------------------------------------------
+# VanishingIdealModel protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class VanishingIdealModel(Protocol):
+    """What every fitted generator model exposes (OAVIModel, VCAModel, ...)."""
+
+    n: int
+    psi: float
+    stats: Dict
+
+    def evaluate_G(self, Z) -> Any:
+        """Evaluation matrix of all generators over Z: (q, |G|)."""
+        ...
+
+    def transform(self, Z) -> np.ndarray:
+        """(FT) features for this model alone: ``|G(Z)|``."""
+        ...
+
+    def to_state_dict(self) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """(flat array tree, JSON-safe metadata) — see :func:`save`."""
+        ...
+
+    def save(self, path: str) -> str:
+        """Persist via :func:`repro.api.save`."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Method registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodEntry:
+    """A registered generator-construction algorithm."""
+
+    name: str
+    fit: Callable[..., VanishingIdealModel]
+    variants: Tuple[str, ...] = ()
+    default_variant: Optional[str] = None
+    supports_sharded: bool = False
+    description: str = ""
+
+    def spec(self, variant: Optional[str]) -> str:
+        return f"{self.name}:{variant}" if variant else self.name
+
+
+_REGISTRY: Dict[str, MethodEntry] = {}
+
+
+def register(
+    name: str,
+    *,
+    variants: Sequence[str] = (),
+    default_variant: Optional[str] = None,
+    supports_sharded: bool = False,
+    description: str = "",
+):
+    """Decorator: register ``fn(X, *, variant, psi, backend, mesh, data_axes,
+    config, **kw) -> VanishingIdealModel`` under ``name``."""
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"method {name!r} is already registered")
+        _REGISTRY[name] = MethodEntry(
+            name=name,
+            fit=fn,
+            variants=tuple(variants),
+            default_variant=default_variant,
+            supports_sharded=supports_sharded,
+            description=description,
+        )
+        return fn
+
+    return deco
+
+
+def available_methods() -> Tuple[str, ...]:
+    """Every valid ``method=`` spec, e.g. ``('abm', 'oavi', 'oavi:cgavi', ...)``."""
+    specs: List[str] = []
+    for name in sorted(_REGISTRY):
+        specs.append(name)
+        specs.extend(f"{name}:{v}" for v in _REGISTRY[name].variants)
+    return tuple(specs)
+
+
+def resolve(spec: str) -> Tuple[MethodEntry, Optional[str]]:
+    """``'oavi:cgavi-ihb'`` -> (oavi entry, 'cgavi-ihb').  Also accepts bare
+    method names (default variant) and bare OAVI variant names (legacy)."""
+    if not isinstance(spec, str):
+        raise TypeError(f"method spec must be a string, got {type(spec).__name__}")
+    if ":" in spec:
+        name, variant = spec.split(":", 1)
+        entry = _REGISTRY.get(name)
+        if entry is None:
+            raise ValueError(
+                f"unknown method {name!r}; available: {', '.join(available_methods())}"
+            )
+        if variant not in entry.variants:
+            raise ValueError(
+                f"unknown variant {variant!r} for method {name!r}; "
+                f"available: {', '.join(entry.variants) or '(none)'}"
+            )
+        return entry, variant
+    if spec in _REGISTRY:
+        entry = _REGISTRY[spec]
+        return entry, entry.default_variant
+    # legacy: bare OAVI variant names ("cgavi-ihb", "fast", ...)
+    for entry in _REGISTRY.values():
+        if spec in entry.variants:
+            return entry, spec
+    raise ValueError(
+        f"unknown method {spec!r}; available: {', '.join(available_methods())}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registered methods
+# ---------------------------------------------------------------------------
+
+
+def oavi_config_for(variant: str, psi: float, **kw) -> oavi_mod.OAVIConfig:
+    """Build an :class:`OAVIConfig` from a named paper variant."""
+    engine, solver, ihb, wihb = OAVI_VARIANTS[variant]
+    solver_cfg = OracleConfig(name=solver, **kw.pop("solver_kw", {}))
+    return oavi_mod.OAVIConfig(
+        psi=psi, engine=engine, solver=solver_cfg, ihb=ihb, wihb=wihb, **kw
+    )
+
+
+@register(
+    "oavi",
+    variants=tuple(OAVI_VARIANTS),
+    default_variant="fast",
+    supports_sharded=True,
+    description="Oracle AVI (Algorithm 1); variants per Section 6.1",
+)
+def _fit_oavi(X, *, variant, psi, backend, mesh, data_axes, config=None, **kw):
+    cfg = config if config is not None else oavi_config_for(variant or "fast", psi, **kw)
+    if backend == "sharded":
+        return distributed_mod.fit(X, cfg, mesh=mesh, data_axes=data_axes)
+    return oavi_mod.fit(X, cfg)
+
+
+@register("abm", description="Approximate Buchberger-Möller (Limbeck 2013)")
+def _fit_abm(X, *, variant, psi, backend, mesh, data_axes, config=None, **kw):
+    cfg = config if config is not None else abm_mod.ABMConfig(psi=psi, **kw)
+    return abm_mod.fit(X, cfg)
+
+
+@register("vca", description="Vanishing Component Analysis (Livni et al. 2013)")
+def _fit_vca(X, *, variant, psi, backend, mesh, data_axes, config=None, **kw):
+    cfg = config if config is not None else vca_mod.VCAConfig(psi=psi, **kw)
+    return vca_mod.fit(X, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Backend dispatch
+# ---------------------------------------------------------------------------
+
+
+def _default_mesh(data_axes: Sequence[str]):
+    axes = tuple(data_axes)
+    if len(axes) != 1:
+        raise ValueError(
+            "backend dispatch can only build a default mesh for a single data "
+            f"axis; pass mesh= explicitly for data_axes={axes!r}"
+        )
+    return jax.make_mesh((len(jax.devices()),), axes)
+
+
+def _resolve_backend(
+    entry: MethodEntry, backend: str, mesh, m: int
+) -> Tuple[str, Any]:
+    if backend not in ("auto", "local", "sharded"):
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'auto', 'local' or 'sharded'"
+        )
+    if backend == "local":
+        return "local", None
+    if backend == "sharded":
+        if not entry.supports_sharded:
+            raise ValueError(
+                f"method {entry.name!r} does not support backend='sharded'"
+            )
+        return "sharded", mesh
+    # auto: shard when the method can, and a mesh was supplied or the device
+    # count and sample count justify it.
+    if entry.supports_sharded and (
+        mesh is not None or (len(jax.devices()) > 1 and m >= AUTO_SHARD_MIN_M)
+    ):
+        return "sharded", mesh
+    return "local", None
+
+
+def fit(
+    X,
+    method: str = "oavi",
+    *,
+    psi: float = 0.005,
+    backend: str = "auto",
+    mesh=None,
+    data_axes: Sequence[str] = ("data",),
+    out_sharding=None,
+    config=None,
+    **method_kw,
+) -> VanishingIdealModel:
+    """Fit a vanishing-ideal model with the selected ``method`` and backend.
+
+    Parameters
+    ----------
+    X : (m, n) array in ``[0, 1]^n``
+    method : spec string — ``"oavi"``, ``"oavi:<variant>"``, ``"abm"``,
+        ``"vca"``; see :func:`available_methods`.
+    psi : vanishing tolerance.
+    backend : ``"auto"`` (default) picks ``"sharded"`` for OAVI when a mesh
+        is supplied or >1 device is visible and ``m >= AUTO_SHARD_MIN_M``;
+        otherwise ``"local"``.
+    mesh : optional :class:`jax.sharding.Mesh` for the sharded backend (a
+        1-axis mesh over all devices is built when omitted).
+    data_axes : mesh axes the sample dimension is sharded over.
+    out_sharding : optional sharding hint attached to the returned model; the
+        fused :func:`feature_transform` places its output there by default.
+    config : pre-built method config (``OAVIConfig`` / ``ABMConfig`` /
+        ``VCAConfig``); overrides ``psi`` and ``method_kw`` when given.
+    **method_kw : forwarded to the method's config constructor (e.g.
+        ``cap_terms=64``, ``solver_kw={"max_iter": 2000}``).
+    """
+    entry, variant = resolve(method)
+    X = np.asarray(X)
+    backend_r, mesh_r = _resolve_backend(entry, backend, mesh, X.shape[0])
+    if backend_r == "sharded" and mesh_r is None:
+        mesh_r = _default_mesh(data_axes)
+    model = entry.fit(
+        X,
+        variant=variant,
+        psi=psi,
+        backend=backend_r,
+        mesh=mesh_r,
+        data_axes=tuple(data_axes),
+        config=config,
+        **method_kw,
+    )
+    model.stats["api"] = {"method": entry.spec(variant), "backend": backend_r}
+    if out_sharding is not None:
+        model.transform_out_sharding = out_sharding
+    return model
+
+
+# ---------------------------------------------------------------------------
+# Serialization: save / load through the checkpoint manifest machinery
+# ---------------------------------------------------------------------------
+
+_MODEL_KINDS: Dict[str, Any] = {"oavi": OAVIModel, "vca": VCAModel}
+_FORMAT = "repro.vanishing_ideal_model.v1"
+
+
+def _json_safe(obj):
+    """Recursively convert numpy scalars/arrays so metadata JSON-serializes."""
+    if isinstance(obj, dict):
+        return {str(k): _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    return obj
+
+
+def save(model: VanishingIdealModel, path: str) -> str:
+    """Persist a fitted model to ``path`` (a directory) atomically.
+
+    Uses :func:`repro.checkpoint.store.save`: arrays land as manifest-tracked
+    leaves, metadata in the manifest, and the COMMITTED marker makes the
+    write crash-safe.  Returns the committed checkpoint directory.
+    """
+    arrays, meta = model.to_state_dict()
+    kind = meta.get("kind")
+    if kind not in _MODEL_KINDS:
+        raise ValueError(f"cannot save model of unknown kind {kind!r}")
+    metadata = {
+        "format": _FORMAT,
+        "kind": kind,
+        "meta": _json_safe(meta),
+        "array_keys": sorted(arrays),
+    }
+    return ckpt_store.save(path, step=0, tree=dict(arrays), metadata=metadata)
+
+
+def load(path: str) -> VanishingIdealModel:
+    """Load a model previously written by :func:`save` (bit-identical)."""
+    step = ckpt_store.latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no committed model checkpoint under {path!r}")
+    manifest_path = os.path.join(path, f"step_{step:08d}", "manifest.json")
+    with open(manifest_path) as f:
+        metadata = json.load(f)["metadata"]
+    if metadata.get("format") != _FORMAT:
+        raise ValueError(
+            f"{path!r} is not a {_FORMAT} checkpoint "
+            f"(format={metadata.get('format')!r})"
+        )
+    like = {k: np.zeros(()) for k in metadata["array_keys"]}
+    arrays, metadata = ckpt_store.restore(path, step, like)
+    cls = _MODEL_KINDS[metadata["kind"]]
+    return cls.from_state_dict(arrays, metadata["meta"])
+
+
+# ---------------------------------------------------------------------------
+# Fused batched transform
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _FusedPlan:
+    """All per-class term books and generator matrices concatenated into one
+    global book (constant term shared at index 0) so the whole (FT) is one
+    ``evaluate_terms`` call plus one matmul."""
+
+    parents: np.ndarray  # (L,) int32 — global term book parent chain
+    vars: np.ndarray  # (L,) int32 — variable indices in ORIGINAL Z coords
+    C: np.ndarray  # (L, Ktot) — block-diagonal generator coefficients
+    gp: np.ndarray  # (Ktot,) int32 — leading-term parent (global index)
+    gv: np.ndarray  # (Ktot,) int32 — leading-term variable (original coords)
+    dtype: np.dtype
+    num_features: int
+
+
+def _fuse(models: Sequence) -> Optional[_FusedPlan]:
+    """Build the fused plan, or None when a model is not term-book based
+    (e.g. VCA) — callers fall back to the per-model loop."""
+    models = [m for m in models]
+    if not models or not all(type(m) is OAVIModel for m in models):
+        return None
+    n = models[0].n
+    if any(m.n != n for m in models):
+        return None
+    dtype = np.dtype(models[0].dtype)
+    if any(np.dtype(m.dtype) != dtype for m in models):
+        return None  # mixed precision: evaluate each model in its own dtype
+    g_parents: List[np.ndarray] = [np.zeros((1,), np.int32)]
+    g_vars: List[np.ndarray] = [np.zeros((1,), np.int32)]
+    c_blocks: List[Tuple[int, np.ndarray]] = []  # (row offset, (ell_b, k_b))
+    gp_all: List[np.ndarray] = []
+    gv_all: List[np.ndarray] = []
+    offset = 1  # global slot of each model's first non-constant term
+    for m in models:
+        if m.num_G == 0:
+            continue  # contributes no feature columns; skip its book entirely
+        perm = (
+            np.asarray(m.feature_perm, np.int64)
+            if m.feature_perm is not None
+            else np.arange(n, dtype=np.int64)
+        )
+        pb, vb = m.term_arrays()
+        ell = pb.shape[0]
+        C, gp, gv = m.generator_arrays()
+        c_blocks.append((offset, C.astype(dtype, copy=False)))
+        gp_all.append(np.where(gp == 0, 0, offset + gp - 1).astype(np.int32))
+        gv_all.append(perm[gv].astype(np.int32))
+        if ell > 1:
+            g_parents.append(
+                np.where(pb[1:] == 0, 0, offset + pb[1:] - 1).astype(np.int32)
+            )
+            g_vars.append(perm[vb[1:]].astype(np.int32))
+        offset += ell - 1
+    L = offset
+    parents = np.concatenate(g_parents)
+    vars_ = np.concatenate(g_vars)
+    num_features = sum(b.shape[1] for _, b in c_blocks)
+    C = np.zeros((L, num_features), dtype)
+    col = 0
+    for row_off, Cb in c_blocks:
+        k = Cb.shape[1]
+        C[0, col : col + k] = Cb[0]  # constant-term coefficients
+        C[row_off : row_off + Cb.shape[0] - 1, col : col + k] = Cb[1:]
+        col += k
+    gp = np.concatenate(gp_all) if gp_all else np.zeros((0,), np.int32)
+    gv = np.concatenate(gv_all) if gv_all else np.zeros((0,), np.int32)
+    return _FusedPlan(
+        parents=parents,
+        vars=vars_,
+        C=C,
+        gp=gp,
+        gv=gv,
+        dtype=dtype,
+        num_features=num_features,
+    )
+
+
+@jax.jit
+def _fused_eval(Z, parents, vars_, C, gp, gv):
+    cols = evaluate_terms(Z, parents, vars_)  # (q, L)
+    lead = jnp.take(cols, gp, axis=1) * jnp.take(Z, gv, axis=1)
+    return jnp.abs(cols @ C + lead)
+
+
+def _fused_plan_and_args(models: Sequence):
+    """Fused plan + device-resident plan arrays, cached on the first model.
+
+    The plan depends only on the fitted models, so serving loops calling
+    :func:`feature_transform` repeatedly skip the per-call plan assembly and
+    host->device upload.  The cache entry holds strong references to the
+    models, which keeps their ids unique for as long as the key is live.
+    """
+    key = tuple(id(m) for m in models)
+    cached = models[0].__dict__.get("_fused_plan_cache")
+    if cached is not None and cached[0] == key:
+        return cached[2], cached[3]
+    plan = _fuse(models)
+    if plan is None:
+        return None, None
+    args = (
+        jnp.asarray(plan.parents),
+        jnp.asarray(plan.vars),
+        jnp.asarray(plan.C),
+        jnp.asarray(plan.gp),
+        jnp.asarray(plan.gv),
+    )
+    models[0].__dict__["_fused_plan_cache"] = (key, tuple(models), plan, args)
+    return plan, args
+
+
+def feature_transform(
+    models: Sequence,
+    Z,
+    *,
+    batch_size: Optional[int] = None,
+    out_sharding=None,
+    dtype: Optional[str] = None,
+) -> np.ndarray:
+    """(FT) over all per-class models as ONE jitted evaluation.
+
+    Drop-in replacement for :func:`repro.core.transform.feature_transform`:
+    same output (within dtype tolerance), but all term books are evaluated in
+    a single ``evaluate_terms`` sweep and all generators in one matmul.
+    ``batch_size`` streams Z through device memory in fixed-size chunks (the
+    trailing chunk is padded, so at most two jit traces exist).  Models
+    without a term book (VCA) fall back to the per-model loop.
+
+    ``out_sharding`` (or a ``transform_out_sharding`` attribute left on the
+    first model by :func:`fit`) places the result; the default returns host
+    numpy.
+    """
+    if batch_size is not None and batch_size < 1:
+        raise ValueError(f"batch_size must be a positive integer, got {batch_size}")
+    if out_sharding is None and models:
+        out_sharding = getattr(models[0], "transform_out_sharding", None)
+    plan, args = _fused_plan_and_args(models) if models else (None, None)
+    if plan is None:
+        out = _legacy_feature_transform(models, Z, dtype=dtype)
+        return jax.device_put(out, out_sharding) if out_sharding is not None else out
+    Z = np.asarray(Z)
+    q = Z.shape[0]
+    out_dtype = np.dtype(dtype) if dtype is not None else plan.dtype
+    if plan.num_features == 0:
+        out = np.zeros((q, 0), out_dtype)
+        return jax.device_put(out, out_sharding) if out_sharding is not None else out
+    Zd = Z.astype(plan.dtype, copy=False)
+    if batch_size is None or batch_size >= q:
+        out = _fused_eval(jnp.asarray(Zd), *args)
+        if out_sharding is not None:
+            return jax.device_put(out, out_sharding)
+        return np.asarray(out).astype(out_dtype, copy=False)
+    out = np.empty((q, plan.num_features), out_dtype)
+    for start in range(0, q, batch_size):
+        chunk = Zd[start : start + batch_size]
+        if chunk.shape[0] < batch_size:  # pad trailing chunk: one trace only
+            pad = np.zeros((batch_size, Z.shape[1]), plan.dtype)
+            pad[: chunk.shape[0]] = chunk
+            res = _fused_eval(jnp.asarray(pad), *args)[: chunk.shape[0]]
+        else:
+            res = _fused_eval(jnp.asarray(chunk), *args)
+        out[start : start + batch_size] = np.asarray(res).astype(
+            out_dtype, copy=False
+        )
+    return jax.device_put(out, out_sharding) if out_sharding is not None else out
+
+
+__all__ = [
+    "AUTO_SHARD_MIN_M",
+    "MethodEntry",
+    "OAVI_VARIANTS",
+    "VanishingIdealModel",
+    "available_methods",
+    "feature_transform",
+    "fit",
+    "load",
+    "oavi_config_for",
+    "register",
+    "resolve",
+    "save",
+]

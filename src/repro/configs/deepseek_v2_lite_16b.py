@@ -32,6 +32,8 @@ def reduced() -> ModelConfig:
         rope_theta=1e4,
         mla=MLADims(n_heads=4, kv_lora_rank=16, qk_nope_dim=16,
                     qk_rope_dim=8, v_head_dim=16, rope_theta=1e4),
-        moe=MoEDims(num_experts=8, top_k=2, d_ff=32, n_shared=2),
+        # capacity_factor=0 -> dropless routing: decode matches batch forward
+        moe=MoEDims(num_experts=8, top_k=2, d_ff=32, n_shared=2,
+                    capacity_factor=0.0),
         dtype="float32",
     )

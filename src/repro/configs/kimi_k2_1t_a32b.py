@@ -33,6 +33,8 @@ def reduced() -> ModelConfig:
         d_model=64, vocab_size=256,
         n_heads=4, n_kv_heads=2, d_head=16,
         rope_theta=5e4,
-        moe=MoEDims(num_experts=8, top_k=2, d_ff=32, n_shared=1),
+        # capacity_factor=0 -> dropless routing: decode matches batch forward
+        moe=MoEDims(num_experts=8, top_k=2, d_ff=32, n_shared=1,
+                    capacity_factor=0.0),
         dtype="float32",
     )

@@ -3,10 +3,21 @@
 from .oavi import OAVIConfig, OAVIModel, Generator, fit, evaluate_terms
 from .oracles import OracleConfig, solve_agd, solve_cg, solve_pcg, solve_bpcg
 from .ordering import pearson_order, pearson_scores
-from .pipeline import PipelineConfig, VanishingIdealClassifier, VARIANTS
+from .pipeline import PipelineConfig, VanishingIdealClassifier
 from .svm import LinearSVM, LinearSVMConfig, PolySVM, PolySVMConfig
 from .transform import MinMaxScaler, feature_transform
 from . import abm, distributed, ihb, terms, vca
+
+
+def __getattr__(name: str):
+    # Deprecated alias, resolved lazily so importing repro.core does not pull
+    # in repro.api: the canonical variant table is repro.api.OAVI_VARIANTS.
+    if name == "VARIANTS":
+        from .. import api
+
+        return api.OAVI_VARIANTS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "OAVIConfig", "OAVIModel", "Generator", "fit", "evaluate_terms",

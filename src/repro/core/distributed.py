@@ -34,6 +34,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax.shard_map (with check_vma) is only public in newer jax; older releases
+# ship it as jax.experimental.shard_map.shard_map (with check_rep).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
+
 from . import ihb as ihb_mod
 from . import terms as terms_mod
 from .oavi import (
@@ -61,12 +71,12 @@ def make_sharded_degree_step(
     dspec = _data_spec(axes)
     rep = P()
 
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         step,
         mesh=mesh,
         in_specs=(dspec, dspec, rep, rep, rep, rep, rep, rep),
         out_specs=(dspec, rep),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
     return jax.jit(sharded)
 

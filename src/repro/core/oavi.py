@@ -140,6 +140,104 @@ class OAVIModel:
         G = self.evaluate_G(Z)
         return jnp.mean(G * G, axis=0)
 
+    # -- VanishingIdealModel protocol (see repro.api) ---------------------
+
+    def transform(self, Z) -> np.ndarray:
+        """(FT) for this model alone: ``|G(Z)|`` as (q, |G|) in model dtype."""
+        return np.abs(np.asarray(self.evaluate_G(Z)))
+
+    def to_state_dict(self) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Flat array tree + JSON-safe metadata.  The term book and generator
+        leading terms are not stored explicitly: both replay from the
+        ``(parent, var)`` chains, so the arrays below are the whole model."""
+        parents, vars_ = self.term_arrays()
+        k = len(self.generators)
+        L = len(self.book)
+        coeffs = np.zeros((k, L), dtype=self.dtype)
+        lens = np.zeros((k,), np.int32)
+        gp = np.zeros((k,), np.int32)
+        gv = np.zeros((k,), np.int32)
+        mses = np.zeros((k,), np.float64)
+        for j, g in enumerate(self.generators):
+            coeffs[j, : len(g.coeffs)] = g.coeffs
+            lens[j] = len(g.coeffs)
+            gp[j] = g.parent_idx
+            gv[j] = g.var
+            mses[j] = g.mse
+        perm = (
+            np.asarray(self.feature_perm, np.int32)
+            if self.feature_perm is not None
+            else np.zeros((0,), np.int32)
+        )
+        arrays = {
+            "book_parents": parents,
+            "book_vars": vars_,
+            "gen_coeffs": coeffs,
+            "gen_lens": lens,
+            "gen_parent": gp,
+            "gen_var": gv,
+            "gen_mse": mses,
+            "feature_perm": perm,
+        }
+        meta = {
+            "kind": "oavi",
+            "n": int(self.n),
+            "psi": float(self.psi),
+            "dtype": str(self.dtype),
+            "has_perm": self.feature_perm is not None,
+            "stats": self.stats,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state_dict(cls, arrays: Dict[str, np.ndarray], meta: Dict) -> "OAVIModel":
+        n = int(meta["n"])
+        dtype = str(meta["dtype"])
+        bp = np.asarray(arrays["book_parents"]).astype(np.int64)
+        bv = np.asarray(arrays["book_vars"]).astype(np.int64)
+        book = terms_mod.TermBook(n=n)
+        for i in range(1, bp.shape[0]):
+            parent = book.terms[int(bp[i])]
+            var = int(bv[i])
+            book.append(terms_mod.multiply_by_var(parent, var), parent, var)
+        coeffs = np.asarray(arrays["gen_coeffs"]).astype(dtype)
+        lens = np.asarray(arrays["gen_lens"]).astype(np.int64)
+        gp = np.asarray(arrays["gen_parent"]).astype(np.int64)
+        gv = np.asarray(arrays["gen_var"]).astype(np.int64)
+        mses = np.asarray(arrays["gen_mse"]).astype(np.float64)
+        generators = []
+        for j in range(gp.shape[0]):
+            p, v = int(gp[j]), int(gv[j])
+            generators.append(
+                Generator(
+                    term=terms_mod.multiply_by_var(book.terms[p], v),
+                    parent_idx=p,
+                    var=v,
+                    coeffs=coeffs[j, : int(lens[j])].copy(),
+                    mse=float(mses[j]),
+                )
+            )
+        perm = (
+            np.asarray(arrays["feature_perm"]).astype(np.int64)
+            if meta.get("has_perm")
+            else None
+        )
+        return cls(
+            n=n,
+            psi=float(meta["psi"]),
+            book=book,
+            generators=generators,
+            feature_perm=perm,
+            stats=dict(meta.get("stats") or {}),
+            dtype=dtype,
+        )
+
+    def save(self, path: str) -> str:
+        """Atomic save via the checkpoint manifest machinery (repro.api)."""
+        from .. import api
+
+        return api.save(self, path)
+
 
 @partial(jax.jit, donate_argnums=(0,))
 def _append_columns(A, B, slots, appended):

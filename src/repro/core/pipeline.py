@@ -1,54 +1,51 @@
 """Algorithm 2: per-class generator construction -> (FT) -> linear SVM.
 
-The paper's end-to-end classification pipeline.  ``method`` selects the
-generator constructor: OAVI variants (CGAVI-IHB, AGDAVI-IHB, BPCGAVI,
-BPCGAVI-WIHB, PCGAVI, fast), ABM, or VCA.  The feature-transformed data is
-classified by the l1 squared-hinge :class:`~repro.core.svm.LinearSVM`.
+The paper's end-to-end classification pipeline.  ``method`` is a
+:mod:`repro.api` spec string (``"oavi:cgavi-ihb"``, ``"abm"``, ``"vca"``,
+...; bare OAVI variant names like ``"fast"`` keep working).  Generator
+construction is dispatched through :func:`repro.api.fit` (which picks the
+local or sharded backend), the feature transform runs through the fused
+:func:`repro.api.feature_transform`, and the features are classified by the
+l1 squared-hinge :class:`~repro.core.svm.LinearSVM`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from . import abm as abm_mod
-from . import oavi as oavi_mod
-from . import vca as vca_mod
-from .oracles import OracleConfig
 from .svm import LinearSVM, LinearSVMConfig
-from .transform import MinMaxScaler, feature_transform
-
-# Named algorithm variants from the paper (Section 6.1).
-VARIANTS = {
-    # name: (engine, solver, ihb, wihb)
-    "cgavi-ihb": ("oracle", "cg", True, False),
-    "agdavi-ihb": ("oracle", "agd", True, False),
-    "bpcgavi": ("oracle", "bpcg", False, False),
-    "bpcgavi-wihb": ("oracle", "bpcg", True, True),
-    "pcgavi": ("oracle", "pcg", False, False),
-    "cgavi": ("oracle", "cg", False, False),
-    "agdavi": ("oracle", "agd", False, False),
-    "fast": ("fast", "bpcg", True, False),  # beyond-paper closed-form engine
-}
+from .transform import MinMaxScaler
 
 
-def oavi_config_for(variant: str, psi: float, **kw) -> oavi_mod.OAVIConfig:
-    engine, solver, ihb, wihb = VARIANTS[variant]
-    solver_cfg = OracleConfig(name=solver, **kw.pop("solver_kw", {}))
-    return oavi_mod.OAVIConfig(
-        psi=psi, engine=engine, solver=solver_cfg, ihb=ihb, wihb=wihb, **kw
-    )
+def __getattr__(name: str):
+    # Deprecated alias: the canonical variant table lives in repro.api.
+    if name == "VARIANTS":
+        from .. import api
+
+        return api.OAVI_VARIANTS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def oavi_config_for(variant: str, psi: float, **kw):
+    """Deprecated alias for :func:`repro.api.oavi_config_for`."""
+    from .. import api
+
+    return api.oavi_config_for(variant, psi, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
-    method: str = "fast"  # VARIANTS key | 'abm' | 'vca'
+    method: str = "fast"  # repro.api method spec (or bare OAVI variant name)
     psi: float = 0.005
     svm: LinearSVMConfig = dataclasses.field(default_factory=LinearSVMConfig)
-    oavi_kw: Optional[Dict] = None
+    oavi_kw: Optional[Dict] = None  # forwarded to the method config
+    backend: str = "auto"  # repro.api backend: 'auto' | 'local' | 'sharded'
+    mesh: Optional[Any] = None  # jax Mesh for the sharded backend
+    batch_size: Optional[int] = None  # fused-transform chunking (rows)
 
 
 class VanishingIdealClassifier:
@@ -56,20 +53,36 @@ class VanishingIdealClassifier:
 
     def __init__(self, config: PipelineConfig = PipelineConfig()):
         self.config = config
-        self.scaler = MinMaxScaler()
+        # thread the model dtype through the scaler so float32 models are not
+        # silently fed float64 inputs
+        self.dtype = (config.oavi_kw or {}).get("dtype", "float32")
+        self.scaler = MinMaxScaler(dtype=self.dtype)
         self.models: List = []
         self.svm = LinearSVM(config.svm)
         self.classes_: Optional[np.ndarray] = None
         self.stats: Dict = {}
 
     def _fit_generator_model(self, Xc: np.ndarray):
+        from .. import api
+
         cfg = self.config
-        kw = dict(cfg.oavi_kw or {})
-        if cfg.method == "abm":
-            return abm_mod.fit(Xc, abm_mod.ABMConfig(psi=cfg.psi, **kw))
-        if cfg.method == "vca":
-            return vca_mod.fit(Xc, vca_mod.VCAConfig(psi=cfg.psi, **kw))
-        return oavi_mod.fit(Xc, oavi_config_for(cfg.method, cfg.psi, **kw))
+        return api.fit(
+            Xc,
+            method=cfg.method,
+            psi=cfg.psi,
+            backend=cfg.backend,
+            mesh=cfg.mesh,
+            **dict(cfg.oavi_kw or {}),
+        )
+
+    def _feature_transform(self, X) -> np.ndarray:
+        from .. import api
+
+        return np.asarray(
+            api.feature_transform(
+                self.models, X, batch_size=self.config.batch_size, dtype=self.dtype
+            )
+        )
 
     def fit(self, X, y) -> "VanishingIdealClassifier":
         t0 = time.perf_counter()
@@ -83,7 +96,7 @@ class VanishingIdealClassifier:
             self.models.append(model)
             gen_stats.append(model.stats)
         t_gen = time.perf_counter() - t0
-        Xt = feature_transform(self.models, X)
+        Xt = self._feature_transform(X)
         self.svm.fit(Xt, y)
         self.stats = {
             "time_generators": t_gen,
@@ -96,7 +109,7 @@ class VanishingIdealClassifier:
         return self
 
     def transform(self, X) -> np.ndarray:
-        return feature_transform(self.models, self.scaler.transform(X))
+        return self._feature_transform(self.scaler.transform(X))
 
     def predict(self, X) -> np.ndarray:
         return self.svm.predict(self.transform(X))

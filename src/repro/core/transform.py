@@ -14,10 +14,17 @@ import numpy as np
 
 @dataclasses.dataclass
 class MinMaxScaler:
-    """Min-max feature scaling into [0, 1]^n (fit on train, reused on test)."""
+    """Min-max feature scaling into [0, 1]^n (fit on train, reused on test).
+
+    Statistics are computed in float64 for numerical safety; ``dtype`` (when
+    set) casts the *output*, so downstream float32 models are not silently
+    fed float64 data.  ``dtype=None`` preserves the historical float64
+    behaviour.
+    """
 
     lo: Optional[np.ndarray] = None
     scale: Optional[np.ndarray] = None
+    dtype: Optional[str] = None
 
     def fit(self, X) -> "MinMaxScaler":
         X = np.asarray(X, dtype=np.float64)
@@ -28,22 +35,31 @@ class MinMaxScaler:
 
     def transform(self, X) -> np.ndarray:
         X = np.asarray(X, dtype=np.float64)
-        return np.clip((X - self.lo) * self.scale, 0.0, 1.0)
+        out = np.clip((X - self.lo) * self.scale, 0.0, 1.0)
+        return out.astype(self.dtype) if self.dtype is not None else out
 
     def fit_transform(self, X) -> np.ndarray:
         return self.fit(X).transform(X)
 
 
-def feature_transform(models: Sequence, Z) -> np.ndarray:
+def feature_transform(models: Sequence, Z, dtype: Optional[str] = None) -> np.ndarray:
     """(FT): stack ``|g(Z)|`` over the generators of every per-class model.
 
     ``models`` — one fitted generator model per class (OAVIModel / VCAModel /
-    anything exposing ``evaluate_G``).  Returns (q, sum_i |G^i|).
+    anything exposing ``evaluate_G``).  Returns (q, sum_i |G^i|) in ``dtype``
+    (default: the first model's dtype, so float32 models yield float32
+    features instead of silently promoting to float64).
+
+    This is the legacy per-model loop; the fused single-dispatch version
+    lives in :func:`repro.api.feature_transform`.
     """
+    out_dtype = np.dtype(dtype) if dtype is not None else None
     cols: List[np.ndarray] = []
     for model in models:
         G = np.asarray(model.evaluate_G(Z))
-        cols.append(np.abs(G))
+        if out_dtype is None:
+            out_dtype = G.dtype
+        cols.append(np.abs(G).astype(out_dtype, copy=False))
     if not cols:
-        return np.zeros((np.asarray(Z).shape[0], 0))
+        return np.zeros((np.asarray(Z).shape[0], 0), out_dtype or np.float64)
     return np.concatenate(cols, axis=1)

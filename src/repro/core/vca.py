@@ -106,6 +106,72 @@ class VCAModel:
         G = self.evaluate_G(Z)
         return (G * G).mean(axis=0)
 
+    # -- VanishingIdealModel protocol (see repro.api) ---------------------
+
+    def transform(self, Z) -> np.ndarray:
+        """(FT) for this model alone: ``|G(Z)|`` as (q, |G|) in model dtype."""
+        return np.abs(np.asarray(self.evaluate_G(Z)))
+
+    def to_state_dict(self) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Flat array tree + JSON-safe metadata.  Each degree block is stored
+        under ``block_<i>_*`` keys; the replayable construction tree is the
+        whole model."""
+        arrays: Dict[str, np.ndarray] = {"deg1_coeffs": self.deg1_coeffs}
+        block_meta = []
+        for i, b in enumerate(self.blocks):
+            arrays[f"block_{i:04d}_pair_f"] = b.pair_f
+            arrays[f"block_{i:04d}_pair_g"] = b.pair_g
+            arrays[f"block_{i:04d}_proj"] = b.proj
+            arrays[f"block_{i:04d}_combo"] = b.combo
+            block_meta.append(
+                {
+                    "num_vanishing": int(b.num_vanishing),
+                    "num_nonvanishing": int(b.num_nonvanishing),
+                }
+            )
+        meta = {
+            "kind": "vca",
+            "n": int(self.n),
+            "psi": float(self.psi),
+            "dtype": str(self.dtype),
+            "deg1_num_vanishing": int(self.deg1_num_vanishing),
+            "sqrt_m": float(self.sqrt_m),
+            "blocks": block_meta,
+            "stats": self.stats,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state_dict(cls, arrays: Dict[str, np.ndarray], meta: Dict) -> "VCAModel":
+        blocks = []
+        for i, bm in enumerate(meta.get("blocks") or []):
+            blocks.append(
+                _DegreeBlock(
+                    pair_f=np.asarray(arrays[f"block_{i:04d}_pair_f"]),
+                    pair_g=np.asarray(arrays[f"block_{i:04d}_pair_g"]),
+                    proj=np.asarray(arrays[f"block_{i:04d}_proj"]),
+                    combo=np.asarray(arrays[f"block_{i:04d}_combo"]),
+                    num_vanishing=int(bm["num_vanishing"]),
+                    num_nonvanishing=int(bm["num_nonvanishing"]),
+                )
+            )
+        return cls(
+            n=int(meta["n"]),
+            psi=float(meta["psi"]),
+            deg1_coeffs=np.asarray(arrays["deg1_coeffs"]),
+            deg1_num_vanishing=int(meta["deg1_num_vanishing"]),
+            blocks=blocks,
+            stats=dict(meta.get("stats") or {}),
+            sqrt_m=float(meta["sqrt_m"]),
+            dtype=str(meta["dtype"]),
+        )
+
+    def save(self, path: str) -> str:
+        """Atomic save via the checkpoint manifest machinery (repro.api)."""
+        from .. import api
+
+        return api.save(self, path)
+
 
 def fit(X, config: VCAConfig = VCAConfig()) -> VCAModel:
     t0 = time.perf_counter()

@@ -20,6 +20,7 @@ frame/patch embeddings with the same (seed, step) contract.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -54,14 +55,30 @@ def _fold(seed: int, *xs: int) -> np.random.Generator:
     return np.random.default_rng(ss)
 
 
+@functools.lru_cache(maxsize=64)
+def _grammar(cfg: PipelineConfig) -> Tuple[int, int]:
+    """LCG "grammar" (a, b): a function of the pipeline seed ALONE.
+
+    The transition rule must be shared across rows and steps — if every row
+    drew its own (a, b), each sequence would follow a private random chain,
+    the marginal next-token distribution would be uniform, and cross-entropy
+    could never drop below ln(V) no matter how long training runs.  With a
+    global grammar the transition map is learnable across batches while the
+    trajectories (start token, noise) stay per-(seed, step, row).
+    """
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 0xA11CE]))
+    a = int(rng.integers(3, 64)) * 2 + 1
+    b = int(rng.integers(0, cfg.vocab_size))
+    return a, b
+
+
 def _markov_row(cfg: PipelineConfig, seed_vec: np.ndarray) -> np.ndarray:
-    """One sequence from a cheap per-row Markov chain over a hashed alphabet."""
+    """One sequence from the seed's Markov chain over a hashed alphabet."""
     V = cfg.vocab_size
     T = cfg.seq_len
+    # token t+1 = (a * token_t + b + noise) mod V — linear-congruential grammar
+    a, b = _grammar(cfg)
     rng = np.random.default_rng(np.random.SeedSequence(seed_vec.tolist()))
-    # token t+1 = (a * token_t + b + noise) mod V — linear-congruential "grammar"
-    a = int(rng.integers(3, 64)) * 2 + 1
-    b = int(rng.integers(0, V))
     toks = np.empty((T,), np.int32)
     toks[0] = int(rng.integers(0, V))
     noise = rng.integers(0, 17, size=T)

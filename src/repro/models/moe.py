@@ -67,7 +67,13 @@ def init_params(key, d_model: int, dims: MoEDims, dtype) -> Dict:
 
 
 def capacity(T: int, dims: MoEDims) -> int:
-    c = math.ceil(T * dims.top_k / dims.num_experts * dims.capacity_factor)
+    if dims.capacity_factor <= 0:
+        # dropless: every expert can hold every token (C == T), so routing
+        # never depends on the batch's token count — one-token decode then
+        # reproduces batch-forward logits exactly.
+        c = T
+    else:
+        c = math.ceil(T * dims.top_k / dims.num_experts * dims.capacity_factor)
     return max(8, ((c + 7) // 8) * 8)  # pad to an 8-multiple for layout
 
 

@@ -1,0 +1,81 @@
+"""Stand-in for ``hypothesis`` so test modules collect without it.
+
+Seven test modules use hypothesis property tests.  The container does not
+ship hypothesis, so a bare ``from hypothesis import given, ...`` aborts
+*collection* of the whole module and takes every non-property test down with
+it.  When the real package is importable this module is a no-op; otherwise it
+installs a minimal fake into ``sys.modules`` whose ``@given`` replaces the
+test body with ``pytest.skip(...)``, so property tests skip individually and
+the rest of each module still runs.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+
+
+class _Strategy:
+    """Inert placeholder for any ``st.<name>(...)`` strategy expression."""
+
+    def __init__(self, name: str = "strategy"):
+        self._name = name
+
+    def __call__(self, *args, **kwargs):
+        return _Strategy(self._name)
+
+    def __getattr__(self, name):  # st.integers(0, 5).filter(...), etc.
+        return _Strategy(f"{self._name}.{name}")
+
+    def __repr__(self):
+        return f"<fake hypothesis {self._name}>"
+
+
+def _given(*_args, **_kwargs):
+    def decorate(fn):
+        def skipper(*a, **k):
+            import pytest
+
+            pytest.skip("hypothesis is not installed")
+
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        skipper.__module__ = fn.__module__
+        skipper.is_hypothesis_test = True
+        return skipper
+
+    return decorate
+
+
+def _settings(*_args, **_kwargs):
+    # usable both as decorator factory and bare decorator
+    if len(_args) == 1 and callable(_args[0]) and not _kwargs:
+        return _args[0]
+    return lambda fn: fn
+
+
+def install() -> None:
+    try:
+        import hypothesis  # noqa: F401  (real package wins)
+
+        return
+    except ImportError:
+        pass
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.__getattr__ = lambda name: _Strategy(name)  # type: ignore[attr-defined]
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = _given
+    mod.settings = _settings
+    mod.assume = lambda *a, **k: True
+    mod.note = lambda *a, **k: None
+    mod.example = lambda *a, **k: (lambda fn: fn)
+    mod.HealthCheck = types.SimpleNamespace(
+        too_slow="too_slow", data_too_large="data_too_large", all=lambda: []
+    )
+    mod.strategies = strategies
+    mod.__fake__ = True
+
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,5 +1,8 @@
+import _hypothesis_compat
 import numpy as np
 import pytest
+
+_hypothesis_compat.install()
 
 
 @pytest.fixture(scope="session")

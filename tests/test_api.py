@@ -1,0 +1,268 @@
+"""Unified estimator API tests: registry, dispatch, serialization, fused FT."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.transform import MinMaxScaler, feature_transform as legacy_transform
+
+
+@pytest.fixture(scope="module")
+def planted():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (900, 4)).astype(np.float32)
+    X[:, 3] = np.clip(X[:, 0] * X[:, 1] + rng.normal(0, 0.01, 900), 0, 1)
+    return X
+
+
+@pytest.fixture(scope="module")
+def fitted_models(planted):
+    """One model per registered family, fitted on the planted-cube data."""
+    return {
+        "oavi": api.fit(planted, method="oavi:fast", psi=0.005, cap_terms=64),
+        "abm": api.fit(planted, method="abm", psi=0.005, cap_terms=64),
+        "vca": api.fit(planted, method="vca", psi=0.005),
+    }
+
+
+# -- registry ---------------------------------------------------------------
+
+
+def test_available_methods_lists_all_families():
+    specs = api.available_methods()
+    assert {"oavi", "abm", "vca"} <= set(specs)
+    assert "oavi:cgavi-ihb" in specs and "oavi:bpcgavi-wihb" in specs
+
+
+def test_resolve_spec_strings():
+    entry, variant = api.resolve("oavi:bpcgavi-wihb")
+    assert entry.name == "oavi" and variant == "bpcgavi-wihb"
+    entry, variant = api.resolve("oavi")
+    assert entry.name == "oavi" and variant == entry.default_variant
+    entry, variant = api.resolve("abm")
+    assert entry.name == "abm" and variant is None
+
+
+def test_resolve_legacy_bare_variant_names():
+    for legacy in ("fast", "cgavi-ihb"):
+        entry, variant = api.resolve(legacy)
+        assert entry.name == "oavi" and variant == legacy
+
+
+def test_resolve_unknown_method_errors():
+    with pytest.raises(ValueError, match="unknown method"):
+        api.resolve("nope")
+    with pytest.raises(ValueError, match="unknown variant"):
+        api.resolve("oavi:nope")
+    with pytest.raises(ValueError, match="unknown method"):
+        api.resolve("nope:fast")
+    with pytest.raises(TypeError):
+        api.resolve(123)
+
+
+def test_register_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        api.register("oavi")(lambda X, **kw: None)
+
+
+def test_variants_alias_matches_api():
+    from repro.core import pipeline
+
+    assert pipeline.VARIANTS is api.OAVI_VARIANTS
+
+
+# -- fit + protocol -----------------------------------------------------------
+
+
+def test_fit_returns_protocol_models(fitted_models):
+    for name, model in fitted_models.items():
+        assert isinstance(model, api.VanishingIdealModel), name
+        assert model.num_G > 0
+        assert model.stats["api"]["method"].startswith(name)
+        assert model.stats["api"]["backend"] == "local"  # 1 device, small m
+        feats = model.transform(np.asarray([[0.5, 0.5, 0.5, 0.25]]))
+        assert feats.shape == (1, model.num_G)
+        assert (feats >= 0).all()
+
+
+def test_fit_unknown_backend_errors(planted):
+    with pytest.raises(ValueError, match="unknown backend"):
+        api.fit(planted, method="oavi:fast", backend="gpu-cluster")
+
+
+def test_sharded_backend_rejected_for_non_oavi(planted):
+    for method in ("abm", "vca"):
+        with pytest.raises(ValueError, match="does not support"):
+            api.fit(planted, method=method, backend="sharded")
+
+
+def test_fit_with_prebuilt_config(planted):
+    from repro.core.oavi import OAVIConfig
+
+    cfg = OAVIConfig(psi=0.01, engine="fast", cap_terms=64, ordering="none")
+    model = api.fit(planted, method="oavi", config=cfg)
+    assert model.psi == 0.01
+
+
+# -- backend dispatch on a fake 8-device CPU mesh ----------------------------
+
+
+def _run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.abspath("src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_backend_auto_dispatch_8_devices_subprocess():
+    """auto + mesh routes to sharded; leading terms identical to local."""
+    out = _run_sub("""
+        import numpy as np, jax
+        from repro import api
+        rng = np.random.default_rng(0)
+        X = rng.uniform(0, 1, (1003, 4))  # not divisible by 8 -> padding path
+        X[:, 3] = np.clip(X[:, 0] * X[:, 1] + rng.normal(0, 0.01, 1003), 0, 1)
+        mesh = jax.make_mesh((8,), ("data",))
+        kw = dict(psi=0.005, cap_terms=64, ordering="none")
+        local = api.fit(X, method="oavi:fast", backend="local", **kw)
+        autod = api.fit(X, method="oavi:fast", backend="auto", mesh=mesh, **kw)
+        shard = api.fit(X, method="oavi:fast", backend="sharded", **kw)  # default mesh
+        assert autod.stats["api"]["backend"] == "sharded", autod.stats["api"]
+        assert shard.stats["mesh"] == {"data": 8}, shard.stats["mesh"]
+        # auto without a mesh on small m stays local even with 8 devices
+        small = api.fit(X[:200], method="oavi:fast", backend="auto", **kw)
+        assert small.stats["api"]["backend"] == "local", small.stats["api"]
+        for dist in (autod, shard):
+            assert [g.term for g in dist.generators] == \
+                   [g.term for g in local.generators]
+        print("DISPATCH-OK")
+    """)
+    assert "DISPATCH-OK" in out
+
+
+# -- save / load round trip ---------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["oavi", "abm", "vca"])
+def test_save_load_bit_identical_transform(fitted_models, planted, kind, tmp_path):
+    model = fitted_models[kind]
+    path = str(tmp_path / kind)
+    committed = api.save(model, path)
+    assert os.path.exists(os.path.join(committed, "COMMITTED"))
+    restored = api.load(path)
+    assert type(restored) is type(model)
+    assert restored.num_G == model.num_G
+    Z = np.linspace(0, 1, 4 * 257).reshape(257, 4).astype(np.float32)
+    a, b = model.transform(Z), restored.transform(Z)
+    assert a.dtype == b.dtype
+    assert np.array_equal(a, b), "round trip must be bit-identical"
+
+
+def test_model_save_method_and_load(fitted_models, tmp_path):
+    model = fitted_models["oavi"]
+    model.save(str(tmp_path / "m"))
+    restored = api.load(str(tmp_path / "m"))
+    assert [g.term for g in restored.generators] == \
+           [g.term for g in model.generators]
+
+
+def test_load_missing_and_foreign_checkpoints(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        api.load(str(tmp_path / "nothing"))
+    from repro.checkpoint import store
+
+    store.save(str(tmp_path / "foreign"), 0, {"w": np.zeros(3)})
+    with pytest.raises(ValueError, match="not a repro.vanishing_ideal_model"):
+        api.load(str(tmp_path / "foreign"))
+
+
+# -- fused batched transform --------------------------------------------------
+
+
+def test_fused_transform_matches_legacy(fitted_models, planted):
+    models = [fitted_models["oavi"], fitted_models["abm"]]
+    rng = np.random.default_rng(3)
+    Z = rng.uniform(0, 1, (777, 4)).astype(np.float32)
+    ref = legacy_transform(models, Z)
+    fused = api.feature_transform(models, Z)
+    assert fused.shape == ref.shape and fused.dtype == ref.dtype
+    np.testing.assert_allclose(fused, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_transform_batching_exact(fitted_models):
+    models = [fitted_models["oavi"], fitted_models["abm"]]
+    rng = np.random.default_rng(4)
+    Z = rng.uniform(0, 1, (1001, 4)).astype(np.float32)  # uneven trailing chunk
+    whole = api.feature_transform(models, Z)
+    chunked = api.feature_transform(models, Z, batch_size=256)
+    assert np.array_equal(np.asarray(whole), np.asarray(chunked))
+
+
+def test_fused_transform_vca_fallback(fitted_models):
+    """VCA has no term book: feature_transform falls back to the loop."""
+    models = [fitted_models["vca"]]
+    rng = np.random.default_rng(5)
+    Z = rng.uniform(0, 1, (128, 4)).astype(np.float32)
+    np.testing.assert_array_equal(
+        api.feature_transform(models, Z), legacy_transform(models, Z)
+    )
+
+
+def test_fused_transform_empty_models():
+    Z = np.zeros((7, 4), np.float32)
+    out = api.feature_transform([], Z)
+    assert out.shape == (7, 0)
+
+
+def test_fused_transform_respects_pearson_permutation(planted):
+    """Models fitted with feature reordering must evaluate new points in
+    ORIGINAL coordinates — the fused plan folds each model's permutation in."""
+    m1 = api.fit(planted, method="oavi:fast", psi=0.005, cap_terms=64,
+                 ordering="pearson")
+    m2 = api.fit(planted, method="oavi:fast", psi=0.005, cap_terms=64,
+                 ordering="reverse_pearson")
+    rng = np.random.default_rng(6)
+    Z = rng.uniform(0, 1, (333, 4)).astype(np.float32)
+    ref = legacy_transform([m1, m2], Z)
+    fused = api.feature_transform([m1, m2], Z)
+    np.testing.assert_allclose(fused, ref, rtol=1e-5, atol=1e-6)
+
+
+# -- dtype consistency --------------------------------------------------------
+
+
+def test_minmax_scaler_dtype_threading():
+    X = np.random.default_rng(0).normal(size=(50, 3))
+    assert MinMaxScaler().fit_transform(X).dtype == np.float64  # legacy default
+    assert MinMaxScaler(dtype="float32").fit_transform(X).dtype == np.float32
+
+
+def test_feature_transform_dtype_matches_model(fitted_models):
+    Z = np.random.default_rng(1).uniform(0, 1, (64, 4))
+    for name, model in fitted_models.items():
+        legacy = legacy_transform([model], Z)
+        fused = np.asarray(api.feature_transform([model], Z))
+        assert legacy.dtype == np.dtype(model.dtype), name
+        assert fused.dtype == np.dtype(model.dtype), name
+
+
+def test_pipeline_dtype_consistency(planted):
+    from repro.core.pipeline import PipelineConfig, VanishingIdealClassifier
+
+    y = (planted[:, 0] > 0.5).astype(int)
+    clf = VanishingIdealClassifier(
+        PipelineConfig(method="oavi:fast", psi=0.005, oavi_kw={"cap_terms": 64})
+    )
+    clf.fit(planted, y)
+    assert clf.scaler.transform(planted).dtype == np.float32
+    assert clf.transform(planted).dtype == np.float32

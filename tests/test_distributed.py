@@ -122,10 +122,12 @@ def test_train_driver_multidevice_subprocess():
         from repro.optim import AdamW
         cfg = configs.get_reduced("qwen2-1.5b")
         mesh = mesh_mod.make_local_mesh(model_parallel=2)
-        opt = AdamW(peak_lr=3e-3, warmup_steps=3, total_steps=30)
+        # the synthetic LCG grammar needs ~100 steps before the transition
+        # map becomes visible in the loss (see repro.data.lm._grammar)
+        opt = AdamW(peak_lr=3e-3, warmup_steps=10, total_steps=120)
         with tempfile.TemporaryDirectory() as d:
-            report = train(cfg, steps=30, global_batch=4, seq_len=32,
-                           ckpt_dir=os.path.join(d, "ck"), ckpt_every=10,
+            report = train(cfg, steps=120, global_batch=4, seq_len=32,
+                           ckpt_dir=os.path.join(d, "ck"), ckpt_every=40,
                            mesh=mesh, opt=opt)
             losses = report["losses"]
             head = sum(losses[:3]) / 3
