@@ -2,14 +2,18 @@
 #
 #   make test             tier-1 test suite (the CI / verify command)
 #   make test-api         just the unified-API tests (fast)
-#   make bench-transform  fused-vs-legacy transform benchmark (BENCH_*.json)
+#   make lint             dead-import lint (pyflakes when installed, AST fallback)
+#   make bench-smoke      smoke benchmark subset (fig4_scaling, transform_fused,
+#                         fit_fused at quick sizes) + BENCH_*.json artifact check
+#   make bench-transform  fused-vs-legacy transform benchmark (BENCH_transform.json)
+#   make bench-fit        fused fit-path benchmark (BENCH_fit.json)
 #   make bench            full quick benchmark sweep
-#   make dev-deps         install dev-only deps (pytest, hypothesis)
+#   make dev-deps         install dev-only deps (pytest, hypothesis, pyflakes)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-api bench bench-transform dev-deps
+.PHONY: test test-api lint bench bench-smoke bench-transform bench-fit dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -17,8 +21,18 @@ test:
 test-api:
 	$(PYTHON) -m pytest -q tests/test_api.py
 
+lint:
+	$(PYTHON) tools/lint.py src/repro benchmarks tools
+
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused
+	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling
+
 bench-transform:
 	$(PYTHON) -m benchmarks.run --only transform_fused
+
+bench-fit:
+	$(PYTHON) -m benchmarks.run --only fit_fused
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -8,7 +8,6 @@ slightly below the bound; we assert containment.
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import oavi, terms
 from repro.core.oavi import OAVIConfig

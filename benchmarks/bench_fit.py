@@ -1,0 +1,339 @@
+"""Fit-path benchmark: kernel-fused degree step vs the pre-PR jnp path.
+
+Measures, at quick and ``--full`` scales:
+
+* **fit wall clock + per-degree breakdown** — the fused path
+  (:func:`repro.core.oavi.fit`: ``kernels.ops.gram_update`` dispatch, slimmed
+  IHB state, pow2 capacity buckets with device-side regrowth and the global
+  jitted-step cache) against a self-contained *legacy* reimplementation of
+  the pre-PR degree step (inline jnp Gram matmuls over the full fixed
+  ``Lcap=256`` buffer, all three IHB factors updated per candidate, numpy
+  round-trip regrowth).  Both paths are warmed first so compile time is
+  excluded; the outputs are asserted bit-exact (same O, same generators,
+  same coefficients, same MSEs).
+* **steady-state recompiles** — a second fused fit must report
+  ``stats["recompiles"] == 0``.
+* **wavefront term evaluation** — ``evaluate_terms`` (degree-wavefront) vs
+  the sequential ``fori_loop`` on a fitted model with ``|O| >= 100`` at
+  q=10k rows (the serving-latency win used by ``api.feature_transform``).
+
+Emits ``results/BENCH_fit.json`` (``bench.v1`` schema).
+
+    PYTHONPATH=src python -m benchmarks.run --only fit_fused
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ihb as ihb_mod
+from repro.core import oavi, terms as terms_mod
+from repro.core.oavi import (
+    Generator,
+    OAVIConfig,
+    _LoopState,
+    _SOLVER_FNS,
+    _append_columns,
+    evaluate_terms_sequential,
+    make_wavefront_evaluator,
+)
+from repro.core.ordering import pearson_order
+from repro.core.transform import MinMaxScaler
+from repro.data.synthetic import appendix_c, random_cube
+
+from .common import Reporter, timeit, write_bench_json
+
+LEGACY_CAP_TERMS = 256  # the pre-PR default initial (and usually only) Lcap
+
+
+# ---------------------------------------------------------------------------
+# Pre-PR reference: inline jnp Gram matmuls + full 3-factor IHB state
+# ---------------------------------------------------------------------------
+
+
+def _make_legacy_degree_step(cfg: OAVIConfig):
+    """The pre-PR degree step, verbatim semantics: ``QL = A^T B`` / ``C =
+    B^T B`` as inline jnp matmuls over the full capacity buffer, closed-form
+    warm start always computed, and every candidate append updating AtA, N
+    *and* R (the full :class:`IHBState`)."""
+    solver = _SOLVER_FNS[cfg.solver.name]
+    use_chol = cfg.inverse_engine == "chol"
+
+    def degree_step(A, X, state, ell0, parents, vars_, valid, m_total):
+        dtype = A.dtype
+        Lcap = A.shape[1]
+        K = parents.shape[0]
+        psi = jnp.asarray(cfg.psi, dtype)
+        inv_m = jnp.asarray(1.0 / m_total, dtype)
+        one = jnp.asarray(1.0, dtype)
+
+        P = jnp.take(A, parents, axis=1)
+        B = P * jnp.take(X, vars_, axis=1)
+        QL = (A.T @ B) * inv_m
+        C = (B.T @ B) * inv_m
+
+        def body(a, st):
+            q = QL[:, a]
+            appended_before = (jnp.arange(K) < a) & (~st.accepted) & (st.slots < Lcap) & valid
+            safe_slots = jnp.where(appended_before, st.slots, 0)
+            q = q.at[safe_slots].add(jnp.where(appended_before, C[:, a], 0.0), mode="drop")
+            btb = C[a, a]
+
+            mask = jnp.arange(Lcap) < st.ell
+            if use_chol:
+                y0 = ihb_mod.closed_form_cholesky(st.ihb, q)
+            else:
+                y0 = ihb_mod.closed_form_inverse(st.ihb, q)
+            y0 = jnp.where(mask, y0, 0.0)
+            mse0 = btb + q @ y0
+
+            if cfg.engine == "fast":
+                y, mse_final, it = y0, mse0, jnp.asarray(0, jnp.int32)
+                ihb_live = st.ihb_live
+            else:
+                feasible = jnp.sum(jnp.abs(y0)) <= (cfg.solver.tau - 1.0)
+                use_warm = st.ihb_live & feasible if cfg.ihb else jnp.asarray(False)
+                ihb_live = st.ihb_live & (feasible | jnp.asarray(not cfg.ihb))
+                warm = jnp.where(use_warm, y0, 0.0)
+                res = solver(st.ihb.AtA, q, btb, one, mask, psi, cfg.solver, warm)
+                y, mse_final, it = res.y, res.f, res.iters
+
+            accept = (mse_final <= psi) & valid[a]
+            do_append = (~accept) & valid[a]
+
+            def appended(st_in):
+                new_ihb = ihb_mod.append_column(st_in.ihb, q, btb, st_in.ell)
+                return st_in._replace(
+                    ihb=new_ihb, ell=st_in.ell + 1, slots=st_in.slots.at[a].set(st_in.ell)
+                )
+
+            st = jax.lax.cond(do_append, appended, lambda s: s, st)
+            return st._replace(
+                ihb_live=ihb_live,
+                accepted=st.accepted.at[a].set(accept),
+                coeffs=st.coeffs.at[a].set(jnp.where(accept, y, 0.0)),
+                mses=st.mses.at[a].set(mse_final),
+                iters=st.iters.at[a].set(it),
+            )
+
+        st0 = _LoopState(
+            ihb=state,
+            ell=ell0,
+            ihb_live=jnp.asarray(True),
+            accepted=jnp.zeros((K,), bool),
+            slots=jnp.full((K,), Lcap, jnp.int32),
+            coeffs=jnp.zeros((K, Lcap), dtype),
+            mses=jnp.zeros((K,), dtype),
+            iters=jnp.zeros((K,), jnp.int32),
+        )
+        st = jax.lax.fori_loop(0, K, body, st0)
+        appended = (~st.accepted) & valid & (st.slots < Lcap)
+        A = _append_columns(A, B, st.slots, appended)
+        return A, st
+
+    return degree_step
+
+
+_LEGACY_STEPS = {}  # cfg -> jitted legacy step (so repeat timing excludes compile)
+
+
+def legacy_fit(X, config: OAVIConfig):
+    """The pre-PR fit loop: fixed ``Lcap = 256`` full buffer from the start,
+    full IHB state (all factors), numpy round-trip capacity regrowth."""
+    dtype = config.jax_dtype()
+    X = np.asarray(X)
+    m, n = X.shape
+    perm = None
+    if config.ordering in ("pearson", "reverse_pearson"):
+        perm = pearson_order(X, reverse=(config.ordering == "reverse_pearson"))
+        X = X[:, perm]
+    Xd = jnp.asarray(X, dtype)
+    book = terms_mod.TermBook(n=n)
+    generators: List[Generator] = []
+
+    Lcap = LEGACY_CAP_TERMS
+    A = jnp.zeros((m, Lcap), dtype).at[:, 0].set(1.0)
+    state = ihb_mod.init_state(Lcap, jnp.asarray(1.0, dtype), dtype)
+    ell = 1
+    if config not in _LEGACY_STEPS:
+        _LEGACY_STEPS[config] = jax.jit(_make_legacy_degree_step(config))
+    degree_step = _LEGACY_STEPS[config]
+    degree_times = []
+
+    d = 0
+    while True:
+        d += 1
+        if d > config.max_degree:
+            break
+        border = book.border(d)
+        if not border:
+            break
+        K = len(border)
+        while ell + K > Lcap:  # numpy round-trip regrowth (pre-PR behaviour)
+            Lcap *= 2
+            A = jnp.asarray(np.pad(np.asarray(A), ((0, 0), (0, Lcap - A.shape[1]))))
+            AtA = np.asarray(state.AtA)
+            AtAn = np.zeros((Lcap, Lcap), AtA.dtype)
+            AtAn[: AtA.shape[0], : AtA.shape[1]] = AtA
+            N = np.asarray(state.N)
+            Nn = np.eye(Lcap, dtype=N.dtype)
+            Nn[: N.shape[0], : N.shape[1]] = N
+            R = np.asarray(state.R)
+            Rn = np.eye(Lcap, dtype=R.dtype)
+            Rn[: R.shape[0], : R.shape[1]] = R
+            state = ihb_mod.IHBState(
+                AtA=jnp.asarray(AtAn), N=jnp.asarray(Nn), R=jnp.asarray(Rn)
+            )
+
+        Kcap = max(config.cap_border, 1 << max(K - 1, 1).bit_length())
+        parents = np.zeros((Kcap,), np.int32)
+        vars_ = np.zeros((Kcap,), np.int32)
+        valid = np.zeros((Kcap,), bool)
+        for i, (term, parent, j) in enumerate(border):
+            parents[i] = book.index[parent]
+            vars_[i] = j
+            valid[i] = True
+
+        t0 = time.perf_counter()
+        A, st = degree_step(
+            A, Xd, state, jnp.asarray(ell, jnp.int32), jnp.asarray(parents),
+            jnp.asarray(vars_), jnp.asarray(valid), jnp.asarray(float(m), dtype),
+        )
+        state = st.ihb
+        accepted = np.asarray(st.accepted)
+        mses = np.asarray(st.mses)
+        coeffs = np.asarray(st.coeffs)
+        degree_times.append(time.perf_counter() - t0)
+
+        for i, (term, parent, j) in enumerate(border):
+            if accepted[i]:
+                generators.append(
+                    Generator(
+                        term=term, parent_idx=book.index[parent], var=j,
+                        coeffs=coeffs[i, : len(book)].copy(), mse=float(mses[i]),
+                    )
+                )
+            else:
+                book.append(term, parent, j)
+        ell = len(book)
+
+    model = oavi.OAVIModel(
+        n=n, psi=config.psi, book=book, generators=generators,
+        feature_perm=perm, stats={"degree_times": degree_times}, dtype=config.dtype,
+    )
+    return model
+
+
+def _assert_bit_exact(fused: oavi.OAVIModel, legacy: oavi.OAVIModel):
+    assert fused.book.terms == legacy.book.terms, "term books differ"
+    assert [g.term for g in fused.generators] == [g.term for g in legacy.generators]
+    for gf, gl in zip(fused.generators, legacy.generators):
+        assert np.array_equal(gf.coeffs, gl.coeffs), f"coeffs differ for {gf.term}"
+        assert gf.mse == gl.mse, f"mse differs for {gf.term}: {gf.mse} vs {gl.mse}"
+
+
+def _assert_same_model(fused: oavi.OAVIModel, legacy: oavi.OAVIModel) -> float:
+    """Structure must match exactly; coefficients may carry the fp rounding
+    of the tighter Lcap bucket (different XLA matmul shapes).  Returns the
+    max abs coefficient difference."""
+    assert fused.book.terms == legacy.book.terms, "term books differ"
+    assert [g.term for g in fused.generators] == [g.term for g in legacy.generators]
+    max_diff = 0.0
+    for gf, gl in zip(fused.generators, legacy.generators):
+        if len(gf.coeffs):
+            max_diff = max(max_diff, float(np.abs(gf.coeffs - gl.coeffs).max()))
+        max_diff = max(max_diff, abs(gf.mse - gl.mse))
+    assert max_diff < 1e-4, f"tight-bucket fp drift too large: {max_diff}"
+    return max_diff
+
+
+# ---------------------------------------------------------------------------
+
+
+def run(rep: Reporter, quick: bool = True):
+    sizes = [20_000, 100_000] if quick else [100_000, 500_000, 2_000_000]
+    psi = 0.005
+    cfg = OAVIConfig(psi=psi, engine="fast")
+    # same capacity bucket as the legacy path: isolates the kernel-fused
+    # degree step + slimmed IHB state, which must be *bit*-exact
+    cfg_matched = OAVIConfig(psi=psi, engine="fast", cap_terms=LEGACY_CAP_TERMS)
+    rows = []
+
+    for m in sizes:
+        X, _ = appendix_c(m=m, seed=0)
+        X = MinMaxScaler(dtype="float32").fit_transform(X)
+
+        # warm both paths (compile excluded from the timed runs), and use the
+        # warm-up outputs for the correctness checks
+        fused0 = oavi.fit(X, cfg)
+        legacy0 = legacy_fit(X, cfg)
+        _assert_bit_exact(oavi.fit(X, cfg_matched), legacy0)
+        max_diff = _assert_same_model(fused0, legacy0)
+
+        t_fused = timeit(lambda: oavi.fit(X, cfg), repeat=3)
+        t_legacy = timeit(lambda: legacy_fit(X, cfg), repeat=3)
+        fused1 = oavi.fit(X, cfg)
+        legacy1 = legacy_fit(X, cfg)
+        step_fused = sum(fused1.stats["degree_times"])
+        step_legacy = sum(legacy1.stats["degree_times"])
+
+        row = {
+            "section": "fit",
+            "m": m,
+            "n": X.shape[1],
+            "num_O": fused0.num_O,
+            "num_G": fused0.num_G,
+            "t_fit_fused_s": round(t_fused, 4),
+            "t_fit_legacy_s": round(t_legacy, 4),
+            "fit_speedup": round(t_legacy / max(t_fused, 1e-9), 2),
+            "t_step_fused_s": round(step_fused, 4),
+            "t_step_legacy_s": round(step_legacy, 4),
+            "step_speedup": round(step_legacy / max(step_fused, 1e-9), 2),
+            "degree_times_fused": [round(t, 4) for t in fused1.stats["degree_times"]],
+            "degree_times_legacy": [round(t, 4) for t in legacy1.stats["degree_times"]],
+            "recompiles_warm": fused1.stats["recompiles"],
+            "bit_exact_matched_cap": True,
+            "max_coeff_diff_tight_bucket": max_diff,
+        }
+        rows.append(row)
+        rep.add("fit_fused", **{k: v for k, v in row.items() if not k.startswith("degree_times")})
+        assert fused1.stats["recompiles"] == 0, "steady-state fit recompiled"
+
+    # ---- wavefront term evaluation on a wide fitted model (|O| >= 100) ----
+    Xw = random_cube(m=2000, n=7, seed=0)
+    wide = oavi.fit(Xw, OAVIConfig(psi=1e-5, engine="fast", max_degree=3))
+    parents, vars_ = wide.term_arrays()
+    q = 10_000
+    Z = jnp.asarray(random_cube(m=q, n=7, seed=1))
+    pj, vj = jnp.asarray(parents), jnp.asarray(vars_)
+    wavefront = make_wavefront_evaluator(parents, vars_)
+    sequential = jax.jit(evaluate_terms_sequential)
+    np.testing.assert_array_equal(
+        np.asarray(wavefront(Z)), np.asarray(sequential(Z, pj, vj))
+    )
+    t_wave = timeit(lambda: jax.block_until_ready(wavefront(Z)), repeat=5)
+    t_seq = timeit(lambda: jax.block_until_ready(sequential(Z, pj, vj)), repeat=5)
+    row = {
+        "section": "transform_wavefront",
+        "q": q,
+        "num_O": wide.num_O,
+        "max_degree": int(max(terms_mod.degree(t) for t in wide.book.terms)),
+        "t_wavefront_s": round(t_wave, 5),
+        "t_sequential_s": round(t_seq, 5),
+        "speedup": round(t_seq / max(t_wave, 1e-9), 2),
+        "bit_exact": True,
+    }
+    rows.append(row)
+    rep.add("fit_fused", **row)
+
+    write_bench_json(
+        "fit",
+        rows,
+        meta={"psi": psi, "engine": "fast", "legacy_cap_terms": LEGACY_CAP_TERMS,
+              "quick": quick, "backend": jax.default_backend()},
+    )

@@ -9,11 +9,10 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core.pipeline import PipelineConfig, VanishingIdealClassifier
 from repro.core.svm import PolySVM, PolySVMConfig
-from repro.data.synthetic import appendix_c, train_test_split, uci_like
+from repro.data.synthetic import train_test_split, uci_like
 
 from .common import Reporter
 

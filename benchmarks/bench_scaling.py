@@ -17,12 +17,13 @@ from repro.core.oracles import OracleConfig
 from repro.core.transform import MinMaxScaler
 from repro.data.synthetic import appendix_c
 
-from .common import Reporter, timeit
+from .common import Reporter, timeit, write_bench_json
 
 
 def run(rep: Reporter, quick: bool = True):
     sizes = [1000, 4000, 16000] if quick else [4000, 16000, 64000, 256000, 1000000, 2000000]
     psi = 0.005
+    rows = []
     times = {k: [] for k in ["cgavi-ihb", "agdavi-ihb", "abm", "vca"]}
     for m in sizes:
         X, _ = appendix_c(m=m, seed=0)
@@ -49,6 +50,7 @@ def run(rep: Reporter, quick: bool = True):
         t = timeit(lambda: vca.fit(X, vca.VCAConfig(psi=psi)))
         row["t_vca"] = round(t, 3)
         times["vca"].append(t)
+        rows.append(dict(row))
         rep.add("fig4_scaling", **row)
 
     # log-log slope over the measured range (linear-in-m => slope ~<= 1)
@@ -56,4 +58,7 @@ def run(rep: Reporter, quick: bool = True):
     for name, ts in times.items():
         if len(ts) >= 2:
             slope = float(np.polyfit(lm, np.log(np.maximum(ts, 1e-4)), 1)[0])
+            rows.append({"method": name, "loglog_slope": round(slope, 3)})
             rep.add("fig4_slope", method=name, loglog_slope=round(slope, 3))
+
+    write_bench_json("scaling", rows, meta={"psi": psi, "quick": quick})

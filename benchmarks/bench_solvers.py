@@ -6,7 +6,6 @@ Reproduces the paper's claim that replacing PCG with BPCG speeds up OAVI
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro import api
 from repro.core.transform import MinMaxScaler

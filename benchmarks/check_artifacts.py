@@ -1,0 +1,53 @@
+"""Validate the ``BENCH_*.json`` artifacts a benchmark run must emit.
+
+Used by ``make bench-smoke``: after running the smoke benchmark subset, this
+fails (exit 1) if any expected artifact is missing or malformed — missing
+file, unparsable JSON, wrong schema tag, or an empty ``rows`` list.
+
+    PYTHONPATH=src python -m benchmarks.check_artifacts fit transform scaling
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+SCHEMA = "bench.v1"
+DEFAULT_NAMES = ["fit", "transform", "scaling"]
+
+
+def check(name: str, out_dir: str = "results") -> str:
+    """Returns an error string, or '' when the artifact is well-formed."""
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    if not os.path.exists(path):
+        return f"{path}: missing"
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return f"{path}: unreadable ({e})"
+    if payload.get("schema") != SCHEMA:
+        return f"{path}: schema={payload.get('schema')!r}, expected {SCHEMA!r}"
+    if payload.get("bench") != name:
+        return f"{path}: bench={payload.get('bench')!r}, expected {name!r}"
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return f"{path}: empty or non-list rows"
+    if not all(isinstance(r, dict) for r in rows):
+        return f"{path}: non-dict row"
+    return ""
+
+
+def main(argv=None) -> int:
+    names = (argv if argv is not None else sys.argv[1:]) or DEFAULT_NAMES
+    errors = [e for e in (check(n) for n in names) if e]
+    for e in errors:
+        print(f"BENCH artifact check FAILED: {e}", file=sys.stderr)
+    if not errors:
+        print(f"BENCH artifacts OK: {', '.join('BENCH_' + n + '.json' for n in names)}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,7 +20,6 @@ import dataclasses
 import json
 import time
 
-import jax
 
 from repro import configs
 from repro.launch import dryrun as D

@@ -9,7 +9,7 @@ from __future__ import annotations
 import json
 import os
 
-from .roofline import ICI_BW, HBM_BW, PEAK_FLOPS, analyse
+from .roofline import analyse
 
 
 def main():

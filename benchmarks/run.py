@@ -15,6 +15,7 @@ import time
 from . import (
     bench_ablation,
     bench_bound,
+    bench_fit,
     bench_ihb,
     bench_ordering,
     bench_performance,
@@ -34,6 +35,7 @@ BENCHES = {
     "table3_performance": bench_performance.run,
     "ablation_psi": bench_ablation.run,
     "transform_fused": bench_transform.run,
+    "fit_fused": bench_fit.run,
     "roofline": roofline.run,
 }
 

@@ -55,7 +55,7 @@ from .core import abm as abm_mod
 from .core import distributed as distributed_mod
 from .core import oavi as oavi_mod
 from .core import vca as vca_mod
-from .core.oavi import OAVIModel, evaluate_terms
+from .core.oavi import OAVIModel, apply_wavefronts, wavefront_schedule
 from .core.oracles import OracleConfig
 from .core.transform import feature_transform as _legacy_feature_transform
 from .core.vca import VCAModel
@@ -463,19 +463,51 @@ def _fuse(models: Sequence) -> Optional[_FusedPlan]:
     )
 
 
-@jax.jit
-def _fused_eval(Z, parents, vars_, C, gp, gv):
-    cols = evaluate_terms(Z, parents, vars_)  # (q, L)
-    lead = jnp.take(cols, gp, axis=1) * jnp.take(Z, gv, axis=1)
-    return jnp.abs(cols @ C + lead)
+def _make_fused_eval(plan: "_FusedPlan"):
+    """Jitted fused (FT) evaluation for one plan: a degree-wavefront term
+    sweep (all terms of a degree in one batched select-matmul step —
+    O(max_degree) sequential steps instead of O(|O|)) plus one matmul.
+
+    The fused multi-book column order is not degree-grouped, so instead of
+    permuting the wavefront output at runtime we fold the permutation into
+    the plan constants: the generator matrix rows are pre-gathered into
+    wavefront order and the leading-term selection is a one-hot matmul —
+    the whole transform is matmuls, no runtime gathers.
+    """
+    waves, perm = wavefront_schedule(plan.parents, plan.vars)
+    L = int(np.asarray(plan.parents).shape[0])
+    k = plan.C.shape[1]
+    if perm is not None:
+        # cols_original = cols_wave[:, perm]  =>  cols_original @ C ==
+        # cols_wave @ C[order] with order = argsort(perm)
+        order = np.argsort(perm)
+        C_w = np.ascontiguousarray(plan.C[order])
+        gp_w = perm[plan.gp]  # original index -> wavefront column
+    else:
+        C_w = plan.C
+        gp_w = plan.gp
+    GPsel = np.zeros((L, k), np.float32)
+    GPsel[gp_w, np.arange(k)] = 1.0
+    gv = np.asarray(plan.gv)
+
+    @jax.jit
+    def fused_eval(Z):
+        cols = apply_wavefronts(Z, waves)  # (q, L) in wavefront order
+        GVsel = np.zeros((Z.shape[1], k), np.float32)
+        GVsel[gv, np.arange(k)] = 1.0
+        lead = (cols @ jnp.asarray(GPsel, Z.dtype)) * (Z @ jnp.asarray(GVsel, Z.dtype))
+        return jnp.abs(cols @ jnp.asarray(C_w, Z.dtype) + lead)
+
+    return fused_eval
 
 
-def _fused_plan_and_args(models: Sequence):
-    """Fused plan + device-resident plan arrays, cached on the first model.
+def _fused_plan_and_eval(models: Sequence):
+    """Fused plan and its jitted wavefront evaluator, cached on the first
+    model.
 
     The plan depends only on the fitted models, so serving loops calling
     :func:`feature_transform` repeatedly skip the per-call plan assembly and
-    host->device upload.  The cache entry holds strong references to the
+    trace-constant upload.  The cache entry holds strong references to the
     models, which keeps their ids unique for as long as the key is live.
     """
     key = tuple(id(m) for m in models)
@@ -485,15 +517,9 @@ def _fused_plan_and_args(models: Sequence):
     plan = _fuse(models)
     if plan is None:
         return None, None
-    args = (
-        jnp.asarray(plan.parents),
-        jnp.asarray(plan.vars),
-        jnp.asarray(plan.C),
-        jnp.asarray(plan.gp),
-        jnp.asarray(plan.gv),
-    )
-    models[0].__dict__["_fused_plan_cache"] = (key, tuple(models), plan, args)
-    return plan, args
+    fn = _make_fused_eval(plan)
+    models[0].__dict__["_fused_plan_cache"] = (key, tuple(models), plan, fn)
+    return plan, fn
 
 
 def feature_transform(
@@ -521,7 +547,7 @@ def feature_transform(
         raise ValueError(f"batch_size must be a positive integer, got {batch_size}")
     if out_sharding is None and models:
         out_sharding = getattr(models[0], "transform_out_sharding", None)
-    plan, args = _fused_plan_and_args(models) if models else (None, None)
+    plan, fused_eval = _fused_plan_and_eval(models) if models else (None, None)
     if plan is None:
         out = _legacy_feature_transform(models, Z, dtype=dtype)
         return jax.device_put(out, out_sharding) if out_sharding is not None else out
@@ -533,7 +559,7 @@ def feature_transform(
         return jax.device_put(out, out_sharding) if out_sharding is not None else out
     Zd = Z.astype(plan.dtype, copy=False)
     if batch_size is None or batch_size >= q:
-        out = _fused_eval(jnp.asarray(Zd), *args)
+        out = fused_eval(jnp.asarray(Zd))
         if out_sharding is not None:
             return jax.device_put(out, out_sharding)
         return np.asarray(out).astype(out_dtype, copy=False)
@@ -543,9 +569,9 @@ def feature_transform(
         if chunk.shape[0] < batch_size:  # pad trailing chunk: one trace only
             pad = np.zeros((batch_size, Z.shape[1]), plan.dtype)
             pad[: chunk.shape[0]] = chunk
-            res = _fused_eval(jnp.asarray(pad), *args)[: chunk.shape[0]]
+            res = fused_eval(jnp.asarray(pad))[: chunk.shape[0]]
         else:
-            res = _fused_eval(jnp.asarray(chunk), *args)
+            res = fused_eval(jnp.asarray(chunk))
         out[start : start + batch_size] = np.asarray(res).astype(
             out_dtype, copy=False
         )

@@ -42,6 +42,24 @@ def _leaf_paths(tree) -> Tuple[Any, list]:
     return treedef, leaves
 
 
+def _encode_leaf(arr: np.ndarray) -> Tuple[np.ndarray, Optional[str]]:
+    """``np.save`` cannot round-trip ml_dtypes extension types (bfloat16,
+    fp8).  Upcast those to float32 — lossless, every extension value is
+    exactly representable — and record the original dtype so restore can
+    cast back bit-exactly."""
+    if arr.dtype.kind == "V" or arr.dtype.name.startswith(("bfloat", "float8")):
+        return arr.astype(np.float32), arr.dtype.name
+    return arr, None
+
+
+def _decode_leaf(arr: np.ndarray, stored_as: Optional[str]) -> np.ndarray:
+    if stored_as is None:
+        return arr
+    import jax.numpy as jnp
+
+    return arr.astype(np.dtype(jnp.dtype(stored_as)))
+
+
 def save(directory: str, step: int, tree, metadata: Optional[Dict] = None) -> str:
     """Synchronous atomic save.  Returns the committed checkpoint path."""
     os.makedirs(directory, exist_ok=True)
@@ -55,8 +73,12 @@ def save(directory: str, step: int, tree, metadata: Optional[Dict] = None) -> st
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
-        entries.append({"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        encoded, stored_as = _encode_leaf(arr)
+        np.save(os.path.join(tmp, fname), encoded)
+        entry = {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        if stored_as is not None:
+            entry["extension_dtype"] = stored_as
+        entries.append(entry)
     manifest = {
         "step": step,
         "treedef": str(treedef),
@@ -142,7 +164,8 @@ def restore(
             f"checkpoint has {manifest['num_leaves']} leaves, expected {treedef.num_leaves}"
         )
     arrs = [
-        np.load(os.path.join(path, e["file"])) for e in manifest["leaves"]
+        _decode_leaf(np.load(os.path.join(path, e["file"])), e.get("extension_dtype"))
+        for e in manifest["leaves"]
     ]
     tree = jax.tree.unflatten(treedef, arrs)
     if shardings is not None:

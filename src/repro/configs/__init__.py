@@ -7,7 +7,7 @@
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Dict
 
 from ..models.model import ModelConfig
 from . import (

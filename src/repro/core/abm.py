@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import List
 
 import jax

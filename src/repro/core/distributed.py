@@ -5,9 +5,11 @@ distribution.  With the sample axis ``m`` sharded over the mesh's data axes:
 
 * step (1) — candidate-column construction ``B = A[:, parents] * X[:, vars]``
   is purely local (elementwise on the local shard),
-* step (2) — the two Gram matmuls ``A^T B`` (L x K) and ``B^T B`` (K x K) are
-  local matmuls followed by a ``psum`` over the data axes.  These psums are
-  the *only* collectives: O(L*K + K*K) floats per degree, independent of m.
+* step (2) — the two Gram products run through the fused
+  :func:`repro.kernels.ops.gram_update` kernel on each device's local shard
+  (Pallas on TPU, the bit-identical jnp fallback elsewhere), followed by a
+  ``psum`` over the data axes.  These psums are the *only* collectives:
+  O(L*K + K*K) floats per degree, independent of m.
 * step (3) — the sequential acceptance loop runs on the replicated Gram
   blocks, bit-identically on every device; appended columns are written back
   into the *local* shard of A.
@@ -15,6 +17,11 @@ distribution.  With the sample axis ``m`` sharded over the mesh's data axes:
 Weak scaling is therefore exact: per-device FLOPs are O((m/devices) * L * K)
 and collective bytes are m-independent — the distributed embodiment of the
 paper's "linear in m" claim (Theorem 4.3 keeps L bounded).
+
+Capacity growth and compiles follow :mod:`repro.core.oavi`: pow2 ``(Lcap,
+Kcap)`` buckets, device-side regrowth, and a global cache of the jitted
+sharded step keyed by ``(config, mesh, data_axes)`` — ``stats["recompiles"]``
+counts the compiles a fit actually triggered.
 
 Padding: ``m`` is padded up to a multiple of the number of data shards; the
 constant-1 column is built as the *sample mask*, so padded rows are exactly
@@ -24,10 +31,8 @@ with data columns) and contribute nothing to any Gram quantity.
 
 from __future__ import annotations
 
-import dataclasses
 import time
-from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,8 +55,11 @@ from .oavi import (
     Generator,
     OAVIConfig,
     OAVIModel,
-    _grow,
     _make_degree_step,
+    border_index_arrays,
+    collect_degree,
+    degree_step_entry,
+    pow2_bucket,
 )
 from .ordering import pearson_order
 
@@ -126,7 +134,7 @@ def fit(
     book = terms_mod.TermBook(n=n)
     generators: List[Generator] = []
 
-    Lcap = int(config.cap_terms)
+    Lcap = pow2_bucket(config.cap_terms)
     dspec = _data_spec(data_axes)
     a_shard = NamedSharding(mesh, dspec)
     rep = NamedSharding(mesh, P())
@@ -134,16 +142,27 @@ def fit(
     A = jnp.zeros((m_pad, Lcap), dtype).at[:, 0:1].set(mask)
     A = jax.device_put(A, a_shard)
     # normalized convention: AtA[0,0] = ||mask||^2 / m = 1
-    state = ihb_mod.init_state(Lcap, jnp.asarray(1.0, dtype), dtype)
+    state = ihb_mod.init_state(
+        Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
+    )
     state = jax.device_put(state, rep)
     ell = 1
 
-    degree_step = make_sharded_degree_step(config, mesh, data_axes)
+    axes = tuple(data_axes)
+    entry = degree_step_entry(
+        config,
+        backend_key=(mesh, axes),
+        jitted_builder=lambda: make_sharded_degree_step(config, mesh, axes),
+    )
+    m_total = jnp.asarray(float(m_true), dtype)
 
     stats = {
         "border_sizes": [],
         "solver_iters": [],
         "degrees": [],
+        "degree_times": [],
+        "recompiles": 0,
+        "regrowths": 0,
         "m": m_true,
         "m_padded": m_pad,
         "n": n,
@@ -165,34 +184,28 @@ def fit(
         stats["border_sizes"].append(K)
         stats["degrees"].append(d)
 
+        # capacity management: device-side regrowth into the next pow2 bucket
         while ell + K > Lcap:
             Lcap *= 2
-            A = jax.device_put(jnp.asarray(_grow(np.asarray(A), 1, Lcap)), a_shard)
-            AtA = _grow(np.asarray(state.AtA), 0, Lcap)
-            AtA = _grow(AtA, 1, Lcap)
-            N = np.asarray(state.N)
-            Nn = np.eye(Lcap, dtype=N.dtype)
-            Nn[: N.shape[0], : N.shape[1]] = N
-            R = np.asarray(state.R)
-            Rn = np.eye(Lcap, dtype=R.dtype)
-            Rn[: R.shape[0], : R.shape[1]] = R
-            state = jax.device_put(
-                ihb_mod.IHBState(
-                    AtA=jnp.asarray(AtA), N=jnp.asarray(Nn), R=jnp.asarray(Rn)
+            stats["regrowths"] += 1
+            A = jax.device_put(
+                jax.lax.dynamic_update_slice(
+                    jnp.zeros((m_pad, Lcap), dtype), A, (0, 0)
                 ),
-                rep,
+                a_shard,
             )
+            state = jax.device_put(ihb_mod.grow_state(state, Lcap), rep)
 
-        Kcap = max(config.cap_border, 1 << (K - 1).bit_length())
-        parents = np.zeros((Kcap,), np.int32)
-        vars_ = np.zeros((Kcap,), np.int32)
-        valid = np.zeros((Kcap,), bool)
-        for i, (term, parent, j) in enumerate(border):
-            parents[i] = book.index[parent]
-            vars_[i] = j
-            valid[i] = True
+        Kcap = max(config.cap_border, pow2_bucket(K))
+        parents, vars_, valid = border_index_arrays(book, border, Kcap)
 
-        A, st = degree_step(
+        sig = (m_pad, n, Lcap, Kcap, str(dtype))
+        if sig not in entry.seen:
+            entry.seen.add(sig)
+            stats["recompiles"] += 1
+
+        t_deg = time.perf_counter()
+        A, st = entry.fn(
             A,
             Xd,
             state,
@@ -200,33 +213,22 @@ def fit(
             jnp.asarray(parents),
             jnp.asarray(vars_),
             jnp.asarray(valid),
-            jnp.asarray(float(m_true), dtype),
+            m_total,
         )
         state = st.ihb
         accepted = np.asarray(st.accepted)
         mses = np.asarray(st.mses)
         coeffs = np.asarray(st.coeffs)
+        stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
         stats["solver_iters"].append(int(np.asarray(st.iters)[:K].sum()))
 
-        for i, (term, parent, j) in enumerate(border):
-            if accepted[i]:
-                generators.append(
-                    Generator(
-                        term=term,
-                        parent_idx=book.index[parent],
-                        var=j,
-                        coeffs=coeffs[i, : len(book)].copy(),
-                        mse=float(mses[i]),
-                    )
-                )
-            else:
-                book.append(term, parent, j)
-        ell = len(book)
+        ell = collect_degree(book, border, accepted, mses, coeffs, generators)
 
     stats["time_total"] = time.perf_counter() - t_start
     stats["num_G"] = len(generators)
     stats["num_O"] = len(book)
     stats["G_plus_O"] = len(generators) + len(book)
+    stats["Lcap_final"] = int(Lcap)
     stats["thm43_bound"] = terms_mod.theorem_4_3_size_bound(config.psi, n)
     return OAVIModel(
         n=n,

@@ -12,34 +12,101 @@ to the identity (so the padded ``N`` is the exact inverse of the padded
 ``A^T A + I_inactive``), which keeps every update a dense masked operation
 that jits once.
 
-Beyond the paper, we also provide a Cholesky-factor engine (maintain the
-upper-triangular ``R`` with ``A^T A = R^T R``; appends are triangular solves)
-whose conditioning is ``kappa(A)`` instead of ``kappa(A)^2`` — recorded as a
-beyond-paper optimization in EXPERIMENTS.md.
+The state is *slimmed to the configured engine*: each of the three factors
+(``AtA`` for the convex oracles, ``N`` for the Theorem 4.9 inverse, ``R``
+for the beyond-paper Cholesky engine) is materialized and updated per
+candidate only when the caller needs it — :func:`factors_for` maps an OAVI
+configuration to its minimal factor set, and :func:`append_column` skips the
+``None`` factors.  The paper-faithful full state (all three) remains the
+default for direct users of this module.
+
+The ``N`` update is dispatched through :func:`repro.kernels.ops.ihb_update`
+(the fused Pallas kernel on TPU, its bit-identical jnp reference elsewhere).
+
+Beyond the paper, the Cholesky-factor engine (maintain the upper-triangular
+``R`` with ``A^T A = R^T R``; appends are triangular solves) has conditioning
+``kappa(A)`` instead of ``kappa(A)^2`` — recorded as a beyond-paper
+optimization in EXPERIMENTS.md.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from ..kernels import ops as kernel_ops
+
 
 class IHBState(NamedTuple):
-    AtA: jax.Array  # (L, L) Gram matrix of active columns (zeros elsewhere)
-    N: jax.Array  # (L, L) inverse of (AtA_active ⊕ I_inactive)
-    R: jax.Array  # (L, L) upper-triangular Cholesky factor (ditto)
+    """Per-factor state; a factor the engine does not need is ``None``
+    (``None`` is an empty pytree node, so slim and full states both jit)."""
+
+    AtA: Optional[jax.Array]  # (L, L) Gram of active columns (zeros elsewhere)
+    N: Optional[jax.Array]  # (L, L) inverse of (AtA_active ⊕ I_inactive)
+    R: Optional[jax.Array]  # (L, L) upper-triangular Cholesky factor (ditto)
 
 
-def init_state(Lcap: int, diag0: jax.Array, dtype=jnp.float32) -> IHBState:
+FACTORS_ALL: Tuple[str, ...] = ("ata", "n", "r")
+
+
+def factors_for(
+    engine: str,
+    inverse_engine: str = "inverse",
+    warm: bool = True,
+    wihb: bool = False,
+):
+    """Minimal factor set for an OAVI configuration.
+
+    * ``AtA`` — the Gram matrix itself is only needed as a solver Hessian:
+      by the convex oracles (``engine='oracle'``) and by the WIHB sparse
+      re-solve (``wihb``, which runs BPCG regardless of engine).
+    * ``N`` / ``R`` — one of them backs the closed-form optimum: always for
+      ``engine='fast'``, and for the oracle engine only when IHB warm starts
+      are on (``warm``).
+    """
+    need = []
+    if engine == "oracle" or wihb:
+        need.append("ata")
+    if engine == "fast" or warm:
+        need.append("r" if inverse_engine == "chol" else "n")
+    return tuple(need)
+
+
+def init_state(Lcap: int, diag0: jax.Array, dtype=jnp.float32,
+               factors: Tuple[str, ...] = FACTORS_ALL) -> IHBState:
     """State after the constant-1 column: AtA[0,0] = ||1||^2 = m."""
     eye = jnp.eye(Lcap, dtype=dtype)
-    AtA = jnp.zeros((Lcap, Lcap), dtype).at[0, 0].set(diag0)
-    N = eye.at[0, 0].set(1.0 / diag0)
-    R = eye.at[0, 0].set(jnp.sqrt(diag0))
+    AtA = (
+        jnp.zeros((Lcap, Lcap), dtype).at[0, 0].set(diag0)
+        if "ata" in factors else None
+    )
+    N = eye.at[0, 0].set(1.0 / diag0) if "n" in factors else None
+    R = eye.at[0, 0].set(jnp.sqrt(diag0)) if "r" in factors else None
     return IHBState(AtA=AtA, N=N, R=R)
+
+
+def grow_state(state: IHBState, new_L: int) -> IHBState:
+    """Double capacity device-side: each present factor is embedded into its
+    padded identity/zero block with one ``dynamic_update_slice`` — no host
+    numpy round-trip, so regrowth costs O(L^2) device work only."""
+
+    def embed(M, identity: bool):
+        if M is None:
+            return None
+        base = (
+            jnp.eye(new_L, dtype=M.dtype)
+            if identity else jnp.zeros((new_L, new_L), M.dtype)
+        )
+        return jax.lax.dynamic_update_slice(base, M, (0, 0))
+
+    return IHBState(
+        AtA=embed(state.AtA, identity=False),
+        N=embed(state.N, identity=True),
+        R=embed(state.R, identity=True),
+    )
 
 
 def closed_form_inverse(state: IHBState, q: jax.Array) -> jax.Array:
@@ -68,38 +135,42 @@ def append_column(
     btb: jax.Array,  # ||b||^2
     ell: jax.Array,  # current active count == index where b lands
 ) -> IHBState:
-    """Theorem 4.9 block inverse update + Cholesky append, both O(l^2)."""
-    dtype = state.N.dtype
-    Lcap = state.N.shape[0]
+    """Theorem 4.9 block inverse update + Cholesky append, both O(l^2).
+
+    Only the factors present in ``state`` are updated (``None`` stays
+    ``None``) — the per-candidate cost tracks the configured engine instead
+    of always paying for all three factors.
+    """
+    dtype = q.dtype
+    Lcap = q.shape[0]
     onehot = (jnp.arange(Lcap) == ell).astype(dtype)
-
-    # ---- AtA update: add row/col ell = (q, btb)
-    AtA = (
-        state.AtA
-        + jnp.outer(onehot, q)
-        + jnp.outer(q, onehot)
-        + btb * jnp.outer(onehot, onehot)
-    )
-
-    # ---- inverse update (Thm 4.9).  u = N q, s = btb - q^T u (Schur compl.)
-    u = state.N @ q
-    s = btb - q @ u
-    s = jnp.maximum(s, jnp.asarray(1e-30, dtype))  # guarded; caller checks s
-    P = state.N + jnp.outer(u, u) / s
-    # zero out row/col ell (currently identity), then write n2 / n3 blocks
     keep = 1.0 - onehot
-    P = P * keep[:, None] * keep[None, :]
-    n2 = -u / s  # (zero outside active block since u is)
-    N = P + jnp.outer(onehot, n2) + jnp.outer(n2, onehot) + (1.0 / s) * jnp.outer(onehot, onehot)
 
-    # ---- Cholesky append: R^T r = q ; rho = sqrt(btb - r^T r)
-    r = solve_triangular(state.R, q, trans=1, lower=False)
-    r = r * keep  # the inactive identity block must not leak into r
-    rho2 = jnp.maximum(btb - r @ r, jnp.asarray(1e-30, dtype))
-    rho = jnp.sqrt(rho2)
-    col = r + rho * onehot
-    # overwrite column ell of R (previously e_ell from the identity padding)
-    R = state.R * (1.0 - onehot)[None, :] + jnp.outer(col, onehot)
+    AtA = N = R = None
+
+    if state.AtA is not None:
+        # ---- AtA update: add row/col ell = (q, btb)
+        AtA = (
+            state.AtA
+            + jnp.outer(onehot, q)
+            + jnp.outer(q, onehot)
+            + btb * jnp.outer(onehot, onehot)
+        )
+
+    if state.N is not None:
+        # ---- inverse update (Thm 4.9) — the fused kernel on TPU, its
+        # bit-identical jnp reference elsewhere.
+        N = kernel_ops.ihb_update(state.N, q, btb, ell)
+
+    if state.R is not None:
+        # ---- Cholesky append: R^T r = q ; rho = sqrt(btb - r^T r)
+        r = solve_triangular(state.R, q, trans=1, lower=False)
+        r = r * keep  # the inactive identity block must not leak into r
+        rho2 = jnp.maximum(btb - r @ r, jnp.asarray(1e-30, dtype))
+        rho = jnp.sqrt(rho2)
+        col = r + rho * onehot
+        # overwrite column ell of R (previously e_ell from the identity padding)
+        R = state.R * (1.0 - onehot)[None, :] + jnp.outer(col, onehot)
 
     return IHBState(AtA=AtA, N=N, R=R)
 

@@ -8,7 +8,10 @@ hundred items, Theorem 4.3), jitted JAX owns the *linear algebra*.  Per degree
 
 1.  Candidate columns ``B = A[:, parents] * X[:, vars]``  (gather + product)
 2.  Gram blocks   ``QL = A^T B`` (L x K) and ``C = B^T B`` (K x K)
-    — these two matmuls are the *only* O(m) work in the whole degree.
+    — these two matmuls are the *only* O(m) work in the whole degree.  They
+    are computed by :func:`repro.kernels.ops.gram_update`: the fused Pallas
+    kernel on TPU (border evaluation + both Grams in one VMEM-resident
+    sweep), the bit-identical gather+matmul reference elsewhere.
 3.  A small ``fori_loop`` over the K candidates replays the exact sequential
     semantics of Algorithm 1 (a term appended to O changes A for all later
     candidates of the same degree) using only the precomputed Gram blocks:
@@ -22,6 +25,15 @@ distribution: with X sharded over samples, step (1)+(2) are local matmuls
 followed by a psum of (L x K) + (K x K) buffers (see
 :mod:`repro.core.distributed`).
 
+Capacities and recompiles
+-------------------------
+``|O|`` capacity (``Lcap``) and border capacity (``Kcap``) are power-of-two
+buckets; regrowth happens device-side (``dynamic_update_slice`` into padded
+buffers, no host round-trip) and the jitted degree step is cached *globally*
+per config, so the steady state compiles exactly once per ``(Lcap, Kcap)``
+bucket — ``stats["recompiles"]`` counts the compiles a fit actually
+triggered, and benchmarks assert it stays at zero once warm.
+
 Engines
 -------
 * ``engine='oracle'`` — paper-faithful: each candidate is decided by the
@@ -29,26 +41,39 @@ Engines
   IHB (CGAVI-IHB / AGDAVI-IHB), optionally re-solved sparsely (WIHB).
 * ``engine='fast'``  — beyond-paper: pure closed-form IHB decisions
   (exact unconstrained optima; equals AGDAVI-IHB with an accurate oracle).
+
+The IHB state is slimmed to the engine: only the factor the configured
+``inverse_engine`` needs is materialized and updated per candidate (``N`` or
+``R``; ``AtA`` only for the convex oracles) — see
+:func:`repro.core.ihb.factors_for`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
+from collections import OrderedDict
 from functools import partial
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as kernel_ops
 from . import ihb as ihb_mod
 from . import terms as terms_mod
-from .oracles import OracleConfig, SolveResult, quad_f, solve_agd, solve_bpcg, solve_cg, solve_pcg
+from .oracles import OracleConfig, solve_agd, solve_bpcg, solve_cg, solve_pcg
 from .ordering import pearson_order
 
 _SOLVER_FNS = {"agd": solve_agd, "cg": solve_cg, "pcg": solve_pcg, "bpcg": solve_bpcg}
+
+
+def _np_dtype(dtype) -> np.dtype:
+    """``np.dtype`` for possibly-extension dtype names (``"bfloat16"``):
+    plain numpy only understands those once ml_dtypes is registered, which
+    routing through ``jnp.dtype`` guarantees."""
+    return np.dtype(jnp.dtype(dtype))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,14 +85,22 @@ class OAVIConfig:
     wihb: bool = False  # re-solve accepted generators sparsely (BPCGAVI-WIHB)
     inverse_engine: str = "inverse"  # 'inverse' (Thm 4.9) | 'chol' (beyond-paper)
     max_degree: int = 10
-    cap_terms: int = 256  # initial capacity for |O|; grows on demand
+    cap_terms: int = 64  # initial |O| capacity bucket; grows device-side
     cap_border: int = 64  # initial border capacity; grows on demand
     dtype: str = "float32"
     ordering: str = "pearson"  # 'pearson' | 'none' | 'reverse_pearson'
     tol_dependent: float = 1e-9  # Schur-complement guard (relative)
+    # Gram kernel dispatch: 'auto' (Pallas on TPU, jnp elsewhere), 'pallas',
+    # 'interpret' (Pallas in interpreter mode — tests), 'jnp' (force fallback)
+    kernel: str = "auto"
 
     def jax_dtype(self):
         return jnp.dtype(self.dtype)
+
+    def ihb_factors(self) -> Tuple[str, ...]:
+        return ihb_mod.factors_for(
+            self.engine, self.inverse_engine, self.ihb, self.wihb
+        )
 
 
 class Generator(NamedTuple):
@@ -107,7 +140,7 @@ class OAVIModel:
     def generator_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         k = len(self.generators)
         ell = len(self.book)
-        C = np.zeros((ell, k), dtype=self.dtype)
+        C = np.zeros((ell, k), dtype=_np_dtype(self.dtype))
         gp = np.zeros((k,), dtype=np.int32)
         gv = np.zeros((k,), dtype=np.int32)
         for j, g in enumerate(self.generators):
@@ -117,11 +150,9 @@ class OAVIModel:
         return C, gp, gv
 
     def evaluate_O(self, Z: jax.Array) -> jax.Array:
-        """Evaluation matrix O(Z): (q, |O|)."""
+        """Evaluation matrix O(Z): (q, |O|) — degree-wavefront evaluation."""
         parents, vars_ = self.term_arrays()
-        return evaluate_terms(
-            jnp.asarray(Z, self.dtype), jnp.asarray(parents), jnp.asarray(vars_)
-        )
+        return evaluate_terms(jnp.asarray(Z, self.dtype), parents, vars_)
 
     def evaluate_G(self, Z: jax.Array) -> jax.Array:
         """Evaluation matrix G(Z): (q, |G|).  Theorem 4.2 machinery."""
@@ -153,7 +184,7 @@ class OAVIModel:
         parents, vars_ = self.term_arrays()
         k = len(self.generators)
         L = len(self.book)
-        coeffs = np.zeros((k, L), dtype=self.dtype)
+        coeffs = np.zeros((k, L), dtype=_np_dtype(self.dtype))
         lens = np.zeros((k,), np.int32)
         gp = np.zeros((k,), np.int32)
         gv = np.zeros((k,), np.int32)
@@ -200,7 +231,7 @@ class OAVIModel:
             parent = book.terms[int(bp[i])]
             var = int(bv[i])
             book.append(terms_mod.multiply_by_var(parent, var), parent, var)
-        coeffs = np.asarray(arrays["gen_coeffs"]).astype(dtype)
+        coeffs = np.asarray(arrays["gen_coeffs"]).astype(_np_dtype(dtype))
         lens = np.asarray(arrays["gen_lens"]).astype(np.int64)
         gp = np.asarray(arrays["gen_parent"]).astype(np.int64)
         gv = np.asarray(arrays["gen_var"]).astype(np.int64)
@@ -247,8 +278,17 @@ def _append_columns(A, B, slots, appended):
     return A.at[:, safe_slots].add(contrib, mode="drop")
 
 
-def evaluate_terms(Z: jax.Array, parents: jax.Array, vars_: jax.Array) -> jax.Array:
-    """Evaluate all O terms over Z incrementally: col_i = col_parent * Z[:, var]."""
+# ---------------------------------------------------------------------------
+# Term evaluation: degree-wavefront (serving hot path) + sequential reference
+# ---------------------------------------------------------------------------
+
+
+def evaluate_terms_sequential(
+    Z: jax.Array, parents: jax.Array, vars_: jax.Array
+) -> jax.Array:
+    """Sequential reference: col_i = col_parent * Z[:, var], one term at a
+    time (O(|O|) dependent steps).  Works with traced ``parents``/``vars_``;
+    kept as the oracle for the wavefront path and for callers inside jit."""
     q = Z.shape[0]
     ell = parents.shape[0]
     cols0 = jnp.zeros((q, ell), Z.dtype).at[:, 0].set(1.0)
@@ -258,6 +298,117 @@ def evaluate_terms(Z: jax.Array, parents: jax.Array, vars_: jax.Array) -> jax.Ar
         return jax.lax.dynamic_update_slice(cols, col[:, None], (0, i))
 
     return jax.lax.fori_loop(1, ell, body, cols0)
+
+
+def wavefront_schedule(parents, vars_):
+    """Degree-wavefront evaluation plan for a term book.
+
+    A term's parent has *exactly* one degree less (``term = parent * x_var``),
+    so all terms of one degree evaluate in a single batched gather+product
+    over the previous degree's block — O(max_degree) sequential steps instead
+    of O(|O|), and each step only touches two thin blocks.
+
+    Returns ``(waves, perm)``: ``waves[d] = (parent_pos, var)`` with
+    ``parent_pos`` indexing into the degree-``d-1`` block, and ``perm`` the
+    gather restoring original column order after concatenating the blocks
+    (``None`` when the book is already degree-ordered — single-model books).
+    """
+    parents = np.asarray(parents, np.int64)
+    vars_np = np.asarray(vars_, np.int64)
+    L = parents.shape[0]
+    deg = np.zeros((L,), np.int64)
+    for i in range(1, L):
+        deg[i] = deg[parents[i]] + 1
+    waves = []
+    prev_idx = np.zeros((1,), np.int64)  # wave 0: the constant column
+    order = [prev_idx]
+    for d in range(1, int(deg.max()) + 1 if L > 1 else 1):
+        idx = np.nonzero(deg == d)[0]
+        pos = np.searchsorted(prev_idx, parents[idx])
+        assert np.array_equal(prev_idx[pos], parents[idx]), "parent not at degree d-1"
+        waves.append((pos.astype(np.int32), vars_np[idx].astype(np.int32)))
+        order.append(idx)
+        prev_idx = idx
+    order = np.concatenate(order)
+    perm = None if np.array_equal(order, np.arange(L)) else np.argsort(order).astype(np.int32)
+    return tuple(waves), perm
+
+
+def apply_wavefronts(Z, waves, perm=None) -> jax.Array:
+    """Evaluate a wavefront schedule over ``Z``: one select-matmul + product
+    per degree (each reading only the previous degree's block), one concat,
+    and — only for fused multi-book plans — one column permutation.
+
+    The column selections are expressed as one-hot matmuls (the same
+    gather-as-matmul trick as the gram kernel): exact for any dtype (each
+    output sums one value plus hard zeros), MXU-friendly on TPU, and far
+    faster than XLA's scalar gathers on CPU.
+    """
+    prev = jnp.ones((Z.shape[0], 1), Z.dtype)
+    blocks = [prev]
+    prev_size = 1
+    n = Z.shape[1]
+    for pos, var in waves:
+        k = pos.shape[0]
+        Psel = np.zeros((prev_size, k), np.float32)
+        Psel[pos, np.arange(k)] = 1.0
+        Vsel = np.zeros((n, k), np.float32)
+        Vsel[var, np.arange(k)] = 1.0
+        prev = (prev @ jnp.asarray(Psel, Z.dtype)) * (Z @ jnp.asarray(Vsel, Z.dtype))
+        blocks.append(prev)
+        prev_size = k
+    cols = jnp.concatenate(blocks, axis=1) if len(blocks) > 1 else blocks[0]
+    if perm is not None:
+        cols = jnp.take(cols, jnp.asarray(perm), axis=1)
+    return cols
+
+
+# LRU-bounded: a long-lived process fitting many models must not pin one
+# jitted evaluator (closure + compiled executable) per term book forever.
+_WAVEFRONT_CACHE: "OrderedDict[Tuple[bytes, bytes], Callable]" = OrderedDict()
+_WAVEFRONT_CACHE_SIZE = 64
+
+
+def make_wavefront_evaluator(parents, vars_) -> Callable[[jax.Array], jax.Array]:
+    """Jitted ``Z -> O(Z)`` for one (host-side) term book; cached per book so
+    serving loops compile once per model set."""
+    parents = np.asarray(parents, np.int32)
+    vars_np = np.asarray(vars_, np.int32)
+    key = (parents.tobytes(), vars_np.tobytes())
+    fn = _WAVEFRONT_CACHE.get(key)
+    if fn is None:
+        waves, perm = wavefront_schedule(parents, vars_np)
+
+        @jax.jit
+        def fn(Z):
+            return apply_wavefronts(Z, waves, perm)
+
+        _WAVEFRONT_CACHE[key] = fn
+        if len(_WAVEFRONT_CACHE) > _WAVEFRONT_CACHE_SIZE:
+            _WAVEFRONT_CACHE.popitem(last=False)
+    else:
+        _WAVEFRONT_CACHE.move_to_end(key)
+    return fn
+
+
+def evaluate_terms(Z: jax.Array, parents, vars_) -> jax.Array:
+    """Evaluate all O terms over Z incrementally: col_i = col_parent * Z[:, var].
+
+    With concrete (host-side) ``parents``/``vars_`` — the serving case — the
+    degree-wavefront evaluator runs all terms of a degree in one batched
+    step.  Traced index arrays fall back to the sequential loop.
+    """
+    try:
+        parents_np = np.asarray(parents)
+        vars_np = np.asarray(vars_)
+    except Exception:  # traced indices (inside someone else's jit)
+        return evaluate_terms_sequential(Z, parents, vars_)
+    return make_wavefront_evaluator(parents_np, vars_np)(jnp.asarray(Z))
+
+
+# ---------------------------------------------------------------------------
+# The jitted degree step
+# ---------------------------------------------------------------------------
 
 
 class _LoopState(NamedTuple):
@@ -271,13 +422,26 @@ class _LoopState(NamedTuple):
     iters: jax.Array  # (K,) solver iterations (0 for pure closed-form)
 
 
+def _kernel_kwargs(cfg: OAVIConfig) -> Dict:
+    return {
+        "auto": {},
+        "pallas": {"use_pallas": True},
+        "interpret": {"interpret": True},
+        "jnp": {"use_pallas": False},
+    }[cfg.kernel]
+
+
 def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
     """Build the jitted degree step.  ``reduce_fn`` (e.g. a psum) is applied
     to every Gram quantity; None means single-device."""
 
     solver = _SOLVER_FNS[cfg.solver.name]
     use_chol = cfg.inverse_engine == "chol"
+    engine_oracle = cfg.engine == "oracle"
+    # closed-form optimum needed: always for 'fast', as a warm start otherwise
+    need_closed_form = (not engine_oracle) or cfg.ihb
     rfn = reduce_fn if reduce_fn is not None else (lambda x: x)
+    gram_kw = _kernel_kwargs(cfg)
 
     def degree_step(A, X, state: ihb_mod.IHBState, ell0, parents, vars_, valid, m_total):
         dtype = A.dtype
@@ -290,11 +454,14 @@ def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
         inv_m = jnp.asarray(1.0 / m_total, dtype)
         one = jnp.asarray(1.0, dtype)
 
-        # ---- (1)+(2): all O(m) work, as two matmuls -------------------
-        P = jnp.take(A, parents, axis=1)  # (m, K) parent columns
-        B = P * jnp.take(X, vars_, axis=1)  # (m, K) candidate columns
-        QL = rfn(A.T @ B) * inv_m  # (L, K)
-        C = rfn(B.T @ B) * inv_m  # (K, K)
+        # ---- (1)+(2): all O(m) work, in one fused kernel dispatch ------
+        # (Pallas on TPU: border eval + both Grams in a single VMEM sweep;
+        # bit-identical gather+matmul fallback elsewhere.)
+        QL_raw, C_raw = kernel_ops.gram_update(A, X, parents, vars_, **gram_kw)
+        QL = (rfn(QL_raw) * inv_m).astype(dtype)  # (L, K)
+        C = (rfn(C_raw) * inv_m).astype(dtype)  # (K, K)
+        # candidate columns, needed again to scatter appended ones into A
+        B = jnp.take(A, parents, axis=1) * jnp.take(X, vars_, axis=1)
 
         # ---- (3): sequential acceptance over candidates ---------------
         def body(a, st: _LoopState) -> _LoopState:
@@ -306,23 +473,28 @@ def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
             btb = C[a, a]
 
             mask = jnp.arange(Lcap) < st.ell
-            if use_chol:
-                y0 = ihb_mod.closed_form_cholesky(st.ihb, q)
-            else:
-                y0 = ihb_mod.closed_form_inverse(st.ihb, q)
-            y0 = jnp.where(mask, y0, 0.0)
-            mse0 = btb + q @ y0
+            if need_closed_form:
+                if use_chol:
+                    y0 = ihb_mod.closed_form_cholesky(st.ihb, q)
+                else:
+                    y0 = ihb_mod.closed_form_inverse(st.ihb, q)
+                y0 = jnp.where(mask, y0, 0.0)
 
-            if cfg.engine == "fast":
+            if not engine_oracle:
+                mse0 = btb + q @ y0
                 y, mse_final, it = y0, mse0, jnp.asarray(0, jnp.int32)
                 ihb_live = st.ihb_live
             else:
-                # (INF) guard: if the warm start leaves the l1 ball, stop
-                # using IHB from now on (paper §4.4.3, second approach).
-                feasible = jnp.sum(jnp.abs(y0)) <= (cfg.solver.tau - 1.0)
-                use_warm = st.ihb_live & feasible if cfg.ihb else jnp.asarray(False)
-                ihb_live = st.ihb_live & (feasible | jnp.asarray(not cfg.ihb))
-                warm = jnp.where(use_warm, y0, 0.0)
+                if cfg.ihb:
+                    # (INF) guard: if the warm start leaves the l1 ball, stop
+                    # using IHB from now on (paper §4.4.3, second approach).
+                    feasible = jnp.sum(jnp.abs(y0)) <= (cfg.solver.tau - 1.0)
+                    use_warm = st.ihb_live & feasible
+                    ihb_live = st.ihb_live & feasible
+                    warm = jnp.where(use_warm, y0, 0.0)
+                else:
+                    ihb_live = st.ihb_live
+                    warm = jnp.zeros((Lcap,), dtype)
                 res = solver(st.ihb.AtA, q, btb, one, mask, psi, cfg.solver, warm)
                 y, mse_final, it = res.y, res.f, res.iters
 
@@ -381,10 +553,81 @@ def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
     return degree_step
 
 
-def _grow(arr: np.ndarray, axis: int, new_size: int) -> np.ndarray:
-    pad = [(0, 0)] * arr.ndim
-    pad[axis] = (0, new_size - arr.shape[axis])
-    return np.pad(arr, pad)
+# ---------------------------------------------------------------------------
+# Degree-step cache: one jitted step per config, one compile per shape bucket
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _StepEntry:
+    fn: Callable
+    seen: set  # shape signatures already traced by ``fn``
+
+
+_DEGREE_STEP_CACHE: Dict = {}
+
+
+def degree_step_entry(
+    config: OAVIConfig,
+    backend_key=None,
+    jitted_builder: Optional[Callable] = None,
+    factory: Optional[Callable] = None,
+) -> _StepEntry:
+    """Jitted degree step, cached globally per ``(config, backend_key)``.
+
+    ``jax.jit``'s own trace cache buckets on argument shapes; ``seen``
+    mirrors it host-side so fits can count the compiles they actually
+    trigger (``stats["recompiles"]``).  ``jitted_builder`` overrides how the
+    cached step is built on a miss (the sharded backend).  A custom
+    ``factory`` (test hook: zero-arg, returns an unjitted step) gets a fresh
+    uncached entry.
+    """
+    if factory is not None:
+        return _StepEntry(fn=jax.jit(factory()), seen=set())
+    key = (config, backend_key)
+    entry = _DEGREE_STEP_CACHE.get(key)
+    if entry is None:
+        build = jitted_builder or (lambda: jax.jit(_make_degree_step(config)))
+        entry = _StepEntry(fn=build(), seen=set())
+        _DEGREE_STEP_CACHE[key] = entry
+    return entry
+
+
+def pow2_bucket(x: int) -> int:
+    """Smallest power of two >= x (shape bucketing for Lcap / Kcap)."""
+    return 1 << max(int(x) - 1, 1).bit_length() if x > 2 else 2
+
+
+def border_index_arrays(book: terms_mod.TermBook, border, Kcap: int):
+    """Padded (parents, vars, valid) host arrays for one degree's border."""
+    parents = np.zeros((Kcap,), np.int32)
+    vars_ = np.zeros((Kcap,), np.int32)
+    valid = np.zeros((Kcap,), bool)
+    for i, (term, parent, j) in enumerate(border):
+        parents[i] = book.index[parent]
+        vars_[i] = j
+        valid[i] = True
+    return parents, vars_, valid
+
+
+def collect_degree(book, border, accepted, mses, coeffs, generators) -> int:
+    """Host-side bookkeeping after a degree step: accepted candidates become
+    generators, rejected ones extend the term book.  Returns the new |O|."""
+    for i, (term, parent, j) in enumerate(border):
+        if accepted[i]:
+            ell_at = len(book)
+            generators.append(
+                Generator(
+                    term=term,
+                    parent_idx=book.index[parent],
+                    var=j,
+                    coeffs=coeffs[i, :ell_at].copy(),
+                    mse=float(mses[i]),
+                )
+            )
+        else:
+            book.append(term, parent, j)
+    return len(book)
 
 
 def fit(
@@ -407,19 +650,24 @@ def fit(
     book = terms_mod.TermBook(n=n)
     generators: List[Generator] = []
 
-    Lcap = int(config.cap_terms)
+    Lcap = pow2_bucket(config.cap_terms)
     A = jnp.zeros((m, Lcap), dtype).at[:, 0].set(1.0)
     # normalized Gram convention: AtA[0,0] = ||1||^2 / m = 1
-    state = ihb_mod.init_state(Lcap, jnp.asarray(1.0, dtype), dtype)
+    state = ihb_mod.init_state(
+        Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
+    )
     ell = 1
 
-    factory = _degree_step_factory or (lambda: _make_degree_step(config))
-    degree_step = jax.jit(factory())
+    entry = degree_step_entry(config, factory=_degree_step_factory)
+    m_total = jnp.asarray(float(m), dtype)
 
     stats = {
         "border_sizes": [],
         "solver_iters": [],
         "degrees": [],
+        "degree_times": [],
+        "recompiles": 0,
+        "regrowths": 0,
         "time_total": 0.0,
         "m": m,
         "n": n,
@@ -439,34 +687,23 @@ def fit(
         stats["border_sizes"].append(K)
         stats["degrees"].append(d)
 
-        # capacity management (regrowth triggers one re-jit per growth)
+        # capacity management: device-side regrowth into the next pow2 bucket
         while ell + K > Lcap:
             Lcap *= 2
-            A = jnp.asarray(_grow(np.asarray(A), 1, Lcap))
-            AtA = _grow(np.asarray(state.AtA), 0, Lcap)
-            AtA = _grow(AtA, 1, Lcap)
-            N = np.asarray(state.N)
-            Nn = np.eye(Lcap, dtype=N.dtype)
-            Nn[: N.shape[0], : N.shape[1]] = N
-            for i in range(N.shape[0], Lcap):
-                Nn[i, i] = 1.0
-            R = np.asarray(state.R)
-            Rn = np.eye(Lcap, dtype=R.dtype)
-            Rn[: R.shape[0], : R.shape[1]] = R
-            state = ihb_mod.IHBState(
-                AtA=jnp.asarray(AtA), N=jnp.asarray(Nn), R=jnp.asarray(Rn)
-            )
+            stats["regrowths"] += 1
+            A = jax.lax.dynamic_update_slice(jnp.zeros((m, Lcap), dtype), A, (0, 0))
+            state = ihb_mod.grow_state(state, Lcap)
 
-        Kcap = max(config.cap_border, 1 << (K - 1).bit_length())
-        parents = np.zeros((Kcap,), np.int32)
-        vars_ = np.zeros((Kcap,), np.int32)
-        valid = np.zeros((Kcap,), bool)
-        for i, (term, parent, j) in enumerate(border):
-            parents[i] = book.index[parent]
-            vars_[i] = j
-            valid[i] = True
+        Kcap = max(config.cap_border, pow2_bucket(K))
+        parents, vars_, valid = border_index_arrays(book, border, Kcap)
 
-        A, st = degree_step(
+        sig = (m, n, Lcap, Kcap, str(dtype))
+        if sig not in entry.seen:
+            entry.seen.add(sig)
+            stats["recompiles"] += 1
+
+        t_deg = time.perf_counter()
+        A, st = entry.fn(
             A,
             Xd,
             state,
@@ -474,35 +711,23 @@ def fit(
             jnp.asarray(parents),
             jnp.asarray(vars_),
             jnp.asarray(valid),
-            float(m),
+            m_total,
         )
         state = st.ihb
         accepted = np.asarray(st.accepted)
         mses = np.asarray(st.mses)
         coeffs = np.asarray(st.coeffs)
         iters = np.asarray(st.iters)
+        stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
         stats["solver_iters"].append(int(iters[:K].sum()))
 
-        for i, (term, parent, j) in enumerate(border):
-            if accepted[i]:
-                ell_at = len(book)
-                generators.append(
-                    Generator(
-                        term=term,
-                        parent_idx=book.index[parent],
-                        var=j,
-                        coeffs=coeffs[i, :ell_at].copy(),
-                        mse=float(mses[i]),
-                    )
-                )
-            else:
-                book.append(term, parent, j)
-        ell = len(book)
+        ell = collect_degree(book, border, accepted, mses, coeffs, generators)
 
     stats["time_total"] = time.perf_counter() - t_start
     stats["num_G"] = len(generators)
     stats["num_O"] = len(book)
     stats["G_plus_O"] = len(generators) + len(book)
+    stats["Lcap_final"] = int(Lcap)
     stats["thm43_bound"] = terms_mod.theorem_4_3_size_bound(config.psi, n)
     return OAVIModel(
         n=n,

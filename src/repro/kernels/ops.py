@@ -10,11 +10,8 @@ ops unconditionally.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention as _flash_kernel
@@ -50,10 +47,12 @@ def gram_update(A, X, parents, vars_, *, bm: int = 512, use_pallas=None, interpr
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
+    if not (use_pallas or interpret):
+        # off-TPU the one-hot-selection matmul is pure overhead: gather the
+        # columns directly (bit-identical — see ref.gram_update_gather_ref)
+        return ref.gram_update_gather_ref(A, X, parents, vars_)
     L, n = A.shape[1], X.shape[1]
     Psel, Vsel = selection_matrices(parents, vars_, L, n, A.dtype)
-    if not (use_pallas or interpret):
-        return ref.gram_update_ref(A, X, Psel, Vsel)
     m = A.shape[0]
     m_pad = _round_up(m, bm)
     if m_pad != m:

@@ -19,6 +19,21 @@ def gram_update_ref(A, X, Psel, Vsel):
     return Af.T @ Bf, Bf.T @ Bf
 
 
+def gram_update_gather_ref(A, X, parents, vars_):
+    """(QL, C) with the candidate columns built by direct gather.
+
+    Bit-identical to :func:`gram_update_ref` (a one-hot matmul row sums
+    exactly one nonzero entry plus exact zeros), but O(m*K) instead of
+    O(m*L*K) column construction — the fast CPU/GPU fallback used by
+    ``ops.gram_update`` off-TPU, where gathers are cheap and the selection
+    matmul trick buys nothing.
+    """
+    B = jnp.take(A, parents, axis=1) * jnp.take(X, vars_, axis=1)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    return Af.T @ Bf, Bf.T @ Bf
+
+
 def border_columns_ref(A, X, parents, vars_):
     """Candidate columns by direct gather (semantic ground truth)."""
     return jnp.take(A, parents, axis=1) * jnp.take(X, vars_, axis=1)

@@ -31,9 +31,8 @@ Usage::
 
 import argparse
 import json
-import re
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,11 +43,7 @@ from ..models import model as M
 from ..optim import AdamW
 from . import mesh as mesh_mod
 
-from .hlo_analysis import (  # noqa: E402  (env must be set above)
-    _RESULT_RE,
-    _shape_bytes,
-    collective_bytes,
-)
+from .hlo_analysis import collective_bytes  # noqa: E402  (env must be set above)
 
 # ---------------------------------------------------------------------------
 # Per-cell lowering
@@ -233,7 +228,13 @@ def run_oavi_cell(mesh, mesh_name: str, *, m_global: int = 4_194_304,
     dt = jnp.dtype(dtype)
     aA = jax.ShapeDtypeStruct((m_global, Lcap), dt)
     aX = jax.ShapeDtypeStruct((m_global, n_features), dt)
-    astate = jax.eval_shape(lambda: ihb_mod.init_state(Lcap, jnp.asarray(1.0, dt), dt))
+    # the state is slimmed to the configured engine's factor set (here:
+    # engine='fast' -> the Theorem 4.9 inverse only), matching what fit passes
+    astate = jax.eval_shape(
+        lambda: ihb_mod.init_state(
+            Lcap, jnp.asarray(1.0, dt), dt, factors=cfg.ihb_factors()
+        )
+    )
     i32 = jnp.int32
     t0 = time.time()
     with mesh:

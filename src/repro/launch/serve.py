@@ -17,12 +17,11 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import configs
 from ..models import model as M

@@ -16,14 +16,11 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from functools import partial
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import configs

@@ -14,7 +14,7 @@ partitioner on the intended plan.  (Measured: qwen2-1.5b train went from
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -5,7 +5,7 @@ pjit sharding rules can be assigned by parameter path (see model.py).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

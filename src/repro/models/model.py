@@ -21,7 +21,6 @@ heads / experts over ``model``, batch over ``(pod?, data)``.  The perf loop
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -8,7 +8,7 @@ the same PartitionSpecs apply) — FSDP for optimizer state comes for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,6 +5,7 @@ import subprocess
 import sys
 import textwrap
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -174,6 +175,30 @@ def test_model_save_method_and_load(fitted_models, tmp_path):
     restored = api.load(str(tmp_path / "m"))
     assert [g.term for g in restored.generators] == \
            [g.term for g in model.generators]
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16"])
+def test_save_load_roundtrip_non_float32_dtype(planted, dtype, tmp_path):
+    """Extension dtypes ("bfloat16" is not a plain-numpy name) must survive
+    generator_arrays, the checkpoint store, and the transform bit-exactly."""
+    model = api.fit(
+        planted, method="oavi:fast", psi=0.005, cap_terms=64, dtype=dtype
+    )
+    assert model.num_G > 0
+    C, gp, gv = model.generator_arrays()
+    assert C.dtype == np.dtype(jnp.dtype(dtype))
+    path = str(tmp_path / f"m_{dtype}")
+    api.save(model, path)
+    restored = api.load(path)
+    assert restored.dtype == dtype
+    for gm, gr in zip(model.generators, restored.generators):
+        assert np.array_equal(
+            np.asarray(gm.coeffs, np.float32), np.asarray(gr.coeffs, np.float32)
+        )
+    Z = planted[:200]
+    a, b = model.transform(Z), restored.transform(Z)
+    assert a.dtype == b.dtype == np.dtype(jnp.dtype(dtype))
+    assert np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
 
 
 def test_load_missing_and_foreign_checkpoints(tmp_path):

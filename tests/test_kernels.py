@@ -48,6 +48,27 @@ def test_gram_matches_direct_gather():
     np.testing.assert_allclose(C, np.asarray(B.T @ B), rtol=1e-4, atol=1e-5)
 
 
+def test_gram_gather_ref_bit_exact_vs_onehot_ref():
+    """The fast gather fallback and the one-hot kernel spec are *bit*
+    identical: a one-hot matmul row sums exactly one value plus hard zeros,
+    so the candidate columns (and hence both Grams) match bit for bit."""
+    rng = np.random.default_rng(7)
+    m, L, n, K = 400, 24, 6, 17
+    A = jnp.asarray(rng.uniform(0, 1, (m, L)), jnp.float32)
+    X = jnp.asarray(rng.uniform(0, 1, (m, n)), jnp.float32)
+    parents = jnp.asarray(rng.integers(0, L, K), jnp.int32)
+    vars_ = jnp.asarray(rng.integers(0, n, K), jnp.int32)
+    Psel, Vsel = ops.selection_matrices(parents, vars_, L, n, jnp.float32)
+    g_gather = ref.gram_update_gather_ref(A, X, parents, vars_)
+    g_onehot = ref.gram_update_ref(A, X, Psel, Vsel)
+    for a, b in zip(g_gather, g_onehot):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # and the off-TPU ops dispatch routes to the gather formulation
+    g_ops = ops.gram_update(A, X, parents, vars_, use_pallas=False)
+    for a, b in zip(g_gather, g_ops):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 10_000))
 def test_gram_property_symmetry_psd(seed):

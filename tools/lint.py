@@ -1,0 +1,98 @@
+"""Dead-import linter for ``make lint``.
+
+Prefers ``pyflakes`` when installed (``make dev-deps`` /
+requirements-dev.txt); otherwise falls back to a built-in AST check for
+unused imports, so the target works in the bare runtime container too.
+
+    python tools/lint.py [paths...]     (default: src/repro benchmarks tools)
+
+Exits non-zero when any unused import (pyflakes: any warning) is found.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import subprocess
+import sys
+
+DEFAULT_PATHS = ["src/repro", "benchmarks", "tools"]
+
+
+def _pyflakes(paths) -> int:
+    proc = subprocess.run([sys.executable, "-m", "pyflakes", *paths])
+    return proc.returncode
+
+
+def _unused_imports(path: pathlib.Path):
+    tree = ast.parse(path.read_text())
+    imports = {}  # bound name -> (lineno, dotted origin)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = (a.asname or a.name).split(".")[0]
+                imports[name] = (node.lineno, a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                imports[a.asname or a.name] = (
+                    node.lineno,
+                    f"{node.module}.{a.name}" if node.module else a.name,
+                )
+    used = set()
+
+    class Visitor(ast.NodeVisitor):
+        def visit_Name(self, node):
+            used.add(node.id)
+
+        def visit_Attribute(self, node):
+            inner = node
+            while isinstance(inner, ast.Attribute):
+                inner = inner.value
+            if isinstance(inner, ast.Name):
+                used.add(inner.id)
+            self.generic_visit(node)
+
+        def visit_Constant(self, node):
+            # count string constants as uses: __all__ entries and quoted
+            # forward-reference annotations refer to names by string
+            if isinstance(node.value, str):
+                used.add(node.value)
+
+    Visitor().visit(tree)
+    return [
+        (lineno, origin, name)
+        for name, (lineno, origin) in sorted(imports.items(), key=lambda kv: kv[1])
+        if name not in used
+    ]
+
+
+def _fallback(paths) -> int:
+    failures = 0
+    for root in paths:
+        root = pathlib.Path(root)
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            for lineno, origin, name in _unused_imports(f):
+                print(f"{f}:{lineno}: '{origin}' imported but unused (as {name!r})")
+                failures += 1
+    if failures:
+        print(f"\n{failures} unused import(s)", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or DEFAULT_PATHS
+    try:
+        import pyflakes  # noqa: F401
+
+        return _pyflakes(paths)
+    except ImportError:
+        return _fallback(paths)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
