@@ -4,16 +4,20 @@
 #   make test-api         just the unified-API tests (fast)
 #   make lint             dead-import lint (pyflakes when installed, AST fallback)
 #   make bench-smoke      smoke benchmark subset (fig4_scaling, transform_fused,
-#                         fit_fused at quick sizes) + BENCH_*.json artifact check
+#                         fit_fused, serve_engine at quick sizes) + BENCH_*.json
+#                         artifact check
 #   make bench-transform  fused-vs-legacy transform benchmark (BENCH_transform.json)
 #   make bench-fit        fused fit-path benchmark (BENCH_fit.json)
+#   make bench-serve      batched serving engine benchmark (BENCH_serve.json)
+#   make serve-smoke      in-process CPU run of the serving CLI (repro.launch.serve_vi)
 #   make bench            full quick benchmark sweep
 #   make dev-deps         install dev-only deps (pytest, hypothesis, pyflakes)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-api lint bench bench-smoke bench-transform bench-fit dev-deps
+.PHONY: test test-api lint bench bench-smoke bench-transform bench-fit \
+        bench-serve serve-smoke dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -25,14 +29,21 @@ lint:
 	$(PYTHON) tools/lint.py src/repro benchmarks tools
 
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused
-	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling
+	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine
+	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve
 
 bench-transform:
 	$(PYTHON) -m benchmarks.run --only transform_fused
 
 bench-fit:
 	$(PYTHON) -m benchmarks.run --only fit_fused
+
+bench-serve:
+	$(PYTHON) -m benchmarks.run --only serve_engine
+
+serve-smoke:
+	$(PYTHON) -m repro.launch.serve_vi --fit-m 1500 --requests 96 --mean-rows 64 \
+		--concurrency 8 --min-bucket 32 --max-bucket 4096
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -1,0 +1,173 @@
+"""Batched serving engine vs. naive per-request transform loop.
+
+Replays a mixed-size request trace (log-normal row counts — lots of small
+requests, a heavy tail) against two implementations of the same (FT):
+
+* **naive** — a per-request ``api.feature_transform`` loop, the way every
+  caller had to serve before :mod:`repro.serving`.  Timed twice: *cold*
+  (first replay; every unique request size jit-compiles — the real cost of
+  shape-polymorphic traffic on the direct path) and *warm* (second replay,
+  all shapes cached — the steady state, and the conservative baseline).
+* **batched** — :class:`~repro.serving.engine.TransformEngine` (pow2 row
+  buckets, warmed up front) behind a
+  :class:`~repro.serving.batcher.MicroBatcher`.  Throughput is measured
+  open-loop (trace pre-queued, drained in coalesced batches — saturated
+  offered load); latency percentiles closed-loop (``--concurrency``
+  clients, one in-flight request each).
+
+Asserts the batched path is bit-identical to the naive one and triggers
+zero recompiles after warmup, then emits the standard ``BENCH_serve.json``
+artifact.
+
+    PYTHONPATH=src python -m benchmarks.run --only serve_engine
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro import api
+from repro.core.transform import MinMaxScaler
+from repro.data.synthetic import appendix_c
+from repro.launch.serve_vi import replay, synth_trace
+from repro.serving import BatcherConfig, EngineConfig, MicroBatcher, TransformEngine
+
+from .common import Reporter, write_bench_json
+
+MEAN_ROWS = 96
+MAX_BATCH_ROWS = 8192
+MAX_DELAY_MS = 2.0
+CONCURRENCY = 32
+
+
+def _payloads(sizes: List[int], scaler, seed: int) -> List[np.ndarray]:
+    pool, _ = appendix_c(m=max(sizes), seed=seed)
+    pool = scaler.transform(pool)
+    rng = np.random.default_rng(seed + 1)
+    out = []
+    for q in sizes:
+        off = int(rng.integers(0, pool.shape[0] - q + 1))
+        out.append(pool[off : off + q])
+    return out
+
+
+def run(rep: Reporter, quick: bool = True):
+    num_requests = 240 if quick else 960
+
+    # fit per-class models once (same setup as bench_transform)
+    Xtr, ytr = appendix_c(m=4000, seed=0)
+    scaler = MinMaxScaler(dtype="float32")
+    Xtr = scaler.fit_transform(Xtr)
+    models = [
+        api.fit(Xtr[ytr == c], method="oavi:fast", psi=0.005,
+                backend="local", cap_terms=64)
+        for c in np.unique(ytr)
+    ]
+
+    sizes = synth_trace(num_requests, MEAN_ROWS, seed=3)
+    payloads = _payloads(sizes, scaler, seed=5)
+    rows_total = sum(sizes)
+
+    # ---- naive per-request loop: cold (compiles) then warm (steady) ------
+    t0 = time.perf_counter()
+    ref = [np.asarray(api.feature_transform(models, Z)) for Z in payloads]
+    t_naive_cold = time.perf_counter() - t0
+    lat_naive = []
+    t0 = time.perf_counter()
+    for Z in payloads:
+        t1 = time.perf_counter()
+        api.feature_transform(models, Z)
+        lat_naive.append((time.perf_counter() - t1) * 1e3)
+    t_naive_warm = time.perf_counter() - t0
+
+    # ---- batched engine: warmup, open-loop drain, closed-loop latency ----
+    engine = TransformEngine(
+        models, config=EngineConfig(min_bucket=64, max_bucket=MAX_BATCH_ROWS)
+    )
+    t0 = time.perf_counter()
+    engine.warmup()
+    t_warmup = time.perf_counter() - t0
+
+    batcher = MicroBatcher(
+        engine,
+        config=BatcherConfig(
+            max_batch_rows=MAX_BATCH_ROWS,
+            max_delay_ms=MAX_DELAY_MS,
+            max_queue=len(payloads) + 1,
+        ),
+    )
+    futs = [batcher.submit(Z) for Z in payloads]
+    t0 = time.perf_counter()
+    batcher.run_once()
+    t_batched = time.perf_counter() - t0
+    outs = [f.result() for f in futs]
+
+    # np.array_equal (not a diff-max) so NaN-producing divergence also fails
+    mismatched = [i for i, (a, b) in enumerate(zip(ref, outs))
+                  if not np.array_equal(a, b)]
+    assert not mismatched, (
+        f"batched engine output is not bit-identical on "
+        f"{len(mismatched)}/{len(ref)} requests (first: #{mismatched[0]})"
+    )
+    assert engine.stats["recompiles"] == 0, (
+        f"trace recompiled {engine.stats['recompiles']}x after warmup"
+    )
+
+    latency = replay(
+        batcher.start(),
+        payloads,
+        kind="transform",
+        concurrency=CONCURRENCY,
+    )
+    batcher.stop()
+    assert engine.stats["recompiles"] == 0
+
+    lat_naive_arr = np.asarray(lat_naive)
+    row = {
+        "requests": num_requests,
+        "rows": rows_total,
+        "unique_sizes": len(set(sizes)),
+        "mean_rows": MEAN_ROWS,
+        "num_features": engine.consts.num_features,
+        "t_naive_cold_s": round(t_naive_cold, 4),
+        "t_naive_warm_s": round(t_naive_warm, 4),
+        "t_batched_s": round(t_batched, 4),
+        "t_warmup_s": round(t_warmup, 4),
+        "rows_per_s_naive": round(rows_total / max(t_naive_warm, 1e-9), 1),
+        "rows_per_s_batched": round(rows_total / max(t_batched, 1e-9), 1),
+        "speedup_vs_warm": round(t_naive_warm / max(t_batched, 1e-9), 2),
+        "speedup_vs_cold": round(t_naive_cold / max(t_batched, 1e-9), 2),
+        "naive_lat_p50_ms": round(float(np.percentile(lat_naive_arr, 50)), 3),
+        "naive_lat_p99_ms": round(float(np.percentile(lat_naive_arr, 99)), 3),
+        "batched_lat_p50_ms": round(latency["lat_p50_ms"], 3),
+        "batched_lat_p99_ms": round(latency["lat_p99_ms"], 3),
+        "closed_loop_rows_per_s": round(latency["rows_per_s"], 1),
+        "device_calls": engine.stats["device_calls"],
+        "padded_rows": engine.stats["padded_rows"],
+        "recompiles_after_warmup": engine.stats["recompiles"],
+        "warmup_compiles": engine.stats["warmup_compiles"],
+        "bit_exact": True,  # asserted above via np.array_equal per request
+    }
+    rep.add("serve_engine", **row)
+
+    write_bench_json(
+        "serve",
+        [row],
+        meta={
+            "method": "oavi:fast",
+            "psi": 0.005,
+            "max_batch_rows": MAX_BATCH_ROWS,
+            "max_delay_ms": MAX_DELAY_MS,
+            "concurrency": CONCURRENCY,
+            "quick": quick,
+            "note": (
+                "throughput is an open-loop drain of the pre-queued trace; "
+                "latency percentiles are closed-loop at `concurrency` clients; "
+                "naive cold includes the per-unique-shape jit compiles the "
+                "direct path pays on mixed-size traffic"
+            ),
+        },
+    )

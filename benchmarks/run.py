@@ -20,6 +20,7 @@ from . import (
     bench_ordering,
     bench_performance,
     bench_scaling,
+    bench_serve,
     bench_solvers,
     bench_transform,
     roofline,
@@ -36,6 +37,7 @@ BENCHES = {
     "ablation_psi": bench_ablation.run,
     "transform_fused": bench_transform.run,
     "fit_fused": bench_fit.run,
+    "serve_engine": bench_serve.run,
     "roofline": roofline.run,
 }
 

@@ -25,8 +25,6 @@ One entry point over every algorithm family in the repo:
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
 from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import numpy as np
@@ -342,41 +340,47 @@ def _json_safe(obj):
     return obj
 
 
-def save(model: VanishingIdealModel, path: str) -> str:
-    """Persist a fitted model to ``path`` (a directory) atomically.
-
-    Uses :func:`repro.checkpoint.store.save`: arrays land as manifest-tracked
-    leaves, metadata in the manifest, and the COMMITTED marker makes the
-    write crash-safe.  Returns the committed checkpoint directory.
-    """
-    arrays, meta = model.to_state_dict()
-    kind = meta.get("kind")
-    if kind not in _MODEL_KINDS:
-        raise ValueError(f"cannot save model of unknown kind {kind!r}")
+def save_state_dict(path: str, arrays: Dict, meta: Dict, fmt: str) -> str:
+    """Write one ``(arrays, meta)`` state dict as a committed, format-tagged
+    checkpoint — the single save-side protocol shared by :func:`save` and
+    :meth:`VanishingIdealClassifier.save`.  Arrays land as manifest-tracked
+    leaves, ``meta`` (made JSON-safe) in the manifest, and the COMMITTED
+    marker makes the write crash-safe.  Returns the committed directory."""
     metadata = {
-        "format": _FORMAT,
-        "kind": kind,
+        "format": fmt,
+        "kind": meta.get("kind"),
         "meta": _json_safe(meta),
         "array_keys": sorted(arrays),
     }
     return ckpt_store.save(path, step=0, tree=dict(arrays), metadata=metadata)
 
 
-def load(path: str) -> VanishingIdealModel:
-    """Load a model previously written by :func:`save` (bit-identical)."""
-    step = ckpt_store.latest_step(path)
-    if step is None:
-        raise FileNotFoundError(f"no committed model checkpoint under {path!r}")
-    manifest_path = os.path.join(path, f"step_{step:08d}", "manifest.json")
-    with open(manifest_path) as f:
-        metadata = json.load(f)["metadata"]
-    if metadata.get("format") != _FORMAT:
+def load_state_dict(path: str, fmt: str) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Load the newest committed state dict at ``path``, checking its format
+    tag — the restore-side counterpart of :func:`save_state_dict`."""
+    metadata, step = ckpt_store.read_metadata(path)
+    if metadata.get("format") != fmt:
         raise ValueError(
-            f"{path!r} is not a {_FORMAT} checkpoint "
+            f"{path!r} is not a {fmt} checkpoint "
             f"(format={metadata.get('format')!r})"
         )
     like = {k: np.zeros(()) for k in metadata["array_keys"]}
     arrays, metadata = ckpt_store.restore(path, step, like)
+    return arrays, metadata
+
+
+def save(model: VanishingIdealModel, path: str) -> str:
+    """Persist a fitted model to ``path`` (a directory) atomically."""
+    arrays, meta = model.to_state_dict()
+    kind = meta.get("kind")
+    if kind not in _MODEL_KINDS:
+        raise ValueError(f"cannot save model of unknown kind {kind!r}")
+    return save_state_dict(path, arrays, meta, _FORMAT)
+
+
+def load(path: str) -> VanishingIdealModel:
+    """Load a model previously written by :func:`save` (bit-identical)."""
+    arrays, metadata = load_state_dict(path, _FORMAT)
     cls = _MODEL_KINDS[metadata["kind"]]
     return cls.from_state_dict(arrays, metadata["meta"])
 
@@ -399,6 +403,7 @@ class _FusedPlan:
     gv: np.ndarray  # (Ktot,) int32 — leading-term variable (original coords)
     dtype: np.dtype
     num_features: int
+    n: int  # input dimension (original Z coordinates)
 
 
 def _fuse(models: Sequence) -> Optional[_FusedPlan]:
@@ -460,19 +465,40 @@ def _fuse(models: Sequence) -> Optional[_FusedPlan]:
         gv=gv,
         dtype=dtype,
         num_features=num_features,
+        n=n,
     )
 
 
-def _make_fused_eval(plan: "_FusedPlan"):
-    """Jitted fused (FT) evaluation for one plan: a degree-wavefront term
-    sweep (all terms of a degree in one batched select-matmul step —
-    O(max_degree) sequential steps instead of O(|O|)) plus one matmul.
+@dataclasses.dataclass(frozen=True)
+class PlanConstants:
+    """Trace-constant arrays of the fused (FT) evaluation, hoisted out of the
+    jitted function.
+
+    Everything here depends only on the fitted models (via the
+    :class:`_FusedPlan`), never on the query batch, so per-shape retraces
+    reuse the same host arrays instead of rebuilding them — and the serving
+    engine (:mod:`repro.serving.engine`) shares them across its shape
+    buckets and its local / ``shard_map`` execution paths.
+    """
+
+    waves: Tuple  # wavefront schedule over the fused book
+    C_w: np.ndarray  # (L, k) generator coefficients, wavefront row order
+    GPsel: np.ndarray  # (L, k) one-hot: leading-term parent column selector
+    GVsel: np.ndarray  # (n, k) one-hot: leading-term variable selector
+    dtype: np.dtype
+    num_features: int
+    n: int
+
+
+def plan_constants(plan: "_FusedPlan") -> PlanConstants:
+    """Hoist every trace constant of the fused evaluation out of the traced
+    function.
 
     The fused multi-book column order is not degree-grouped, so instead of
-    permuting the wavefront output at runtime we fold the permutation into
-    the plan constants: the generator matrix rows are pre-gathered into
-    wavefront order and the leading-term selection is a one-hot matmul —
-    the whole transform is matmuls, no runtime gathers.
+    permuting the wavefront output at runtime the permutation is folded into
+    the constants: the generator matrix rows are pre-gathered into wavefront
+    order and both leading-term selections (parent column and variable) are
+    one-hot matmuls — the whole transform is matmuls, no runtime gathers.
     """
     waves, perm = wavefront_schedule(plan.parents, plan.vars)
     L = int(np.asarray(plan.parents).shape[0])
@@ -488,15 +514,40 @@ def _make_fused_eval(plan: "_FusedPlan"):
         gp_w = plan.gp
     GPsel = np.zeros((L, k), np.float32)
     GPsel[gp_w, np.arange(k)] = 1.0
-    gv = np.asarray(plan.gv)
+    GVsel = np.zeros((plan.n, k), np.float32)
+    GVsel[np.asarray(plan.gv), np.arange(k)] = 1.0
+    return PlanConstants(
+        waves=waves,
+        C_w=C_w,
+        GPsel=GPsel,
+        GVsel=GVsel,
+        dtype=plan.dtype,
+        num_features=plan.num_features,
+        n=plan.n,
+    )
+
+
+def eval_with_constants(consts: PlanConstants, Z) -> jax.Array:
+    """Fused (FT) body over hoisted constants: a degree-wavefront term sweep
+    (all terms of a degree in one batched select-matmul step — O(max_degree)
+    sequential steps instead of O(|O|)) plus one matmul.  Pure and
+    traceable: callers wrap it in ``jax.jit`` and/or ``shard_map``."""
+    cols = apply_wavefronts(Z, consts.waves)  # (q, L) in wavefront order
+    lead = (cols @ jnp.asarray(consts.GPsel, Z.dtype)) * (
+        Z @ jnp.asarray(consts.GVsel, Z.dtype)
+    )
+    return jnp.abs(cols @ jnp.asarray(consts.C_w, Z.dtype) + lead)
+
+
+def _make_fused_eval(plan: "_FusedPlan"):
+    """Jitted fused (FT) evaluation for one plan (see
+    :func:`eval_with_constants`; constants hoisted via
+    :func:`plan_constants`)."""
+    consts = plan_constants(plan)
 
     @jax.jit
     def fused_eval(Z):
-        cols = apply_wavefronts(Z, waves)  # (q, L) in wavefront order
-        GVsel = np.zeros((Z.shape[1], k), np.float32)
-        GVsel[gv, np.arange(k)] = 1.0
-        lead = (cols @ jnp.asarray(GPsel, Z.dtype)) * (Z @ jnp.asarray(GVsel, Z.dtype))
-        return jnp.abs(cols @ jnp.asarray(C_w, Z.dtype) + lead)
+        return eval_with_constants(consts, Z)
 
     return fused_eval
 
@@ -529,6 +580,7 @@ def feature_transform(
     batch_size: Optional[int] = None,
     out_sharding=None,
     dtype: Optional[str] = None,
+    engine=None,
 ) -> np.ndarray:
     """(FT) over all per-class models as ONE jitted evaluation.
 
@@ -539,6 +591,12 @@ def feature_transform(
     trailing chunk is padded, so at most two jit traces exist).  Models
     without a term book (VCA) fall back to the per-model loop.
 
+    ``engine`` routes the call through a warmed
+    :class:`repro.serving.engine.TransformEngine` built for the same model
+    set — shape-bucketed (zero recompiles at varying q) and optionally
+    sharded over a serving mesh.  The engine path is bit-identical to the
+    direct path at matched dtype.
+
     ``out_sharding`` (or a ``transform_out_sharding`` attribute left on the
     first model by :func:`fit`) places the result; the default returns host
     numpy.
@@ -547,6 +605,16 @@ def feature_transform(
         raise ValueError(f"batch_size must be a positive integer, got {batch_size}")
     if out_sharding is None and models:
         out_sharding = getattr(models[0], "transform_out_sharding", None)
+    if engine is not None:
+        if not engine.matches(models):
+            raise ValueError(
+                "engine was built for a different model set; build a "
+                "TransformEngine over exactly these models"
+            )
+        out = engine.transform(Z)
+        if dtype is not None:
+            out = np.asarray(out).astype(np.dtype(dtype), copy=False)
+        return jax.device_put(out, out_sharding) if out_sharding is not None else out
     plan, fused_eval = _fused_plan_and_eval(models) if models else (None, None)
     if plan is None:
         out = _legacy_feature_transform(models, Z, dtype=dtype)
@@ -559,11 +627,23 @@ def feature_transform(
         return jax.device_put(out, out_sharding) if out_sharding is not None else out
     Zd = Z.astype(plan.dtype, copy=False)
     if batch_size is None or batch_size >= q:
-        out = fused_eval(jnp.asarray(Zd))
+        if q == 1:
+            # XLA lowers single-row matmuls as gemv with a different
+            # accumulation pattern than the q >= 2 gemm path; evaluate at
+            # q=2 so direct, chunked and serving-bucket paths all see the
+            # same row-stable lowering (bit-identical results).
+            pad = np.zeros((2, Z.shape[1]), plan.dtype)
+            pad[:1] = Zd
+            out = fused_eval(jnp.asarray(pad))[:1]
+        else:
+            out = fused_eval(jnp.asarray(Zd))
         if out_sharding is not None:
             return jax.device_put(out, out_sharding)
         return np.asarray(out).astype(out_dtype, copy=False)
     out = np.empty((q, plan.num_features), out_dtype)
+    # chunks must be >= 2 rows so no chunk hits the single-row gemv lowering
+    # (see the q == 1 branch above); the output rows are unchanged
+    batch_size = max(batch_size, 2)
     for start in range(0, q, batch_size):
         chunk = Zd[start : start + batch_size]
         if chunk.shape[0] < batch_size:  # pad trailing chunk: one trace only
@@ -582,13 +662,18 @@ __all__ = [
     "AUTO_SHARD_MIN_M",
     "MethodEntry",
     "OAVI_VARIANTS",
+    "PlanConstants",
     "VanishingIdealModel",
     "available_methods",
+    "eval_with_constants",
     "feature_transform",
     "fit",
     "load",
+    "load_state_dict",
     "oavi_config_for",
+    "plan_constants",
     "register",
     "resolve",
     "save",
+    "save_state_dict",
 ]

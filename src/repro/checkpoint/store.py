@@ -144,6 +144,21 @@ def latest_step(directory: str) -> Optional[int]:
     return best
 
 
+def read_metadata(directory: str, step: Optional[int] = None) -> Tuple[Dict, int]:
+    """User metadata of the newest (or given) committed step in
+    ``directory`` without touching any leaves.  Returns ``(metadata, step)``;
+    raises ``FileNotFoundError`` when nothing is committed.  The single
+    place format-dispatching loaders (``api.load``, classifier ``load``,
+    ``serving.registry``) probe a checkpoint's manifest."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {directory!r}")
+    path = os.path.join(directory, f"step_{step:08d}", _MANIFEST)
+    with open(path) as f:
+        return json.load(f)["metadata"], step
+
+
 def restore(
     directory: str,
     step: int,

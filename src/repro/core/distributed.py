@@ -40,14 +40,15 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # jax.shard_map (with check_vma) is only public in newer jax; older releases
-# ship it as jax.experimental.shard_map.shard_map (with check_rep).
+# ship it as jax.experimental.shard_map.shard_map (with check_rep).  Shared
+# with repro.serving.engine, which wraps the fused transform the same way.
 if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _SHARD_MAP_KW = {"check_vma": False}
+    shard_map_compat = jax.shard_map
+    SHARD_MAP_KW = {"check_vma": False}
 else:
-    from jax.experimental.shard_map import shard_map as _shard_map
+    from jax.experimental.shard_map import shard_map as shard_map_compat
 
-    _SHARD_MAP_KW = {"check_rep": False}
+    SHARD_MAP_KW = {"check_rep": False}
 
 from . import ihb as ihb_mod
 from . import terms as terms_mod
@@ -64,9 +65,15 @@ from .oavi import (
 from .ordering import pearson_order
 
 
-def _data_spec(data_axes: Sequence[str]) -> P:
+def data_spec(data_axes: Sequence[str]) -> P:
+    """PartitionSpec sharding the leading (sample/row) axis over ``data_axes``."""
     axes = tuple(data_axes)
     return P(axes if len(axes) > 1 else axes[0], None)
+
+
+def num_data_shards(mesh: Mesh, data_axes: Sequence[str]) -> int:
+    """Total device count along the mesh's data axes."""
+    return int(np.prod([mesh.shape[a] for a in data_axes]))
 
 
 def make_sharded_degree_step(
@@ -76,15 +83,15 @@ def make_sharded_degree_step(
     axes = tuple(data_axes)
     reduce_fn = lambda x: jax.lax.psum(x, axes)  # noqa: E731
     step = _make_degree_step(cfg, reduce_fn=reduce_fn)
-    dspec = _data_spec(axes)
+    dspec = data_spec(axes)
     rep = P()
 
-    sharded = _shard_map(
+    sharded = shard_map_compat(
         step,
         mesh=mesh,
         in_specs=(dspec, dspec, rep, rep, rep, rep, rep, rep),
         out_specs=(dspec, rep),
-        **_SHARD_MAP_KW,
+        **SHARD_MAP_KW,
     )
     return jax.jit(sharded)
 
@@ -98,13 +105,13 @@ def shard_samples(
     rows, 0.0 on padding.
     """
     m, n = X.shape
-    shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+    shards = num_data_shards(mesh, data_axes)
     m_pad = ((m + shards - 1) // shards) * shards
     Xp = np.zeros((m_pad, n), dtype=np.asarray(X).dtype)
     Xp[:m] = X
     mask = np.zeros((m_pad, 1), dtype=np.float32)
     mask[:m] = 1.0
-    dspec = _data_spec(data_axes)
+    dspec = data_spec(data_axes)
     xs = jax.device_put(jnp.asarray(Xp, dtype), NamedSharding(mesh, dspec))
     ms = jax.device_put(jnp.asarray(mask, dtype), NamedSharding(mesh, dspec))
     return xs, ms, m
@@ -135,7 +142,7 @@ def fit(
     generators: List[Generator] = []
 
     Lcap = pow2_bucket(config.cap_terms)
-    dspec = _data_spec(data_axes)
+    dspec = data_spec(data_axes)
     a_shard = NamedSharding(mesh, dspec)
     rep = NamedSharding(mesh, P())
     # constant column = sample mask (zero on padded rows)

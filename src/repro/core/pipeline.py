@@ -7,18 +7,26 @@ construction is dispatched through :func:`repro.api.fit` (which picks the
 local or sharded backend), the feature transform runs through the fused
 :func:`repro.api.feature_transform`, and the features are classified by the
 l1 squared-hinge :class:`~repro.core.svm.LinearSVM`.
+
+A fitted pipeline serializes whole (scaler + per-class models + SVM head)
+through the checkpoint manifest machinery (``save`` / ``load``), and
+``attach_engine`` routes ``transform`` / ``predict`` through the serving
+:class:`~repro.serving.engine.TransformEngine` (shape-bucketed, optionally
+sharded; per-model fallback kept for VCA).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .svm import LinearSVM, LinearSVMConfig
 from .transform import MinMaxScaler
+
+CLASSIFIER_FORMAT = "repro.vanishing_ideal_classifier.v1"
 
 
 def __getattr__(name: str):
@@ -61,6 +69,7 @@ class VanishingIdealClassifier:
         self.svm = LinearSVM(config.svm)
         self.classes_: Optional[np.ndarray] = None
         self.stats: Dict = {}
+        self.engine = None  # optional serving TransformEngine (attach_engine)
 
     def _fit_generator_model(self, Xc: np.ndarray):
         from .. import api
@@ -78,14 +87,70 @@ class VanishingIdealClassifier:
     def _feature_transform(self, X) -> np.ndarray:
         from .. import api
 
+        engine = self.engine
+        if engine is not None and not engine.matches(self.models):
+            engine = None  # models were refitted since attach_engine
         return np.asarray(
             api.feature_transform(
-                self.models, X, batch_size=self.config.batch_size, dtype=self.dtype
+                self.models,
+                X,
+                batch_size=self.config.batch_size,
+                dtype=self.dtype,
+                engine=engine,
             )
         )
 
+    def attach_engine(
+        self,
+        engine=None,
+        *,
+        mesh=None,
+        data_axes=("data",),
+        engine_config=None,
+        warmup: bool = True,
+    ):
+        """Route ``transform`` / ``predict`` through a serving
+        :class:`~repro.serving.engine.TransformEngine` (shape-bucketed, zero
+        recompiles at varying query sizes, optionally ``shard_map``-sharded
+        over ``mesh``).
+
+        Builds one over ``self.models`` when ``engine`` is omitted.  Model
+        sets without a fused term-book plan (VCA) keep the per-model
+        fallback: the engine stays ``None`` and ``None`` is returned.
+        """
+        from ..serving.engine import EngineConfig, TransformEngine, UnsupportedModelError
+
+        if engine is None:
+            try:
+                engine = TransformEngine(
+                    self.models,
+                    mesh=mesh,
+                    data_axes=data_axes,
+                    config=engine_config or EngineConfig(),
+                )
+            except UnsupportedModelError:
+                self.engine = None
+                return None
+        elif not engine.matches(self.models):
+            raise ValueError("engine was built for a different model set")
+        if warmup:
+            engine.warmup()  # idempotent: already-traced buckets are skipped
+        self.engine = engine
+        return engine
+
+    def head(self, feats) -> np.ndarray:
+        """Classifier head over precomputed (FT) features: SVM argmax.
+
+        The cheap per-request tail of ``predict`` — the serving batcher
+        applies it after the coalesced feature transform."""
+        return self.svm.predict(np.asarray(feats))
+
     def fit(self, X, y) -> "VanishingIdealClassifier":
         t0 = time.perf_counter()
+        # an engine attached to a previous fit's models would be silently
+        # bypassed by matches() on every call while pinning the old model
+        # set and its compiled buckets — drop it; re-attach_engine() after
+        self.engine = None
         X = self.scaler.fit_transform(X)
         y = np.asarray(y)
         self.classes_ = np.unique(y)
@@ -138,3 +203,99 @@ class VanishingIdealClassifier:
                 e += len(g.coeffs)
                 z += int(np.sum(g.coeffs == 0.0))
         return z / e if e else 0.0
+
+    # -- serialization (serving: registry load / hot-swap) ------------------
+
+    def to_state_dict(self) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Flat array tree + JSON-safe metadata for the WHOLE pipeline:
+        scaler, per-class generator models, and the SVM head — everything a
+        serving process needs to answer predict requests."""
+        from .. import api
+
+        if self.svm.W is None or self.classes_ is None:
+            raise ValueError("cannot serialize an unfitted classifier")
+        arrays: Dict[str, np.ndarray] = {}
+        model_metas = []
+        for i, model in enumerate(self.models):
+            a, meta = model.to_state_dict()
+            if meta.get("kind") not in api._MODEL_KINDS:
+                raise ValueError(
+                    f"per-class model {i} has unserializable kind {meta.get('kind')!r}"
+                )
+            for k, v in a.items():
+                arrays[f"model_{i:03d}.{k}"] = v
+            model_metas.append(meta)
+        arrays["scaler_lo"] = np.asarray(self.scaler.lo)
+        arrays["scaler_scale"] = np.asarray(self.scaler.scale)
+        arrays["svm_W"] = np.asarray(self.svm.W)
+        arrays["svm_b"] = np.asarray(self.svm.b)
+        arrays["classes"] = np.asarray(self.classes_)
+        cfg = self.config
+        meta = {
+            "kind": "classifier",
+            "num_models": len(self.models),
+            "models": model_metas,
+            "dtype": self.dtype,
+            "config": {
+                "method": cfg.method,
+                "psi": cfg.psi,
+                "svm": dataclasses.asdict(cfg.svm),
+                "oavi_kw": cfg.oavi_kw,
+                "backend": cfg.backend,
+                "batch_size": cfg.batch_size,
+            },
+            "svm_stats": self.svm.stats,
+            "stats": self.stats,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state_dict(
+        cls, arrays: Dict[str, np.ndarray], meta: Dict
+    ) -> "VanishingIdealClassifier":
+        from .. import api
+
+        cfg_meta = meta["config"]
+        config = PipelineConfig(
+            method=cfg_meta["method"],
+            psi=cfg_meta["psi"],
+            svm=LinearSVMConfig(**cfg_meta["svm"]),
+            oavi_kw=cfg_meta["oavi_kw"],
+            backend=cfg_meta["backend"],
+            batch_size=cfg_meta["batch_size"],
+        )
+        clf = cls(config)
+        clf.scaler.lo = np.asarray(arrays["scaler_lo"])
+        clf.scaler.scale = np.asarray(arrays["scaler_scale"])
+        clf.models = []
+        for i, model_meta in enumerate(meta["models"]):
+            prefix = f"model_{i:03d}."
+            sub = {
+                k[len(prefix):]: v for k, v in arrays.items() if k.startswith(prefix)
+            }
+            model_cls = api._MODEL_KINDS[model_meta["kind"]]
+            clf.models.append(model_cls.from_state_dict(sub, model_meta))
+        clf.svm.W = np.asarray(arrays["svm_W"])
+        clf.svm.b = np.asarray(arrays["svm_b"])
+        clf.svm.classes_ = np.asarray(arrays["classes"])
+        clf.svm.stats = dict(meta.get("svm_stats") or {})
+        clf.classes_ = np.asarray(arrays["classes"])
+        clf.stats = dict(meta.get("stats") or {})
+        return clf
+
+    def save(self, path: str) -> str:
+        """Persist the fitted pipeline to ``path`` (a directory) atomically
+        via the checkpoint manifest machinery (same layout as
+        :func:`repro.api.save`, format :data:`CLASSIFIER_FORMAT`)."""
+        from .. import api
+
+        arrays, meta = self.to_state_dict()
+        return api.save_state_dict(path, arrays, meta, CLASSIFIER_FORMAT)
+
+    @classmethod
+    def load(cls, path: str) -> "VanishingIdealClassifier":
+        """Load a pipeline written by :meth:`save` (bit-identical predict)."""
+        from .. import api
+
+        arrays, metadata = api.load_state_dict(path, CLASSIFIER_FORMAT)
+        return cls.from_state_dict(arrays, metadata["meta"])

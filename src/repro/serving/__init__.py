@@ -1,0 +1,34 @@
+"""Sharded, request-batched serving of vanishing-ideal feature transforms.
+
+The paper's payoff is cheap inference: once the generators are constructed,
+the (FT) feeding Algorithm 2's linear SVM is polynomial evaluation.  This
+package turns the fused transform of :mod:`repro.api` into a service:
+
+* :class:`~repro.serving.engine.TransformEngine` — one compiled plan per
+  model set, executed locally or row-sharded over a mesh via ``shard_map``,
+  with pow2 query-size buckets so varying request shapes never recompile.
+* :class:`~repro.serving.batcher.MicroBatcher` — coalesces concurrent
+  transform / predict requests into one padded device call and scatters the
+  results back to each caller.
+* :class:`~repro.serving.registry.ModelRegistry` — loads models and
+  classifiers from :mod:`repro.checkpoint.store` paths, warms their engines,
+  and hot-swaps versions.
+
+``python -m repro.launch.serve_vi`` stands the whole stack up and replays a
+request trace.
+"""
+
+from .batcher import BatcherConfig, MicroBatcher
+from .engine import EngineConfig, TransformEngine, UnsupportedModelError
+from .registry import ModelRegistry, RegistryEntry, load_servable
+
+__all__ = [
+    "BatcherConfig",
+    "EngineConfig",
+    "MicroBatcher",
+    "ModelRegistry",
+    "RegistryEntry",
+    "TransformEngine",
+    "UnsupportedModelError",
+    "load_servable",
+]

@@ -1,0 +1,271 @@
+"""MicroBatcher: coalesce concurrent (FT) requests into one device call.
+
+The (FT) analogue of ``launch/serve.py``'s continuous-batching decode loop:
+callers submit variable-size transform / predict requests from any thread;
+a single worker thread drains the queue, concatenates the pending rows into
+one padded call through the :class:`~repro.serving.engine.TransformEngine`,
+and scatters the result rows back to each caller's future.
+
+Coalescing policy: the worker sleeps until a request arrives, then keeps
+collecting until either ``max_batch_rows`` is reached or ``max_delay_ms``
+has elapsed since the first queued request — classic micro-batching: tiny
+added latency bound, large throughput win (one dispatch + one pad instead
+of one per request).
+
+Because the engine's evaluation is row-independent and the engine pads to
+its row buckets anyway, a coalesced call is bit-identical to per-request
+calls — batching is purely a throughput optimization.
+
+``predict`` requests ride the same queue: they share the batched feature
+transform and apply the (cheap, host-side) classifier head per request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Callable, Deque, List, Optional, Sequence
+
+import numpy as np
+
+from .engine import TransformEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    max_batch_rows: int = 8192  # flush when this many rows are queued
+    max_delay_ms: float = 2.0  # ... or this long after the first request
+    max_queue: int = 4096  # pending-request backpressure bound
+
+    def __post_init__(self):
+        if self.max_batch_rows < 1:
+            raise ValueError(f"max_batch_rows must be >= 1, got {self.max_batch_rows}")
+        if self.max_delay_ms < 0:
+            raise ValueError(f"max_delay_ms must be >= 0, got {self.max_delay_ms}")
+        if self.max_queue < 1:
+            # 0 would deadlock: submit waits for space the worker can never
+            # create (it only notifies _not_full after popping a request)
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+
+
+@dataclasses.dataclass
+class _Request:
+    Z: np.ndarray
+    kind: str  # 'transform' | 'predict'
+    future: Future
+    t_submit: float
+
+
+class MicroBatcher:
+    """Request-coalescing front of a :class:`TransformEngine`.
+
+    ``head`` (optional) maps a feature block ``(q, F)`` to predictions for
+    ``kind='predict'`` requests — e.g. ``classifier.head`` (SVM argmax).
+
+    Start the background worker with ``start()`` (or use the context
+    manager); ``submit`` returns a ``concurrent.futures.Future``.  For
+    deterministic in-process use (tests, benchmark replay without threads)
+    ``run_once()`` drains the current queue synchronously in coalesced
+    batches.
+    """
+
+    def __init__(
+        self,
+        engine: TransformEngine,
+        *,
+        head: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        config: BatcherConfig = BatcherConfig(),
+    ):
+        self.engine = engine
+        self.head = head
+        self.config = config
+        self._queue: Deque[_Request] = deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+        self._stopped = False
+        self.stats = {
+            "requests": 0,
+            "batches": 0,
+            "rows": 0,
+            "coalesced_max": 0,
+            "wait_ms_total": 0.0,
+        }
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "MicroBatcher":
+        if self._thread is not None:
+            return self
+        self._stopped = False
+        self._running = True
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        with self._lock:
+            self._running = False
+            self._stopped = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.run_once()  # drain stragglers synchronously
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, Z, kind: str = "transform") -> Future:
+        """Enqueue one request; the future resolves to (q, F) features for
+        ``kind='transform'`` or head outputs for ``kind='predict'``."""
+        if kind not in ("transform", "predict"):
+            raise ValueError(f"unknown request kind {kind!r}")
+        if kind == "predict" and self.head is None:
+            raise ValueError("predict requests need a head= callable")
+        Z = np.asarray(Z)
+        n = self.engine.consts.n
+        if Z.ndim != 2 or Z.shape[1] != n:
+            # reject malformed requests HERE: once coalesced, a bad request
+            # would fail the whole batch and poison innocent callers' futures
+            raise ValueError(f"expected (q, {n}) request rows, got {Z.shape}")
+        fut: Future = Future()
+        req = _Request(Z=Z, kind=kind, future=fut, t_submit=time.perf_counter())
+        with self._lock:
+            while (
+                not self._stopped
+                and self._running
+                and len(self._queue) >= self.config.max_queue
+            ):
+                self._not_full.wait()
+            if self._stopped:
+                # after stop()'s final drain nothing empties the queue;
+                # enqueueing would leave the caller blocked on a future that
+                # never resolves (including submitters woken from the
+                # backpressure wait above by stop())
+                raise RuntimeError("MicroBatcher is stopped; start() it again")
+            self._queue.append(req)
+            self.stats["requests"] += 1
+            self._not_empty.notify()
+        return fut
+
+    def transform(self, Z) -> np.ndarray:
+        """Synchronous convenience: submit + wait."""
+        fut = self.submit(Z, "transform")
+        if self._thread is None:
+            self.run_once()
+        return fut.result()
+
+    def predict(self, Z) -> np.ndarray:
+        fut = self.submit(Z, "predict")
+        if self._thread is None:
+            self.run_once()
+        return fut.result()
+
+    # -- batching core -----------------------------------------------------
+
+    def _take_batch(self, block: bool) -> List[_Request]:
+        """Pop a coalesced batch: up to ``max_batch_rows`` rows, waiting at
+        most ``max_delay_ms`` after the first pending request."""
+        with self._lock:
+            if block:
+                while not self._queue and self._running:
+                    self._not_empty.wait()
+            if not self._queue:
+                return []
+            # anchor the flush deadline at the OLDEST pending request, so a
+            # request that already waited while the previous batch was being
+            # processed is not taxed another full delay window
+            deadline = self._queue[0].t_submit + self.config.max_delay_ms / 1e3
+            # collection window: give concurrent submitters a bounded chance
+            # to join this batch.  A timed condition wait (woken by submit)
+            # rather than a sleep/poll loop — the worker stays off the GIL
+            # while it waits.
+            while self._running:
+                rows = sum(r.Z.shape[0] for r in self._queue)
+                if rows >= self.config.max_batch_rows:
+                    break
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                self._not_empty.wait(timeout=remaining)
+            batch: List[_Request] = []
+            rows = 0
+            while self._queue:
+                nxt = self._queue[0]
+                if batch and rows + nxt.Z.shape[0] > self.config.max_batch_rows:
+                    break
+                batch.append(self._queue.popleft())
+                rows += nxt.Z.shape[0]
+            self._not_full.notify_all()
+        return batch
+
+    def _process(self, batch: Sequence[_Request]):
+        if not batch:
+            return
+        t0 = time.perf_counter()
+        try:
+            Z = (
+                np.concatenate([r.Z for r in batch], axis=0)
+                if len(batch) > 1
+                else batch[0].Z
+            )
+            feats = self.engine.transform(Z)
+        except Exception as e:  # propagate to every caller in the batch
+            for r in batch:
+                if not r.future.set_running_or_notify_cancel():
+                    continue
+                r.future.set_exception(e)
+            return
+        self.stats["batches"] += 1
+        self.stats["rows"] += int(Z.shape[0])
+        self.stats["coalesced_max"] = max(self.stats["coalesced_max"], len(batch))
+        self.stats["wait_ms_total"] += (t0 - batch[0].t_submit) * 1e3
+        start = 0
+        for r in batch:
+            stop = start + r.Z.shape[0]
+            block = feats[start:stop]
+            if len(batch) > 1:
+                # own the rows: a view would pin the whole coalesced batch
+                # buffer in memory for as long as any caller keeps its result
+                block = np.ascontiguousarray(block)
+            start = stop
+            if not r.future.set_running_or_notify_cancel():
+                continue
+            try:
+                if r.kind == "predict":
+                    r.future.set_result(self.head(block))
+                else:
+                    r.future.set_result(block)
+            except Exception as e:
+                r.future.set_exception(e)
+
+    def run_once(self) -> int:
+        """Synchronously drain the queue in coalesced batches (no worker
+        thread needed).  Returns the number of requests processed."""
+        done = 0
+        while True:
+            batch = self._take_batch(block=False)
+            if not batch:
+                return done
+            self._process(batch)
+            done += len(batch)
+
+    def _loop(self):
+        while True:
+            with self._lock:
+                if not self._running and not self._queue:
+                    return
+            batch = self._take_batch(block=True)
+            self._process(batch)

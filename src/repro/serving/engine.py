@@ -1,0 +1,256 @@
+"""TransformEngine: compiled, shape-bucketed, optionally sharded (FT) serving.
+
+One engine owns one model set (the per-class models of a classifier, or a
+single model) and the fused evaluation plan built from it by
+:func:`repro.api.plan_constants` — the same hoisted trace constants the
+direct :func:`repro.api.feature_transform` path uses, so both paths are
+bit-identical at matched dtype.
+
+Request shapes never recompile: a query of ``q`` rows is zero-padded up to a
+**pow2 row bucket** (clamped to ``[min_bucket, max_bucket]`` and rounded up
+to the data-shard count), mirroring the zero-recompile ``(Lcap, Kcap)``
+capacity buckets of the fit path.  Every row of the fused transform is
+independent (the whole evaluation is row-parallel matmuls with a fixed
+contraction order), so padding rows changes nothing about real rows and the
+sliced result is bit-identical to evaluating at the exact shape.
+
+Sharded execution reuses :mod:`repro.core.distributed`'s mesh helpers: rows
+are data-parallel over the mesh's ``data_axes`` (``shard_map`` with the same
+row spec as the distributed fit), plan constants are replicated (closed
+over), and no collectives are needed — the transform is embarrassingly
+row-parallel, so multi-host serving scales linearly in devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distributed import (
+    SHARD_MAP_KW,
+    data_spec,
+    num_data_shards,
+    shard_map_compat,
+)
+from ..core.oavi import pow2_bucket
+
+
+class UnsupportedModelError(TypeError):
+    """The model set has no fused term-book plan (e.g. VCA) — serve those
+    through the legacy per-model loop instead."""
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Row-bucket policy of a :class:`TransformEngine`.
+
+    ``min_bucket`` bounds the padding waste of tiny requests from below
+    (every request costs at least one ``min_bucket``-row device call);
+    ``max_bucket`` bounds device memory from above — larger queries stream
+    through in full ``max_bucket`` chunks (which are already-warm buckets,
+    so chunking never recompiles either).
+    """
+
+    min_bucket: int = 64
+    max_bucket: int = 16_384  # larger requests chunk through warm buckets
+
+    def __post_init__(self):
+        if self.min_bucket < 1 or self.max_bucket < self.min_bucket:
+            raise ValueError(
+                f"need 1 <= min_bucket <= max_bucket, got "
+                f"({self.min_bucket}, {self.max_bucket})"
+            )
+
+
+class TransformEngine:
+    """Serve the fused feature transform of one model set.
+
+    Parameters
+    ----------
+    models : the per-class model set (term-book models only — OAVI / ABM).
+    mesh : optional ``jax.sharding.Mesh``; when given, every device call is
+        ``shard_map``-sharded with rows data-parallel over ``data_axes`` and
+        plan constants replicated.  ``mesh=None`` runs locally.
+    data_axes : mesh axes the row dimension is sharded over.
+    config : row-bucket policy (:class:`EngineConfig`).
+    """
+
+    def __init__(
+        self,
+        models: Sequence,
+        *,
+        mesh=None,
+        data_axes: Sequence[str] = ("data",),
+        config: EngineConfig = EngineConfig(),
+    ):
+        from .. import api
+
+        self.models: Tuple = tuple(models)
+        self._model_key = tuple(id(m) for m in self.models)
+        plan = api._fuse(self.models)
+        if plan is None:
+            raise UnsupportedModelError(
+                "TransformEngine needs term-book models (OAVI/ABM); got a "
+                "model set with no fused plan (e.g. VCA or mixed dtypes) — "
+                "use repro.api.feature_transform's per-model fallback"
+            )
+        self.plan = plan
+        self.consts = api.plan_constants(plan)
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.config = config
+        self.shards = 1 if mesh is None else num_data_shards(mesh, self.data_axes)
+        # every bucket must split evenly over the data shards AND leave every
+        # shard >= 2 rows: a 1-row local shard hits XLA's single-row gemv
+        # lowering, whose accumulation order differs from the gemm path and
+        # would break bit-identity with the local/direct evaluation
+        self.min_bucket = self._round_to_shards(
+            max(pow2_bucket(config.min_bucket), 2 * self.shards)
+        )
+        self.max_bucket = self._round_to_shards(
+            max(pow2_bucket(config.max_bucket), self.min_bucket)
+        )
+        self._fn = self._build_fn()
+        self._seen_buckets: set = set()
+        self._lock = threading.Lock()
+        self.stats: Dict = {
+            "requests": 0,
+            "rows": 0,
+            "device_calls": 0,
+            "padded_rows": 0,
+            "recompiles": 0,
+            "warmup_compiles": 0,
+            "buckets": {},  # bucket -> device calls
+        }
+
+    # -- plan / shape machinery -------------------------------------------
+
+    def _round_to_shards(self, b: int) -> int:
+        return ((b + self.shards - 1) // self.shards) * self.shards
+
+    def _build_fn(self):
+        consts = self.consts
+        from .. import api
+
+        def eval_fn(Z):
+            return api.eval_with_constants(consts, Z)
+
+        if self.mesh is None:
+            return jax.jit(eval_fn)
+        dspec = data_spec(self.data_axes)
+        sharded = shard_map_compat(
+            eval_fn,
+            mesh=self.mesh,
+            in_specs=(dspec,),
+            out_specs=dspec,
+            **SHARD_MAP_KW,
+        )
+        return jax.jit(sharded)
+
+    def matches(self, models: Sequence) -> bool:
+        """True when this engine serves exactly ``models`` (by identity)."""
+        return tuple(id(m) for m in models) == self._model_key
+
+    def bucket_for(self, q: int) -> int:
+        """Row bucket a ``q``-row request pads to (pow2, clamped, shard-even)."""
+        b = min(max(pow2_bucket(max(q, 1)), self.min_bucket), self.max_bucket)
+        return self._round_to_shards(b)
+
+    def buckets(self) -> Tuple[int, ...]:
+        """Every bucket this engine can dispatch (smallest to largest)."""
+        out = []
+        b = self.min_bucket
+        while b < self.max_bucket:
+            out.append(b)
+            b = self._round_to_shards(pow2_bucket(b + 1))
+        out.append(self.max_bucket)
+        return tuple(out)
+
+    # -- execution ---------------------------------------------------------
+
+    def warmup(self, max_rows: Optional[int] = None) -> int:
+        """Trace-and-compile every bucket up to ``max_rows`` (default: all).
+
+        Returns the number of compiles triggered.  After a full warmup a
+        request trace of any shape mix runs with ``stats["recompiles"] == 0``.
+        """
+        top = self.max_bucket if max_rows is None else self.bucket_for(max_rows)
+        compiled = 0
+        for b in self.buckets():
+            if b > top:
+                break
+            with self._lock:
+                if b in self._seen_buckets:
+                    continue
+                self._seen_buckets.add(b)
+            Zb = np.zeros((b, self.consts.n), self.plan.dtype)
+            jax.block_until_ready(self._fn(jnp.asarray(Zb)))
+            compiled += 1
+        with self._lock:
+            self.stats["warmup_compiles"] += compiled
+        return compiled
+
+    def _dispatch(self, Zp: np.ndarray) -> np.ndarray:
+        """One padded device call at a bucket shape; updates compile stats."""
+        b = Zp.shape[0]
+        with self._lock:
+            if b not in self._seen_buckets:
+                self._seen_buckets.add(b)
+                self.stats["recompiles"] += 1
+            self.stats["device_calls"] += 1
+            self.stats["buckets"][b] = self.stats["buckets"].get(b, 0) + 1
+        return np.asarray(self._fn(jnp.asarray(Zp)))
+
+    def transform(self, Z) -> np.ndarray:
+        """(FT) features for one request: (q, num_features) in plan dtype.
+
+        Bit-identical to ``api.feature_transform(self.models, Z)`` at the
+        plan dtype for any q; rows beyond ``max_bucket`` stream through in
+        full already-warm chunks.
+        """
+        Z = np.asarray(Z)
+        if Z.ndim != 2 or Z.shape[1] != self.consts.n:
+            raise ValueError(
+                f"expected (q, {self.consts.n}) queries, got {Z.shape}"
+            )
+        q = Z.shape[0]
+        with self._lock:
+            self.stats["requests"] += 1
+            self.stats["rows"] += q
+        out_dtype = self.plan.dtype
+        if q == 0 or self.consts.num_features == 0:
+            return np.zeros((q, self.consts.num_features), out_dtype)
+        Zd = Z.astype(self.plan.dtype, copy=False)
+        out = np.empty((q, self.consts.num_features), out_dtype)
+        start = 0
+        while start < q:
+            stop = min(start + self.max_bucket, q)
+            chunk = Zd[start:stop]
+            b = self.bucket_for(chunk.shape[0])
+            if chunk.shape[0] < b:
+                Zp = np.zeros((b, self.consts.n), self.plan.dtype)
+                Zp[: chunk.shape[0]] = chunk
+                with self._lock:
+                    self.stats["padded_rows"] += b - chunk.shape[0]
+            else:
+                Zp = chunk
+            out[start:stop] = self._dispatch(Zp)[: chunk.shape[0]]
+            start = stop
+        return out
+
+    def __repr__(self) -> str:
+        where = (
+            "local"
+            if self.mesh is None
+            else f"sharded(shards={self.shards}, axes={self.data_axes})"
+        )
+        return (
+            f"TransformEngine(models={len(self.models)}, "
+            f"features={self.consts.num_features}, {where}, "
+            f"buckets=[{self.min_bucket}..{self.max_bucket}])"
+        )

@@ -233,6 +233,18 @@ def test_fused_transform_batching_exact(fitted_models):
     assert np.array_equal(np.asarray(whole), np.asarray(chunked))
 
 
+def test_fused_transform_batch_size_one_bit_identical(fitted_models):
+    """batch_size=1 must not drop chunks into XLA's single-row gemv lowering
+    (different accumulation order): output stays bit-identical to direct."""
+    models = [fitted_models["oavi"]]
+    Z = np.random.default_rng(8).uniform(0, 1, (5, 4)).astype(np.float32)
+    whole = api.feature_transform(models, Z)
+    one = api.feature_transform(models, Z, batch_size=1)
+    assert np.array_equal(np.asarray(whole), np.asarray(one))
+    single = api.feature_transform(models, Z[:1])
+    assert np.array_equal(np.asarray(single), np.asarray(whole)[:1])
+
+
 def test_fused_transform_vca_fallback(fitted_models):
     """VCA has no term book: feature_transform falls back to the loop."""
     models = [fitted_models["vca"]]

@@ -1,0 +1,499 @@
+"""Serving subsystem tests: engine buckets/sharding, batcher, registry."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.pipeline import PipelineConfig, VanishingIdealClassifier
+from repro.serving import (
+    BatcherConfig,
+    EngineConfig,
+    MicroBatcher,
+    ModelRegistry,
+    TransformEngine,
+    UnsupportedModelError,
+    load_servable,
+)
+
+CFG = EngineConfig(min_bucket=32, max_bucket=512)
+
+
+@pytest.fixture(scope="module")
+def planted():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (900, 4)).astype(np.float32)
+    X[:, 3] = np.clip(X[:, 0] * X[:, 1] + rng.normal(0, 0.01, 900), 0, 1)
+    return X
+
+
+@pytest.fixture(scope="module")
+def labels(planted):
+    return (planted[:, 0] > 0.5).astype(int)
+
+
+@pytest.fixture(scope="module")
+def models(planted, labels):
+    return [
+        api.fit(planted[labels == c], method="oavi:fast", psi=0.005,
+                backend="local", cap_terms=64)
+        for c in np.unique(labels)
+    ]
+
+
+@pytest.fixture(scope="module")
+def classifier(planted, labels):
+    clf = VanishingIdealClassifier(
+        PipelineConfig(method="oavi:fast", psi=0.005, oavi_kw={"cap_terms": 64})
+    )
+    return clf.fit(planted, labels)
+
+
+def _queries(q, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, 1, (q, 4)).astype(np.float32)
+
+
+# -- engine -------------------------------------------------------------------
+
+
+def test_engine_bit_identical_to_direct_path(models):
+    eng = TransformEngine(models, config=CFG)
+    for q in (1, 3, 32, 33, 100, 512, 700):
+        Z = _queries(q, seed=q)
+        direct = np.asarray(api.feature_transform(models, Z))
+        served = eng.transform(Z)
+        assert served.dtype == direct.dtype
+        assert np.array_equal(served, direct), f"q={q} not bit-identical"
+
+
+def test_engine_buckets_pow2_clamped(models):
+    eng = TransformEngine(models, config=CFG)
+    assert eng.buckets() == (32, 64, 128, 256, 512)
+    assert eng.bucket_for(1) == 32
+    assert eng.bucket_for(32) == 32
+    assert eng.bucket_for(33) == 64
+    assert eng.bucket_for(512) == 512
+    assert eng.bucket_for(10_000) == 512  # clamped; larger requests chunk
+
+
+def test_engine_ragged_sizes_one_compile_per_bucket(models):
+    """Ragged request sizes across bucket boundaries pad correctly and
+    trigger at most one compile per bucket."""
+    eng = TransformEngine(models, config=CFG)
+    sizes = [3, 31, 32, 33, 63, 64, 65, 100, 127, 128, 129, 400]
+    buckets_used = {eng.bucket_for(q) for q in sizes}
+    for q in sizes:
+        Z = _queries(q, seed=q)
+        assert np.array_equal(
+            eng.transform(Z), np.asarray(api.feature_transform(models, Z))
+        )
+    assert eng.stats["recompiles"] == len(buckets_used)
+    # replaying the same ragged mix compiles nothing new
+    before = eng.stats["recompiles"]
+    for q in sizes:
+        eng.transform(_queries(q, seed=q))
+    assert eng.stats["recompiles"] == before
+    assert eng.stats["padded_rows"] > 0
+
+
+def test_engine_warmup_then_zero_recompiles(models):
+    eng = TransformEngine(models, config=CFG)
+    compiled = eng.warmup()
+    assert compiled == len(eng.buckets())
+    assert eng.warmup() == 0  # idempotent
+    for q in (1, 17, 33, 129, 511, 2000):
+        eng.transform(_queries(q, seed=q))
+    assert eng.stats["recompiles"] == 0
+    assert eng.stats["warmup_compiles"] == compiled
+
+
+def test_engine_chunks_requests_beyond_max_bucket(models):
+    eng = TransformEngine(models, config=CFG)
+    eng.warmup()
+    Z = _queries(1100, seed=9)  # 512 + 512 + 76 -> 3 device calls
+    out = eng.transform(Z)
+    assert np.array_equal(out, np.asarray(api.feature_transform(models, Z)))
+    assert eng.stats["device_calls"] == 3  # warmup tracked separately
+    assert eng.stats["recompiles"] == 0
+
+
+def test_engine_empty_request(models):
+    eng = TransformEngine(models, config=CFG)
+    out = eng.transform(np.zeros((0, 4), np.float32))
+    assert out.shape == (0, eng.consts.num_features)
+
+
+def test_engine_rejects_vca(planted):
+    vca = api.fit(planted, method="vca", psi=0.005)
+    with pytest.raises(UnsupportedModelError, match="term-book"):
+        TransformEngine([vca], config=CFG)
+
+
+def test_engine_rejects_wrong_width(models):
+    eng = TransformEngine(models, config=CFG)
+    with pytest.raises(ValueError, match="expected"):
+        eng.transform(np.zeros((5, 7), np.float32))
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="min_bucket"):
+        EngineConfig(min_bucket=64, max_bucket=32)
+
+
+def test_feature_transform_engine_kwarg(models):
+    eng = TransformEngine(models, config=CFG)
+    Z = _queries(77)
+    assert np.array_equal(
+        np.asarray(api.feature_transform(models, Z, engine=eng)),
+        np.asarray(api.feature_transform(models, Z)),
+    )
+    with pytest.raises(ValueError, match="different model set"):
+        api.feature_transform(models[:1], Z, engine=eng)
+
+
+def test_sharded_engine_matches_local_on_1device_mesh(models):
+    import jax
+
+    mesh = jax.make_mesh((1,), ("data",))
+    local = TransformEngine(models, config=CFG)
+    sharded = TransformEngine(models, mesh=mesh, config=CFG)
+    assert sharded.shards == 1
+    for q in (3, 64, 100, 700):
+        Z = _queries(q, seed=q)
+        assert np.array_equal(sharded.transform(Z), local.transform(Z))
+
+
+def test_sharded_engine_multi_device_subprocess():
+    """Sharded == local on a real multi-shard mesh (fake CPU devices)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.abspath("src")
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro import api
+        from repro.serving import EngineConfig, TransformEngine
+        rng = np.random.default_rng(0)
+        X = rng.uniform(0, 1, (600, 4)).astype(np.float32)
+        X[:, 3] = np.clip(X[:, 0] * X[:, 1] + rng.normal(0, 0.01, 600), 0, 1)
+        models = [api.fit(X, method="oavi:fast", psi=0.005, backend="local",
+                          cap_terms=64)]
+        cfg = EngineConfig(min_bucket=32, max_bucket=256)
+        mesh = jax.make_mesh((4,), ("data",))
+        local = TransformEngine(models, config=cfg)
+        sharded = TransformEngine(models, mesh=mesh, config=cfg)
+        assert sharded.shards == 4
+        sharded.warmup()
+        for q in (3, 30, 100, 300):
+            Z = rng.uniform(0, 1, (q, 4)).astype(np.float32)
+            a, b = local.transform(Z), sharded.transform(Z)
+            assert a.shape == b.shape
+            assert np.array_equal(a, b), q
+        assert sharded.stats["recompiles"] == 0
+        # a bucket must never divide to < 2 rows per shard (single-row
+        # local matmuls lower as gemv and break bit-identity)
+        tiny = TransformEngine(models, mesh=mesh,
+                               config=EngineConfig(min_bucket=1, max_bucket=256))
+        assert tiny.min_bucket >= 2 * tiny.shards, tiny.min_bucket
+        for q in (1, 2, 5):
+            Z = rng.uniform(0, 1, (q, 4)).astype(np.float32)
+            assert np.array_equal(tiny.transform(Z), local.transform(Z)), q
+        print("SHARDED-OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED-OK" in out.stdout
+
+
+# -- batcher ------------------------------------------------------------------
+
+
+def test_batcher_run_once_coalesces_bit_exact(models):
+    eng = TransformEngine(models, config=CFG)
+    eng.warmup()
+    bat = MicroBatcher(eng, config=BatcherConfig(max_batch_rows=256))
+    Zs = [_queries(q, seed=q) for q in (5, 17, 64, 9, 33)]
+    futs = [bat.submit(Z) for Z in Zs]
+    assert bat.run_once() == len(Zs)
+    assert bat.stats["batches"] == 1  # 128 rows coalesce into one call
+    for Z, f in zip(Zs, futs):
+        assert np.array_equal(
+            f.result(timeout=0), np.asarray(api.feature_transform(models, Z))
+        )
+
+
+def test_batcher_respects_max_batch_rows(models):
+    eng = TransformEngine(models, config=CFG)
+    eng.warmup()
+    bat = MicroBatcher(eng, config=BatcherConfig(max_batch_rows=64))
+    futs = [bat.submit(_queries(40, seed=i)) for i in range(4)]
+    bat.run_once()
+    assert bat.stats["batches"] == 4  # 40+40 > 64: no pair fits one batch
+    for f in futs:
+        assert f.done()
+
+
+def test_batcher_threaded_predict_and_transform(models, classifier):
+    eng = TransformEngine(classifier.models, config=CFG)
+    eng.warmup()
+    Z = _queries(150, seed=2)
+    Zs = classifier.scaler.transform(Z)
+    with MicroBatcher(eng, head=classifier.head) as bat:
+        f_t = bat.submit(Zs, "transform")
+        f_p = bat.submit(Zs, "predict")
+        feats = f_t.result(timeout=30)
+        preds = f_p.result(timeout=30)
+    assert np.array_equal(preds, classifier.predict(Z))
+    assert np.array_equal(feats, classifier.transform(Z).astype(feats.dtype))
+
+
+def test_batcher_config_validation():
+    with pytest.raises(ValueError, match="max_queue"):
+        BatcherConfig(max_queue=0)
+    with pytest.raises(ValueError, match="max_batch_rows"):
+        BatcherConfig(max_batch_rows=0)
+    with pytest.raises(ValueError, match="max_delay_ms"):
+        BatcherConfig(max_delay_ms=-1.0)
+
+
+def test_batcher_unstarted_prequeue_beyond_max_queue_never_blocks(models):
+    """run_once mode: backpressure only applies while a worker is running,
+    so pre-queueing an open-loop trace can exceed max_queue freely."""
+    eng = TransformEngine(models, config=CFG)
+    eng.warmup()
+    bat = MicroBatcher(eng, config=BatcherConfig(max_queue=2))
+    futs = [bat.submit(_queries(4, seed=i)) for i in range(6)]
+    out = bat.transform(_queries(4))  # sync convenience drains everything
+    assert out.shape[0] == 4 and all(f.done() for f in futs)
+
+
+def test_batcher_predict_requires_head(models):
+    bat = MicroBatcher(TransformEngine(models, config=CFG))
+    with pytest.raises(ValueError, match="head"):
+        bat.submit(_queries(4), "predict")
+    with pytest.raises(ValueError, match="unknown request kind"):
+        bat.submit(_queries(4), "decode")
+
+
+def test_batcher_submit_after_stop_raises_then_restartable(models):
+    eng = TransformEngine(models, config=CFG)
+    eng.warmup()
+    bat = MicroBatcher(eng)
+    bat.start()
+    bat.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        bat.submit(_queries(4))
+    bat.start()  # a stopped batcher can come back up
+    try:
+        assert bat.submit(_queries(4)).result(timeout=30).shape[0] == 4
+    finally:
+        bat.stop()
+
+
+def test_batcher_rejects_malformed_requests_at_submit(models):
+    """Shape errors surface at submit, never poisoning a coalesced batch."""
+    eng = TransformEngine(models, config=CFG)
+    eng.warmup()
+    bat = MicroBatcher(eng)
+    with pytest.raises(ValueError, match="expected"):
+        bat.submit(np.zeros((5, 9), np.float32))  # wrong width
+    with pytest.raises(ValueError, match="expected"):
+        bat.submit(np.zeros((4,), np.float32))  # wrong rank
+    good = bat.submit(_queries(5))
+    bat.run_once()
+    assert good.result(timeout=0).shape == (5, eng.consts.num_features)
+
+
+def test_batcher_propagates_processing_errors(models):
+    def bad_head(feats):
+        raise RuntimeError("head exploded")
+
+    eng = TransformEngine(models, config=CFG)
+    eng.warmup()
+    bat = MicroBatcher(eng, head=bad_head)
+    fut = bat.submit(_queries(5), "predict")
+    ok = bat.submit(_queries(3))  # same batch, must still succeed
+    bat.run_once()
+    with pytest.raises(RuntimeError, match="head exploded"):
+        fut.result(timeout=0)
+    assert ok.result(timeout=0).shape[0] == 3
+
+
+# -- classifier serialization + engine routing --------------------------------
+
+
+def test_classifier_save_load_predict_bit_identical(classifier, planted, tmp_path):
+    path = str(tmp_path / "clf")
+    committed = classifier.save(path)
+    assert os.path.exists(os.path.join(committed, "COMMITTED"))
+    restored = VanishingIdealClassifier.load(path)
+    Z = _queries(333, seed=11)
+    assert np.array_equal(restored.predict(Z), classifier.predict(Z))
+    assert np.array_equal(restored.transform(Z), classifier.transform(Z))
+    assert restored.config.method == classifier.config.method
+    assert np.array_equal(restored.classes_, classifier.classes_)
+
+
+def test_classifier_load_rejects_model_checkpoint(models, tmp_path):
+    api.save(models[0], str(tmp_path / "m"))
+    with pytest.raises(ValueError, match="not a repro.vanishing_ideal_classifier"):
+        VanishingIdealClassifier.load(str(tmp_path / "m"))
+
+
+def test_classifier_save_unfitted_errors():
+    clf = VanishingIdealClassifier()
+    with pytest.raises(ValueError, match="unfitted"):
+        clf.save("/tmp/nope")
+
+
+def test_classifier_attach_engine_predict_identical(classifier, planted):
+    Z = _queries(257, seed=12)
+    base_pred = classifier.predict(Z)
+    base_feat = classifier.transform(Z)
+    eng = classifier.attach_engine(engine_config=CFG)
+    try:
+        assert eng is classifier.engine and eng.matches(classifier.models)
+        assert np.array_equal(classifier.predict(Z), base_pred)
+        assert np.array_equal(classifier.transform(Z), base_feat)
+        assert eng.stats["requests"] >= 2
+    finally:
+        classifier.engine = None  # module-scoped fixture: leave it clean
+
+
+def test_classifier_refit_drops_stale_engine(planted, labels):
+    clf = VanishingIdealClassifier(
+        PipelineConfig(method="oavi:fast", psi=0.005, oavi_kw={"cap_terms": 64})
+    )
+    clf.fit(planted, labels)
+    clf.attach_engine(engine_config=CFG)
+    assert clf.engine is not None
+    clf.fit(planted, labels)  # refit: old engine no longer matches
+    assert clf.engine is None
+
+
+def test_classifier_attach_engine_vca_falls_back(planted, labels):
+    clf = VanishingIdealClassifier(PipelineConfig(method="vca", psi=0.005))
+    clf.fit(planted, labels)
+    assert clf.attach_engine() is None and clf.engine is None
+    assert clf.predict(planted[:32]).shape == (32,)  # per-model fallback
+
+
+# -- registry -----------------------------------------------------------------
+
+
+def test_registry_save_load_serve_bit_matches_direct(classifier, tmp_path):
+    """The acceptance path: save -> registry.load -> serve bit-matches the
+    direct feature_transform."""
+    path = str(tmp_path / "clf")
+    classifier.save(path)
+    reg = ModelRegistry(engine_config=CFG)
+    entry = reg.load("default", path)
+    assert entry.engine is not None and entry.engine.stats["warmup_compiles"] > 0
+    Z = _queries(181, seed=13)
+    direct = np.asarray(
+        api.feature_transform(list(entry.models), entry.scale(Z))
+    )
+    assert np.array_equal(entry.transform(Z), direct)
+    assert np.array_equal(entry.predict(Z), classifier.predict(Z))
+    assert entry.engine.stats["recompiles"] == 0
+    assert entry.num_features == direct.shape[1]
+
+
+def test_registry_load_single_model(models, tmp_path):
+    api.save(models[0], str(tmp_path / "m"))
+    reg = ModelRegistry(engine_config=CFG)
+    entry = reg.load("gen", str(tmp_path / "m"))
+    Z = _queries(64, seed=14)
+    assert np.array_equal(
+        entry.transform(Z), np.asarray(api.feature_transform(list(entry.models), Z))
+    )
+    with pytest.raises(ValueError, match="bare model"):
+        entry.predict(Z)
+
+
+def test_load_servable_dispatch(classifier, models, tmp_path):
+    classifier.save(str(tmp_path / "c"))
+    api.save(models[0], str(tmp_path / "m"))
+    assert isinstance(load_servable(str(tmp_path / "c")), VanishingIdealClassifier)
+    assert type(load_servable(str(tmp_path / "m"))) is type(models[0])
+    with pytest.raises(FileNotFoundError):
+        load_servable(str(tmp_path / "missing"))
+
+
+def test_registry_hot_swap_versions(classifier):
+    reg = ModelRegistry(engine_config=CFG, warmup=False)
+    e1 = reg.register("default", classifier)
+    e2 = reg.register("default", classifier)
+    assert (e1.version, e2.version) == (1, 2)
+    assert reg.active_version("default") == 2  # newest activates by default
+    reg.activate("default", 1)
+    assert reg.get("default").version == 1
+    assert reg.get("default", version=2) is e2
+    assert reg.versions("default") == (1, 2)
+    staged = reg.register("default", classifier, activate=False)
+    assert reg.active_version("default") == 1  # staging doesn't flip traffic
+    reg.activate("default", staged.version)
+    assert reg.get("default") is staged
+    # a brand-new name registered staged has NO active version until
+    # activate() — traffic must never resolve to an unvalidated model
+    fresh = reg.register("fresh", classifier, activate=False)
+    assert reg.active_version("fresh") is None
+    with pytest.raises(KeyError, match="staged"):
+        reg.get("fresh")
+    reg.activate("fresh", fresh.version)
+    assert reg.get("fresh") is fresh
+    with pytest.raises(KeyError, match="no version"):
+        reg.get("default", version=99)
+    with pytest.raises(KeyError):
+        reg.activate("default", 99)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("default", classifier, version=1)
+
+
+def test_registry_remove_repoints_active(classifier):
+    reg = ModelRegistry(engine_config=CFG, warmup=False)
+    reg.register("m", classifier)
+    reg.register("m", classifier)
+    reg.remove("m", 2)
+    assert reg.active_version("m") == 1
+    reg.remove("m")
+    with pytest.raises(KeyError):
+        reg.get("m")
+    assert reg.names() == ()
+    # removing the active version never flips traffic onto a staged one
+    reg.register("s", classifier)  # v1, active
+    reg.register("s", classifier, activate=False)  # v2, staged
+    reg.remove("s", 1)
+    assert reg.active_version("s") is None
+    with pytest.raises(KeyError, match="staged"):
+        reg.get("s")
+
+
+# -- CLI driver ---------------------------------------------------------------
+
+
+def test_serve_vi_cli_in_process(tmp_path):
+    from repro.launch import serve_vi
+
+    report = serve_vi.main([
+        "--fit-m", "600", "--requests", "24", "--mean-rows", "32",
+        "--concurrency", "4", "--min-bucket", "32", "--max-bucket", "512",
+        "--model-dir", str(tmp_path / "ckpt"),
+    ])
+    assert report["requests"] == 24
+    assert report["recompiles"] == 0
+    assert report["rows_per_s"] > 0
+    # second run exercises the checkpoint-load path
+    report2 = serve_vi.main([
+        "--requests", "8", "--mean-rows", "32", "--concurrency", "2",
+        "--min-bucket", "32", "--max-bucket", "512", "--kind", "transform",
+        "--model-dir", str(tmp_path / "ckpt"),
+    ])
+    assert report2["recompiles"] == 0
