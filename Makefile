@@ -3,12 +3,16 @@
 #   make test             tier-1 test suite (the CI / verify command)
 #   make test-api         just the unified-API tests (fast)
 #   make lint             dead-import lint (pyflakes when installed, AST fallback)
+#   make ci               lint + tier-1 tests + bench-smoke artifact checks
+#                         (what .github/workflows/ci.yml runs)
 #   make bench-smoke      smoke benchmark subset (fig4_scaling, transform_fused,
-#                         fit_fused, serve_engine at quick sizes) + BENCH_*.json
-#                         artifact check
+#                         fit_fused, serve_engine, multiclass_batched at quick
+#                         sizes) + BENCH_*.json artifact check
 #   make bench-transform  fused-vs-legacy transform benchmark (BENCH_transform.json)
 #   make bench-fit        fused fit-path benchmark (BENCH_fit.json)
 #   make bench-serve      batched serving engine benchmark (BENCH_serve.json)
+#   make bench-multiclass sequential-vs-class-batched multi-class fit benchmark
+#                         (BENCH_multiclass.json)
 #   make serve-smoke      in-process CPU run of the serving CLI (repro.launch.serve_vi)
 #   make bench            full quick benchmark sweep
 #   make dev-deps         install dev-only deps (pytest, hypothesis, pyflakes)
@@ -16,8 +20,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-api lint bench bench-smoke bench-transform bench-fit \
-        bench-serve serve-smoke dev-deps
+.PHONY: test test-api lint ci bench bench-smoke bench-transform bench-fit \
+        bench-serve bench-multiclass serve-smoke dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -28,9 +32,11 @@ test-api:
 lint:
 	$(PYTHON) tools/lint.py src/repro benchmarks tools
 
+ci: lint test bench-smoke
+
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine
-	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve
+	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched
+	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve multiclass
 
 bench-transform:
 	$(PYTHON) -m benchmarks.run --only transform_fused
@@ -40,6 +46,9 @@ bench-fit:
 
 bench-serve:
 	$(PYTHON) -m benchmarks.run --only serve_engine
+
+bench-multiclass:
+	$(PYTHON) -m benchmarks.run --only multiclass_batched
 
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve_vi --fit-m 1500 --requests 96 --mean-rows 64 \

@@ -90,7 +90,9 @@ def _make_legacy_degree_step(cfg: OAVIConfig):
             else:
                 y0 = ihb_mod.closed_form_inverse(st.ihb, q)
             y0 = jnp.where(mask, y0, 0.0)
-            mse0 = btb + q @ y0
+            # same vmap-bit-stable reduction as the fused step (oavi.py): the
+            # bit-exactness assert compares the fusion work, not the reduction
+            mse0 = btb + jnp.sum(q * y0)
 
             if cfg.engine == "fast":
                 y, mse_final, it = y0, mse0, jnp.asarray(0, jnp.int32)

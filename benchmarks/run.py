@@ -17,6 +17,7 @@ from . import (
     bench_bound,
     bench_fit,
     bench_ihb,
+    bench_multiclass,
     bench_ordering,
     bench_performance,
     bench_scaling,
@@ -38,6 +39,7 @@ BENCHES = {
     "transform_fused": bench_transform.run,
     "fit_fused": bench_fit.run,
     "serve_engine": bench_serve.run,
+    "multiclass_batched": bench_multiclass.run,
     "roofline": roofline.run,
 }
 

@@ -20,12 +20,29 @@ One entry point over every algorithm family in the repo:
   per-class term books and generator matrices into a *single* jitted
   ``evaluate_terms`` call plus one matmul, with ``batch_size`` chunking so
   million-row transforms stream through device memory.
+* **class-batched multi-class fitting** — :func:`fit_classes` (or
+  :func:`fit` with a list of per-class arrays) drives eligible per-class
+  OAVI fits through one vmapped degree step (:mod:`repro.core.class_batch`)
+  grouped into shared pow2 row buckets, falling back to sequential fits for
+  stragglers and non-batchable configs; :func:`aggregate_fit_stats` folds
+  the per-group compile counters into classifier-level totals.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+    Union,
+    runtime_checkable,
+)
 
 import numpy as np
 
@@ -50,6 +67,7 @@ import jax.numpy as jnp
 
 from .checkpoint import store as ckpt_store
 from .core import abm as abm_mod
+from .core import class_batch as class_batch_mod
 from .core import distributed as distributed_mod
 from .core import oavi as oavi_mod
 from .core import vca as vca_mod
@@ -271,13 +289,16 @@ def fit(
     data_axes: Sequence[str] = ("data",),
     out_sharding=None,
     config=None,
+    class_batch: str = "auto",
     **method_kw,
-) -> VanishingIdealModel:
+) -> Union[VanishingIdealModel, List[VanishingIdealModel]]:
     """Fit a vanishing-ideal model with the selected ``method`` and backend.
 
     Parameters
     ----------
-    X : (m, n) array in ``[0, 1]^n``
+    X : (m, n) array in ``[0, 1]^n`` — or a *list* of per-class arrays, in
+        which case one model is fitted per class (see :func:`fit_classes`)
+        and a list of models is returned.
     method : spec string — ``"oavi"``, ``"oavi:<variant>"``, ``"abm"``,
         ``"vca"``; see :func:`available_methods`.
     psi : vanishing tolerance.
@@ -291,9 +312,28 @@ def fit(
         fused :func:`feature_transform` places its output there by default.
     config : pre-built method config (``OAVIConfig`` / ``ABMConfig`` /
         ``VCAConfig``); overrides ``psi`` and ``method_kw`` when given.
+    class_batch : ``"auto"`` | ``"off"`` — multi-class fits only (``X`` a
+        list): ``"auto"`` batches eligible per-class OAVI fits through one
+        vmapped degree step (:mod:`repro.core.class_batch`).
     **method_kw : forwarded to the method's config constructor (e.g.
         ``cap_terms=64``, ``solver_kw={"max_iter": 2000}``).
     """
+    if isinstance(X, (list, tuple)):
+        return fit_classes(
+            X,
+            method,
+            psi=psi,
+            backend=backend,
+            mesh=mesh,
+            data_axes=data_axes,
+            class_batch=class_batch,
+            config=config,
+            **method_kw,
+        )
+    if class_batch not in ("auto", "off"):
+        raise ValueError(
+            f"unknown class_batch {class_batch!r}; expected 'auto' or 'off'"
+        )
     entry, variant = resolve(method)
     X = np.asarray(X)
     backend_r, mesh_r = _resolve_backend(entry, backend, mesh, X.shape[0])
@@ -313,6 +353,131 @@ def fit(
     if out_sharding is not None:
         model.transform_out_sharding = out_sharding
     return model
+
+
+# ---------------------------------------------------------------------------
+# Multi-class fitting: class-batched when eligible, sequential otherwise
+# ---------------------------------------------------------------------------
+
+
+def fit_classes(
+    Xs: Sequence,
+    method: str = "oavi",
+    *,
+    psi: float = 0.005,
+    backend: str = "auto",
+    mesh=None,
+    data_axes: Sequence[str] = ("data",),
+    class_batch: str = "auto",
+    config=None,
+    **method_kw,
+) -> List[VanishingIdealModel]:
+    """Fit one model per class — Algorithm 2's generator-construction phase.
+
+    With ``class_batch="auto"`` (default) and an eligible OAVI config
+    (:func:`repro.core.oavi.class_batchable`: the closed-form ``fast`` engine
+    — oracle solvers, WIHB and the Cholesky engine are not vmap-bit-stable),
+    classes are grouped into shared pow2 row buckets
+    (:func:`repro.core.class_batch.class_buckets`, bounding padding below
+    2x) and every group of >= 2 classes is fitted through ONE vmapped jitted
+    degree step (:func:`repro.core.class_batch.fit_classes`) — bit-exact
+    against the sequential path at matched capacity, one dispatch per degree
+    instead of k.  Straggler classes (alone in their size bucket), non-OAVI
+    methods and non-batchable configs fall back to per-class :func:`fit`.
+
+    The sharded backend composes: when ``backend`` resolves to
+    ``"sharded"``, batched groups run the vmap-inside-``shard_map`` step
+    over ``mesh`` (class axis replicated, sample axis sharded).
+
+    Returns the fitted models in class order.  Batched models' stats carry a
+    ``"class_batch"`` group dict whose shared ``recompiles`` / ``regrowths``
+    must be aggregated once per group — use :func:`aggregate_fit_stats`.
+    """
+    if class_batch not in ("auto", "off"):
+        raise ValueError(
+            f"unknown class_batch {class_batch!r}; expected 'auto' or 'off'"
+        )
+    entry, variant = resolve(method)
+    Xs = [np.asarray(X) for X in Xs]
+
+    def seq_fit(X):
+        return fit(
+            X,
+            method,
+            psi=psi,
+            backend=backend,
+            mesh=mesh,
+            data_axes=data_axes,
+            config=config,
+            **dict(method_kw),
+        )
+
+    if class_batch == "off" or entry.name != "oavi" or len(Xs) < 2:
+        return [seq_fit(X) for X in Xs]
+    cfg = (
+        config
+        if config is not None
+        else oavi_config_for(variant or "fast", psi, **dict(method_kw))
+    )
+    if not oavi_mod.class_batchable(cfg):
+        return [seq_fit(X) for X in Xs]  # oracle/chol/WIHB: sequential
+
+    backend_r, mesh_r = _resolve_backend(
+        entry, backend, mesh, max(X.shape[0] for X in Xs)
+    )
+    if backend_r == "sharded" and mesh_r is None:
+        mesh_r = _default_mesh(data_axes)
+    models: List[Optional[VanishingIdealModel]] = [None] * len(Xs)
+    buckets = class_batch_mod.class_buckets([X.shape[0] for X in Xs])
+    for _, idxs in sorted(buckets.items()):
+        if len(idxs) == 1:
+            models[idxs[0]] = seq_fit(Xs[idxs[0]])  # straggler fallback
+            continue
+        fitted = class_batch_mod.fit_classes(
+            [Xs[i] for i in idxs],
+            cfg,
+            mesh=mesh_r if backend_r == "sharded" else None,
+            data_axes=tuple(data_axes),
+        )
+        for i, model in zip(idxs, fitted):
+            model.stats["api"] = {
+                "method": entry.spec(variant),
+                "backend": backend_r,
+                "class_batch": True,
+            }
+            models[i] = model
+    return models
+
+
+def aggregate_fit_stats(models: Sequence) -> Dict:
+    """Classifier-level ``recompiles`` / ``regrowths`` over per-class models.
+
+    Class-batched models share ONE compile/regrowth schedule per batch group
+    (their per-model stats all carry the same counts), so naively summing
+    per-class stats overcounts by the group size; this counts each group
+    once and each sequentially-fitted model individually."""
+    recompiles = regrowths = 0
+    batched = 0
+    groups = set()
+    for model in models:
+        stats = getattr(model, "stats", None) or {}
+        group = stats.get("class_batch")
+        if group is not None:
+            batched += 1
+            if group["group"] in groups:
+                continue
+            groups.add(group["group"])
+            recompiles += int(group["recompiles"])
+            regrowths += int(group["regrowths"])
+        else:
+            recompiles += int(stats.get("recompiles", 0))
+            regrowths += int(stats.get("regrowths", 0))
+    return {
+        "recompiles": recompiles,
+        "regrowths": regrowths,
+        "class_batched": batched,
+        "class_batch_groups": len(groups),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -664,10 +829,12 @@ __all__ = [
     "OAVI_VARIANTS",
     "PlanConstants",
     "VanishingIdealModel",
+    "aggregate_fit_stats",
     "available_methods",
     "eval_with_constants",
     "feature_transform",
     "fit",
+    "fit_classes",
     "load",
     "load_state_dict",
     "oavi_config_for",

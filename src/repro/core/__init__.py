@@ -6,7 +6,7 @@ from .ordering import pearson_order, pearson_scores
 from .pipeline import PipelineConfig, VanishingIdealClassifier
 from .svm import LinearSVM, LinearSVMConfig, PolySVM, PolySVMConfig
 from .transform import MinMaxScaler, feature_transform
-from . import abm, distributed, ihb, terms, vca
+from . import abm, class_batch, distributed, ihb, terms, vca
 
 
 def __getattr__(name: str):
@@ -26,5 +26,5 @@ __all__ = [
     "PipelineConfig", "VanishingIdealClassifier", "VARIANTS",
     "LinearSVM", "LinearSVMConfig", "PolySVM", "PolySVMConfig",
     "MinMaxScaler", "feature_transform",
-    "abm", "distributed", "ihb", "terms", "vca",
+    "abm", "class_batch", "distributed", "ihb", "terms", "vca",
 ]

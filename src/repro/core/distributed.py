@@ -60,6 +60,8 @@ from .oavi import (
     border_index_arrays,
     collect_degree,
     degree_step_entry,
+    finalize_fit_stats,
+    init_fit_stats,
     pow2_bucket,
 )
 from .ordering import pearson_order
@@ -69,6 +71,13 @@ def data_spec(data_axes: Sequence[str]) -> P:
     """PartitionSpec sharding the leading (sample/row) axis over ``data_axes``."""
     axes = tuple(data_axes)
     return P(axes if len(axes) > 1 else axes[0], None)
+
+
+def class_data_spec(data_axes: Sequence[str]) -> P:
+    """PartitionSpec for class-batched ``(k, m, ...)`` buffers: class axis
+    replicated, sample axis sharded over ``data_axes``."""
+    axes = tuple(data_axes)
+    return P(None, axes if len(axes) > 1 else axes[0], None)
 
 
 def num_data_shards(mesh: Mesh, data_axes: Sequence[str]) -> int:
@@ -91,6 +100,35 @@ def make_sharded_degree_step(
         mesh=mesh,
         in_specs=(dspec, dspec, rep, rep, rep, rep, rep, rep),
         out_specs=(dspec, rep),
+        **SHARD_MAP_KW,
+    )
+    return jax.jit(sharded)
+
+
+def make_class_batched_sharded_degree_step(
+    cfg: OAVIConfig, mesh: Mesh, data_axes: Sequence[str] = ("data",)
+):
+    """Class-batched AND data-sharded degree step: the class axis (``vmap``)
+    composed with the sample-sharded psum path.
+
+    Layout: ``A``/``X`` are ``(k, m_cap, ·)`` with the class axis replicated
+    and the sample axis sharded over ``data_axes`` — each device holds every
+    class's row shard, the vmapped Gram products run on the local shards, and
+    one psum per degree (now carrying ``(k, L, K) + (k, K, K)`` floats, still
+    m-independent) replicates the blocks.  The candidate loop then replays
+    bit-identically on every device for all classes at once.
+    """
+    axes = tuple(data_axes)
+    reduce_fn = lambda x: jax.lax.psum(x, axes)  # noqa: E731
+    step = jax.vmap(_make_degree_step(cfg, reduce_fn=reduce_fn))
+    bspec = class_data_spec(axes)
+    rep = P()
+
+    sharded = shard_map_compat(
+        step,
+        mesh=mesh,
+        in_specs=(bspec, bspec, rep, rep, rep, rep, rep, rep),
+        out_specs=(bspec, rep),
         **SHARD_MAP_KW,
     )
     return jax.jit(sharded)
@@ -163,19 +201,13 @@ def fit(
     )
     m_total = jnp.asarray(float(m_true), dtype)
 
-    stats = {
-        "border_sizes": [],
-        "solver_iters": [],
-        "degrees": [],
-        "degree_times": [],
-        "recompiles": 0,
-        "regrowths": 0,
-        "m": m_true,
-        "m_padded": m_pad,
-        "n": n,
-        "mesh": {a: int(mesh.shape[a]) for a in mesh.axis_names},
-        "data_axes": list(data_axes),
-    }
+    stats = init_fit_stats(
+        m_true,
+        n,
+        m_padded=m_pad,
+        mesh={a: int(mesh.shape[a]) for a in mesh.axis_names},
+        data_axes=list(data_axes),
+    )
 
     d = 0
     while True:
@@ -231,12 +263,7 @@ def fit(
 
         ell = collect_degree(book, border, accepted, mses, coeffs, generators)
 
-    stats["time_total"] = time.perf_counter() - t_start
-    stats["num_G"] = len(generators)
-    stats["num_O"] = len(book)
-    stats["G_plus_O"] = len(generators) + len(book)
-    stats["Lcap_final"] = int(Lcap)
-    stats["thm43_bound"] = terms_mod.theorem_4_3_size_bound(config.psi, n)
+    finalize_fit_stats(stats, book, generators, Lcap, config, t_start)
     return OAVIModel(
         n=n,
         psi=config.psi,

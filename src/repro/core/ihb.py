@@ -91,22 +91,37 @@ def init_state(Lcap: int, diag0: jax.Array, dtype=jnp.float32,
 def grow_state(state: IHBState, new_L: int) -> IHBState:
     """Double capacity device-side: each present factor is embedded into its
     padded identity/zero block with one ``dynamic_update_slice`` — no host
-    numpy round-trip, so regrowth costs O(L^2) device work only."""
+    numpy round-trip, so regrowth costs O(L^2) device work only.
+
+    Factors may carry leading batch axes (the class-batched fit keeps one
+    state per class, ``(k, L, L)``); only the trailing two axes grow.
+    """
 
     def embed(M, identity: bool):
         if M is None:
             return None
+        batch = M.shape[:-2]
         base = (
             jnp.eye(new_L, dtype=M.dtype)
             if identity else jnp.zeros((new_L, new_L), M.dtype)
         )
-        return jax.lax.dynamic_update_slice(base, M, (0, 0))
+        base = jnp.broadcast_to(base, batch + (new_L, new_L))
+        return jax.lax.dynamic_update_slice(base, M, (0,) * M.ndim)
 
     return IHBState(
         AtA=embed(state.AtA, identity=False),
         N=embed(state.N, identity=True),
         R=embed(state.R, identity=True),
     )
+
+
+def batch_state(state: IHBState, k: int) -> IHBState:
+    """Stack ``k`` copies of a (fresh) state along a new leading class axis —
+    the batched initial state of the class-batched fit.  In the normalized
+    Gram convention every class starts from the identical state
+    (``AtA[0, 0] = 1``), so a broadcast-copy is exact."""
+    rep = lambda M: None if M is None else jnp.repeat(M[None], k, axis=0)  # noqa: E731
+    return IHBState(AtA=rep(state.AtA), N=rep(state.N), R=rep(state.R))
 
 
 def closed_form_inverse(state: IHBState, q: jax.Array) -> jax.Array:
@@ -125,8 +140,13 @@ def mse_from_solution(q: jax.Array, btb: jax.Array, y: jax.Array, m) -> jax.Arra
 
     (||A y + b||^2 = y^T AtA y + 2 q^T y + btb = -q^T y - ... collapses to
     btb + q^T y when y is the exact minimizer.)
+
+    The inner product reduces via ``sum(q * y)``, the vmap-bit-stable form
+    every in-algorithm MSE reduction uses (a fused dot lowers differently
+    batched vs per-instance, breaking the class-batched path's bit-exactness
+    — see :func:`repro.kernels.ref.ihb_update_ref`).
     """
-    return (btb + q @ y) / m
+    return (btb + jnp.sum(q * y)) / m
 
 
 def append_column(

@@ -481,7 +481,9 @@ def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
                 y0 = jnp.where(mask, y0, 0.0)
 
             if not engine_oracle:
-                mse0 = btb + q @ y0
+                # sum(q * y0), not q @ y0: the elementwise+reduce lowering is
+                # bit-stable under vmap (class-batched fit); a fused dot is not
+                mse0 = btb + jnp.sum(q * y0)
                 y, mse_final, it = y0, mse0, jnp.asarray(0, jnp.int32)
                 ihb_live = st.ihb_live
             else:
@@ -594,8 +596,69 @@ def degree_step_entry(
 
 
 def pow2_bucket(x: int) -> int:
-    """Smallest power of two >= x (shape bucketing for Lcap / Kcap)."""
+    """Smallest power of two >= x (shape bucketing for Lcap / Kcap / m_cap)."""
     return 1 << max(int(x) - 1, 1).bit_length() if x > 2 else 2
+
+
+def class_batchable(config: OAVIConfig) -> bool:
+    """Whether a config is eligible for the class-batched (vmapped) fit path
+    (:mod:`repro.core.class_batch`).
+
+    The batched path guarantees bit-exactness against the sequential fit at
+    matched capacity, which restricts it to configurations whose degree step
+    is built from vmap-bit-stable primitives (batched matmuls/matvecs match
+    their per-slice counterparts on every backend we test):
+
+    * ``engine='fast'`` — the convex oracles iterate in ``while_loop``s whose
+      trip counts are data-dependent; under ``vmap`` all classes would share
+      one iteration schedule, changing results, so oracle configs fall back
+      to per-class sequential fits.
+    * ``inverse_engine='inverse'`` — batched triangular solves (the ``chol``
+      engine) do not reduce in the same order as their single-instance
+      lowering, breaking bit-exactness.
+    * no WIHB — the sparse re-solve runs a BPCG oracle.
+    """
+    return (
+        config.engine == "fast"
+        and not config.wihb
+        and config.inverse_engine == "inverse"
+    )
+
+
+def init_fit_stats(m: int, n: int, **extra) -> Dict:
+    """Common ``stats`` skeleton shared by the local, sharded and
+    class-batched fit loops."""
+    stats = {
+        "border_sizes": [],
+        "solver_iters": [],
+        "degrees": [],
+        "degree_times": [],
+        "recompiles": 0,
+        "regrowths": 0,
+        "time_total": 0.0,
+        "m": m,
+        "n": n,
+    }
+    stats.update(extra)
+    return stats
+
+
+def finalize_fit_stats(
+    stats: Dict,
+    book: terms_mod.TermBook,
+    generators: List[Generator],
+    Lcap: int,
+    config: OAVIConfig,
+    t_start: float,
+) -> Dict:
+    """Fill the summary fields every fit loop reports."""
+    stats["time_total"] = time.perf_counter() - t_start
+    stats["num_G"] = len(generators)
+    stats["num_O"] = len(book)
+    stats["G_plus_O"] = len(generators) + len(book)
+    stats["Lcap_final"] = int(Lcap)
+    stats["thm43_bound"] = terms_mod.theorem_4_3_size_bound(config.psi, book.n)
+    return stats
 
 
 def border_index_arrays(book: terms_mod.TermBook, border, Kcap: int):
@@ -661,17 +724,7 @@ def fit(
     entry = degree_step_entry(config, factory=_degree_step_factory)
     m_total = jnp.asarray(float(m), dtype)
 
-    stats = {
-        "border_sizes": [],
-        "solver_iters": [],
-        "degrees": [],
-        "degree_times": [],
-        "recompiles": 0,
-        "regrowths": 0,
-        "time_total": 0.0,
-        "m": m,
-        "n": n,
-    }
+    stats = init_fit_stats(m, n)
 
     d = 0
     while True:
@@ -723,12 +776,7 @@ def fit(
 
         ell = collect_degree(book, border, accepted, mses, coeffs, generators)
 
-    stats["time_total"] = time.perf_counter() - t_start
-    stats["num_G"] = len(generators)
-    stats["num_O"] = len(book)
-    stats["G_plus_O"] = len(generators) + len(book)
-    stats["Lcap_final"] = int(Lcap)
-    stats["thm43_bound"] = terms_mod.theorem_4_3_size_bound(config.psi, n)
+    finalize_fit_stats(stats, book, generators, Lcap, config, t_start)
     return OAVIModel(
         n=n,
         psi=config.psi,

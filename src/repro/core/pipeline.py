@@ -3,8 +3,12 @@
 The paper's end-to-end classification pipeline.  ``method`` is a
 :mod:`repro.api` spec string (``"oavi:cgavi-ihb"``, ``"abm"``, ``"vca"``,
 ...; bare OAVI variant names like ``"fast"`` keep working).  Generator
-construction is dispatched through :func:`repro.api.fit` (which picks the
-local or sharded backend), the feature transform runs through the fused
+construction is dispatched through :func:`repro.api.fit_classes` — with
+``class_batch="auto"`` (default) eligible per-class OAVI fits are grouped
+into shared pow2 row buckets and driven through ONE vmapped jitted degree
+step (:mod:`repro.core.class_batch`; bit-exact vs sequential at matched
+capacity), with sequential fallback for stragglers and oracle-solver
+configs — the feature transform runs through the fused
 :func:`repro.api.feature_transform`, and the features are classified by the
 l1 squared-hinge :class:`~repro.core.svm.LinearSVM`.
 
@@ -54,6 +58,11 @@ class PipelineConfig:
     backend: str = "auto"  # repro.api backend: 'auto' | 'local' | 'sharded'
     mesh: Optional[Any] = None  # jax Mesh for the sharded backend
     batch_size: Optional[int] = None  # fused-transform chunking (rows)
+    # 'auto': batch eligible per-class OAVI fits through one vmapped degree
+    # step, grouped into shared pow2 row buckets (repro.core.class_batch);
+    # stragglers / oracle-solver configs fall back to sequential.  'off':
+    # always fit classes sequentially.
+    class_batch: str = "auto"
 
 
 class VanishingIdealClassifier:
@@ -71,16 +80,19 @@ class VanishingIdealClassifier:
         self.stats: Dict = {}
         self.engine = None  # optional serving TransformEngine (attach_engine)
 
-    def _fit_generator_model(self, Xc: np.ndarray):
+    def _fit_generator_models(self, Xcs) -> List:
+        """Per-class generator construction through :func:`repro.api.fit_classes`
+        (class-batched when the config is eligible, sequential otherwise)."""
         from .. import api
 
         cfg = self.config
-        return api.fit(
-            Xc,
+        return api.fit_classes(
+            Xcs,
             method=cfg.method,
             psi=cfg.psi,
             backend=cfg.backend,
             mesh=cfg.mesh,
+            class_batch=cfg.class_batch,
             **dict(cfg.oavi_kw or {}),
         )
 
@@ -146,6 +158,8 @@ class VanishingIdealClassifier:
         return self.svm.predict(np.asarray(feats))
 
     def fit(self, X, y) -> "VanishingIdealClassifier":
+        from .. import api
+
         t0 = time.perf_counter()
         # an engine attached to a previous fit's models would be silently
         # bypassed by matches() on every call while pinning the old model
@@ -154,20 +168,28 @@ class VanishingIdealClassifier:
         X = self.scaler.fit_transform(X)
         y = np.asarray(y)
         self.classes_ = np.unique(y)
-        self.models = []
-        gen_stats = []
-        for c in self.classes_:
-            model = self._fit_generator_model(X[y == c])
-            self.models.append(model)
-            gen_stats.append(model.stats)
+        self.models = self._fit_generator_models([X[y == c] for c in self.classes_])
+        gen_stats = [m.stats for m in self.models]
         t_gen = time.perf_counter() - t0
+        t1 = time.perf_counter()
         Xt = self._feature_transform(X)
+        t_transform = time.perf_counter() - t1
+        t2 = time.perf_counter()
         self.svm.fit(Xt, y)
+        t_svm = time.perf_counter() - t2
+        # recompiles/regrowths: class-batched groups share one compile
+        # schedule — aggregate once per group, not once per class
+        agg = api.aggregate_fit_stats(self.models)
         self.stats = {
             "time_generators": t_gen,
+            "time_transform": t_transform,
+            "time_svm": t_svm,
             "time_total": time.perf_counter() - t0,
             "num_features": Xt.shape[1],
             "G_plus_O": sum(s.get("G_plus_O", 0) for s in gen_stats),
+            "recompiles": agg["recompiles"],
+            "regrowths": agg["regrowths"],
+            "class_batched": agg["class_batched"],
             "per_class": gen_stats,
             "svm": self.svm.stats,
         }
@@ -243,6 +265,7 @@ class VanishingIdealClassifier:
                 "oavi_kw": cfg.oavi_kw,
                 "backend": cfg.backend,
                 "batch_size": cfg.batch_size,
+                "class_batch": cfg.class_batch,
             },
             "svm_stats": self.svm.stats,
             "stats": self.stats,
@@ -263,6 +286,8 @@ class VanishingIdealClassifier:
             oavi_kw=cfg_meta["oavi_kw"],
             backend=cfg_meta["backend"],
             batch_size=cfg_meta["batch_size"],
+            # pre-class-batch checkpoints lack the key; 'auto' is the default
+            class_batch=cfg_meta.get("class_batch", "auto"),
         )
         clf = cls(config)
         clf.scaler.lo = np.asarray(arrays["scaler_lo"])

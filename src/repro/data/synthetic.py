@@ -95,6 +95,30 @@ def uci_like(name: str, seed: int = 0):
     return X[perm].astype(np.float32), y[perm]
 
 
+def multiclass_planted(sizes, n: int = 4, seed: int = 0):
+    """k classes of the given ``sizes``, each planted on its own random
+    algebraic set (see :func:`_planted_class`) — the multi-class fit
+    benchmark's dataset.  Returns shuffled ``(X, y)``."""
+    rng = np.random.default_rng(seed)
+    Xs, ys = [], []
+    for c, mc in enumerate(sizes):
+        Xs.append(_planted_class(rng, int(mc), n, degree=2 + (c % 2)))
+        ys.append(np.full(int(mc), c, np.int32))
+    X = np.concatenate(Xs, axis=0)
+    y = np.concatenate(ys)
+    perm = rng.permutation(X.shape[0])
+    return X[perm].astype(np.float32), y[perm]
+
+
+def lognormal_sizes(k: int, mean_rows: int, sigma: float = 0.8, seed: int = 0):
+    """Lognormal-skewed class sizes with the given mean — the skewed-classes
+    regime of the multi-class benchmark (min size clipped to 32)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.lognormal(mean=0.0, sigma=sigma, size=k)
+    sizes = np.maximum((raw / raw.mean() * mean_rows).astype(int), 32)
+    return [int(s) for s in sizes]
+
+
 def random_cube(m: int, n: int, seed: int = 0):
     """Uniform [0,1]^n noise (Figure 1 setting: no algebraic structure)."""
     rng = np.random.default_rng(seed)

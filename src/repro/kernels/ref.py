@@ -41,22 +41,34 @@ def border_columns_ref(A, X, parents, vars_):
 
 def ihb_update_ref(N, q, btb, ell):
     """Theorem 4.9 block-inverse update on the padded inverse (identity in
-    the inactive block) — mirrors :func:`repro.core.ihb.append_column`."""
+    the inactive block) — mirrors :func:`repro.core.ihb.append_column`.
+
+    Contract (what every in-algorithm caller satisfies): ``q`` is zero at
+    slot ``ell`` and beyond (A has no active columns there) and row/col
+    ``ell`` of ``N`` is its identity row, so ``u[ell] = q[ell] = 0``.  Under
+    that contract the row/col write below is bit-identical to the masked
+    formulation ``P*keep*keepᵀ + onehot⊗n2 + n2⊗onehot + (1/s)onehot⊗onehot``
+    (kept entries are multiplied by exactly 1.0) while replacing four O(L^2)
+    elementwise passes with two O(L) ``dynamic_update_slice`` writes — the
+    candidate loop of the (class-batched) degree step runs this once per
+    candidate, so the constant matters.
+
+    Two vmap-bit-stability points the class-batched fit relies on: the Schur
+    complement reduces via ``sum(q * u)`` rather than a fused dot (matching
+    the Pallas kernel), and every remaining op is elementwise, a matvec, or
+    a dus — all of which produce identical bits batched and per-instance.
+    """
     dtype = N.dtype
     L = N.shape[0]
     onehot = (jnp.arange(L) == ell).astype(dtype)
-    u = N @ q
-    s = jnp.maximum(btb - q @ u, jnp.asarray(1e-30, dtype))
-    P = N + jnp.outer(u, u) / s
     keep = 1.0 - onehot
-    P = P * keep[:, None] * keep[None, :]
+    u = N @ q
+    s = jnp.maximum(btb - jnp.sum(q * u), jnp.asarray(1e-30, dtype))
     n2 = -u / s
-    return (
-        P
-        + jnp.outer(onehot, n2)
-        + jnp.outer(n2, onehot)
-        + (1.0 / s) * jnp.outer(onehot, onehot)
-    )
+    P = N + jnp.outer(u, u) / s
+    colrow = n2 * keep + onehot / s  # new row & column ell (diag = 1/s)
+    P = jax.lax.dynamic_update_slice(P, colrow[:, None], (0, ell))
+    return jax.lax.dynamic_update_slice(P, colrow[None, :], (ell, 0))
 
 
 def attention_ref(q, k, v, *, causal=True, q_heads_per_kv=1):
