@@ -13,15 +13,17 @@
 #   make bench-serve      batched serving engine benchmark (BENCH_serve.json)
 #   make bench-multiclass sequential-vs-class-batched multi-class fit benchmark
 #                         (BENCH_multiclass.json)
+#   make bench-streaming  out-of-core streaming fit benchmark (BENCH_streaming.json)
 #   make serve-smoke      in-process CPU run of the serving CLI (repro.launch.serve_vi)
 #   make bench            full quick benchmark sweep
+#   make clean            remove compiled bytecode and pytest caches
 #   make dev-deps         install dev-only deps (pytest, hypothesis, pyflakes)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-api lint ci bench bench-smoke bench-transform bench-fit \
-        bench-serve bench-multiclass serve-smoke dev-deps
+        bench-serve bench-multiclass bench-streaming serve-smoke clean dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -35,8 +37,8 @@ lint:
 ci: lint test bench-smoke
 
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched
-	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve multiclass
+	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched,streaming_oavi
+	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve multiclass streaming
 
 bench-transform:
 	$(PYTHON) -m benchmarks.run --only transform_fused
@@ -50,12 +52,19 @@ bench-serve:
 bench-multiclass:
 	$(PYTHON) -m benchmarks.run --only multiclass_batched
 
+bench-streaming:
+	$(PYTHON) -m benchmarks.run --only streaming_oavi
+
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve_vi --fit-m 1500 --requests 96 --mean-rows 64 \
 		--concurrency 8 --min-bucket 32 --max-bucket 4096
 
 bench:
 	$(PYTHON) -m benchmarks.run
+
+clean:
+	find . -name __pycache__ -type d -prune -exec rm -rf {} +
+	rm -rf .pytest_cache
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import ihb as ihb_mod
 from repro.core import oavi, terms as terms_mod
+from repro.kernels import ops as kernel_ops
 from repro.core.oavi import (
     Generator,
     OAVIConfig,
@@ -74,8 +75,13 @@ def _make_legacy_degree_step(cfg: OAVIConfig):
 
         P = jnp.take(A, parents, axis=1)
         B = P * jnp.take(X, vars_, axis=1)
-        QL = (A.T @ B) * inv_m
-        C = (B.T @ B) * inv_m
+        # same canonical GRAM_BLOCK-row blocked reduction as the fused step
+        # (kernels.ops.gram_accumulate): like the mse0 normalization below,
+        # the bit-exactness assert compares the fusion work, not the O(m)
+        # Gram summation order (the pre-PR code used one un-blocked matmul)
+        QL_raw, C_raw = kernel_ops.gram_accumulate(A, X, parents, vars_)
+        QL = QL_raw * inv_m
+        C = C_raw * inv_m
 
         def body(a, st):
             q = QL[:, a]
@@ -301,6 +307,10 @@ def run(rep: Reporter, quick: bool = True):
             "recompiles_warm": fused1.stats["recompiles"],
             "bit_exact_matched_cap": True,
             "max_coeff_diff_tight_bucket": max_diff,
+            # measured memory (satellite: peak_bytes where the allocator
+            # reports it — TPU/GPU — live-array accounting elsewhere)
+            "peak_bytes": fused1.stats.get("peak_bytes"),
+            "live_bytes_peak": fused1.stats.get("live_bytes_peak"),
         }
         rows.append(row)
         rep.add("fit_fused", **{k: v for k, v in row.items() if not k.startswith("degree_times")})

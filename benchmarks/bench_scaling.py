@@ -5,6 +5,13 @@ so it overtakes ABM/VCA on large data.  We measure CGAVI-IHB, AGDAVI-IHB,
 ABM and VCA across sample counts on the paper's synthetic dataset and fit
 log-log slopes.  Also includes the distributed weak-scaling check: the
 shard_map OAVI on k fake devices vs 1 (collective bytes are m-independent).
+
+``--streaming`` (CLI) switches the sweep to the out-of-core comparison:
+streaming vs in-memory OAVI over the same planted-polynomial generator as
+``bench_streaming`` (``benchmarks.common.scaled_planted_source`` — one data
+setup, not two), reporting time and measured peak footprint per m.
+
+    PYTHONPATH=src python -m benchmarks.bench_scaling [--full] [--streaming]
 """
 
 from __future__ import annotations
@@ -17,7 +24,40 @@ from repro.core.oracles import OracleConfig
 from repro.core.transform import MinMaxScaler
 from repro.data.synthetic import appendix_c
 
-from .common import Reporter, timeit, write_bench_json
+from .common import Reporter, scaled_planted_source, timeit, write_bench_json
+
+
+def run_streaming(rep: Reporter, quick: bool = True):
+    """Streaming-vs-in-memory m-sweep (the ``--streaming`` mode)."""
+    from repro import streaming
+
+    sizes = [8_192, 32_768, 131_072] if quick else [131_072, 1_048_576, 8_388_608]
+    cfg = OAVIConfig(psi=0.005, engine="fast", ordering="none", cap_terms=64)
+    rows = []
+    for m in sizes:
+        scaled = scaled_planted_source(m)
+        streaming.fit(scaled, cfg)  # warm
+        fits = []
+        t_stream = timeit(lambda: fits.append(streaming.fit(scaled, cfg)))
+        mdl = fits[-1]  # stats from the timed (warm) run — no extra fit
+        row = {
+            "m": m,
+            "t_streaming": round(t_stream, 3),
+            "live_bytes_streaming": mdl.stats.get("live_bytes_peak"),
+            "peak_bytes_streaming": mdl.stats.get("peak_bytes"),
+        }
+        if m <= 2_000_000:
+            X = scaled.read(0, m)
+            oavi.fit(X, cfg)  # warm
+            refs = []
+            row["t_in_memory"] = round(timeit(lambda: refs.append(oavi.fit(X, cfg))), 3)
+            row["live_bytes_in_memory"] = refs[-1].stats.get("live_bytes_peak")
+        rows.append(dict(row))
+        rep.add("fig4_scaling_streaming", **row)
+    # distinct artifact: must not clobber the fig4 sweep's BENCH_scaling.json
+    write_bench_json(
+        "scaling_streaming", rows, meta={"quick": quick, "streaming": True}
+    )
 
 
 def run(rep: Reporter, quick: bool = True):
@@ -32,7 +72,9 @@ def run(rep: Reporter, quick: bool = True):
 
         cfg_cg = OAVIConfig(psi=psi, engine="oracle", ihb=True,
                             solver=OracleConfig(name="cg"), cap_terms=64)
-        oavi.fit(X, cfg_cg)
+        fitted = oavi.fit(X, cfg_cg)
+        row["live_bytes_peak"] = fitted.stats.get("live_bytes_peak")
+        row["peak_bytes"] = fitted.stats.get("peak_bytes")
         t = timeit(lambda: oavi.fit(X, cfg_cg)); row["t_cgavi_ihb"] = round(t, 3)
         times["cgavi-ihb"].append(t)
 
@@ -62,3 +104,18 @@ def run(rep: Reporter, quick: bool = True):
             rep.add("fig4_slope", method=name, loglog_slope=round(slope, 3))
 
     write_bench_json("scaling", rows, meta={"psi": psi, "quick": quick})
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--streaming", action="store_true",
+                    help="out-of-core vs in-memory OAVI sweep")
+    args = ap.parse_args()
+    reporter = Reporter()
+    if args.streaming:
+        run_streaming(reporter, quick=not args.full)
+    else:
+        run(reporter, quick=not args.full)

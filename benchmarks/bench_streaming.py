@@ -1,0 +1,163 @@
+"""Out-of-core OAVI benchmark: fit at m ≫ device memory, flat peak footprint.
+
+What this measures (and asserts):
+
+* **bit-exactness** — at the smallest sweep size, the streamed fit equals the
+  in-memory fit bit for bit at matched capacity, on chunk sizes
+  {256, 1024, 4096}, for the ``fast`` engine and a convex-oracle config.
+* **m-sweep** — streaming vs in-memory fit across a >= 16x sample range
+  (``--full`` reaches 1.6e7 rows, past any in-memory ceiling: the source is
+  generator-backed and occupies no storage).  Streaming peak device
+  footprint must stay ~flat (asserted within 1.5x across the sweep) while
+  the in-memory path's grows linearly with m; memory is *measured* —
+  ``peak_bytes`` from the device allocator where available, live-array
+  accounting (``live_bytes_peak``) elsewhere (this container's CPU).
+* **0 recompiles after warmup** — a warm streamed refit compiles nothing
+  (asserted at every m).
+
+Emits ``results/BENCH_streaming.json`` (``bench.v1`` schema).
+
+    PYTHONPATH=src python -m benchmarks.run --only streaming_oavi
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro import streaming
+from repro.core import oavi
+from repro.core.oavi import OAVIConfig
+from repro.kernels.ops import GRAM_BLOCK
+
+from .common import Reporter, scaled_planted_source, timeit, write_bench_json
+
+CHUNK_ROWS = 4096
+# in-memory OOM guard for the --full sweep: A alone is m * Lcap * 4 bytes
+IN_MEMORY_MAX_M = 2_000_000
+
+
+def _cfg(engine: str = "fast") -> OAVIConfig:
+    if engine == "oracle":
+        return OAVIConfig(psi=0.005, engine="oracle", ihb=True, ordering="none",
+                          cap_terms=64)
+    return OAVIConfig(psi=0.005, engine="fast", ordering="none", cap_terms=64)
+
+
+def _assert_bit_exact(a: oavi.OAVIModel, b: oavi.OAVIModel) -> None:
+    assert a.book.terms == b.book.terms, "term books differ"
+    assert [g.term for g in a.generators] == [g.term for g in b.generators]
+    for ga, gb in zip(a.generators, b.generators):
+        assert np.array_equal(ga.coeffs, gb.coeffs), f"coeffs differ for {ga.term}"
+        assert ga.mse == gb.mse
+
+
+def run(rep: Reporter, quick: bool = True):
+    sizes = (
+        [8_192, 32_768, 131_072]  # 16x range
+        if quick
+        else [131_072, 524_288, 2_097_152, 8_388_608, 16_777_216]  # 128x, >= 1e7
+    )
+    rows = []
+
+    # ---- bit-exactness at matched capacity (both engine families) --------
+    m0 = sizes[0]
+    scaled0 = scaled_planted_source(m0, chunk_rows=CHUNK_ROWS)
+    X0 = scaled0.read(0, m0)
+    for engine, chunks in (("fast", (256, 1024, 4096)), ("oracle", (1024,))):
+        cfg = _cfg(engine)
+        ref = oavi.fit(X0, cfg)
+        for chunk_rows in chunks:
+            mdl = streaming.fit(scaled0, cfg, chunk_rows=chunk_rows)
+            _assert_bit_exact(mdl, ref)
+        row = {
+            "section": "bit_exact",
+            "engine": engine,
+            "m": m0,
+            "chunk_sizes": list(chunks),
+            "bit_exact": True,
+        }
+        rows.append(row)
+        rep.add("streaming_oavi", **row)
+    del X0, scaled0
+
+    # ---- m-sweep: time + measured peak footprint -------------------------
+    cfg = _cfg("fast")
+    stream_peaks, memory_peaks = [], []
+    for m in sizes:
+        scaled = scaled_planted_source(m, chunk_rows=CHUNK_ROWS)
+        streaming.fit(scaled, cfg, chunk_rows=CHUNK_ROWS)  # warm
+        fits = []
+        t_stream = timeit(
+            lambda: fits.append(streaming.fit(scaled, cfg, chunk_rows=CHUNK_ROWS))
+        )
+        mdl = fits[-1]  # the timed run is warm: measure AND read stats from it
+        assert mdl.stats["recompiles"] == 0, "warm streaming fit recompiled"
+
+        row = {
+            "section": "sweep",
+            "m": m,
+            "n": 3,
+            "chunk_rows": CHUNK_ROWS,
+            "num_chunks": mdl.stats["streaming"]["num_chunks"],
+            "t_streaming_s": round(t_stream, 4),
+            "recompiles_warm": mdl.stats["recompiles"],
+            "num_O": mdl.num_O,
+            "num_G": mdl.num_G,
+            "peak_bytes_streaming": mdl.stats.get("peak_bytes"),
+            "live_bytes_streaming": mdl.stats.get("live_bytes_peak"),
+        }
+        # live-array accounting is the per-fit comparable quantity; the
+        # allocator peak is a process-lifetime high-water mark (monotone
+        # across fits) and only a fallback
+        peak = mdl.stats.get("live_bytes_peak") or mdl.stats.get("peak_bytes")
+        if peak:
+            stream_peaks.append(peak)
+
+        if m <= IN_MEMORY_MAX_M:
+            X = scaled.read(0, m)
+            oavi.fit(X, cfg)  # warm
+            refs = []
+            row["t_in_memory_s"] = round(
+                timeit(lambda: refs.append(oavi.fit(X, cfg))), 4
+            )
+            ref = refs[-1]
+            row["peak_bytes_in_memory"] = ref.stats.get("peak_bytes")
+            row["live_bytes_in_memory"] = ref.stats.get("live_bytes_peak")
+            mem_peak = ref.stats.get("live_bytes_peak") or ref.stats.get("peak_bytes")
+            if mem_peak:
+                memory_peaks.append(mem_peak)
+            del X, ref, refs
+        else:
+            row["t_in_memory_s"] = None
+            row["in_memory_skipped"] = "oom_guard"
+        rows.append(row)
+        rep.add("streaming_oavi", **row)
+
+    # streaming footprint must be ~flat across the whole sweep; the
+    # in-memory footprint grows with m (reported, and sanity-checked when
+    # the sweep spans enough range for A to dominate the fixed buffers)
+    flat_ratio = max(stream_peaks) / min(stream_peaks)
+    assert flat_ratio <= 1.5, f"streaming footprint grew {flat_ratio:.2f}x over the sweep"
+    mem_ratio = (
+        round(max(memory_peaks) / min(memory_peaks), 2) if len(memory_peaks) >= 2 else None
+    )
+    summary = {
+        "section": "summary",
+        "m_range": f"{sizes[0]}..{sizes[-1]} ({sizes[-1] // sizes[0]}x)",
+        "streaming_peak_ratio": round(flat_ratio, 3),
+        "in_memory_peak_ratio": mem_ratio,
+        "flat_within_1_5x": True,
+    }
+    rows.append(summary)
+    rep.add("streaming_oavi", **summary)
+
+    write_bench_json(
+        "streaming",
+        rows,
+        meta={
+            "quick": quick,
+            "chunk_rows": CHUNK_ROWS,
+            "gram_block": GRAM_BLOCK,
+            "in_memory_max_m": IN_MEMORY_MAX_M,
+        },
+    )

@@ -14,7 +14,7 @@ import os
 import sys
 
 SCHEMA = "bench.v1"
-DEFAULT_NAMES = ["fit", "transform", "scaling", "serve", "multiclass"]
+DEFAULT_NAMES = ["fit", "transform", "scaling", "serve", "multiclass", "streaming"]
 
 
 def check(name: str, out_dir: str = "results") -> str:

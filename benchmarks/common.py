@@ -66,6 +66,19 @@ def write_bench_json(
     return path
 
 
+def scaled_planted_source(m: int, n: int = 3, seed: int = 0, chunk_rows: int = 4096):
+    """The planted-polynomial stream scaled to ``[0, 1]^n`` — the shared data
+    setup of ``bench_streaming`` and ``bench_scaling --streaming``.  Rows are
+    synthesized deterministically per tile (no storage at any ``m``) and
+    min-max scaled one chunk at a time."""
+    from repro.data.synthetic import planted_source
+    from repro.streaming import ScaledSource, StreamingMinMaxScaler
+
+    source = planted_source(m, n=n, seed=seed)
+    scaler = StreamingMinMaxScaler(dtype="float32").fit_source(source, chunk_rows)
+    return ScaledSource(source, scaler)
+
+
 def timeit(fn: Callable, *, repeat: int = 1) -> float:
     """Best-of-repeat wall time in seconds."""
     best = float("inf")

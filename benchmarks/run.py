@@ -23,6 +23,7 @@ from . import (
     bench_scaling,
     bench_serve,
     bench_solvers,
+    bench_streaming,
     bench_transform,
     roofline,
 )
@@ -40,6 +41,7 @@ BENCHES = {
     "fit_fused": bench_fit.run,
     "serve_engine": bench_serve.run,
     "multiclass_batched": bench_multiclass.run,
+    "streaming_oavi": bench_streaming.run,
     "roofline": roofline.run,
 }
 

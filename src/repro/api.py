@@ -65,6 +65,7 @@ OAVI_VARIANTS: Dict[str, Tuple[str, str, bool, bool]] = {
 import jax
 import jax.numpy as jnp
 
+from . import streaming as streaming_mod
 from .checkpoint import store as ckpt_store
 from .core import abm as abm_mod
 from .core import class_batch as class_batch_mod
@@ -290,6 +291,8 @@ def fit(
     out_sharding=None,
     config=None,
     class_batch: str = "auto",
+    source=None,
+    chunk_rows: Optional[int] = None,
     **method_kw,
 ) -> Union[VanishingIdealModel, List[VanishingIdealModel]]:
     """Fit a vanishing-ideal model with the selected ``method`` and backend.
@@ -298,7 +301,9 @@ def fit(
     ----------
     X : (m, n) array in ``[0, 1]^n`` — or a *list* of per-class arrays, in
         which case one model is fitted per class (see :func:`fit_classes`)
-        and a list of models is returned.
+        and a list of models is returned — or a
+        :class:`repro.streaming.DataSource`, which routes to the out-of-core
+        streaming fit (equivalent to passing it as ``source=``).
     method : spec string — ``"oavi"``, ``"oavi:<variant>"``, ``"abm"``,
         ``"vca"``; see :func:`available_methods`.
     psi : vanishing tolerance.
@@ -315,9 +320,40 @@ def fit(
     class_batch : ``"auto"`` | ``"off"`` — multi-class fits only (``X`` a
         list): ``"auto"`` batches eligible per-class OAVI fits through one
         vmapped degree step (:mod:`repro.core.class_batch`).
+    source : optional chunked data source (:mod:`repro.streaming`) — fits
+        out-of-core through :func:`repro.streaming.fit`: the evaluation
+        matrix is rematerialized per degree in ``chunk_rows``-row chunks and
+        reduced to Gram statistics, so ``m`` is not bounded by device
+        memory.  OAVI only; bit-exact vs the in-memory fit at matched
+        capacity.  The source must already be scaled to ``[0, 1]^n``
+        (compose with :class:`repro.streaming.ScaledSource`).
+    chunk_rows : streaming chunk size (power of two, multiple of
+        :data:`repro.kernels.ops.GRAM_BLOCK`); default
+        :data:`repro.streaming.DEFAULT_CHUNK_ROWS`.  Setting it with an
+        in-memory ``X`` (array or per-class list) streams through the
+        array(s) as sources — same out-of-core fit path, OAVI only.
     **method_kw : forwarded to the method's config constructor (e.g.
         ``cap_terms=64``, ``solver_kw={"max_iter": 2000}``).
     """
+    if source is None and streaming_mod.is_source(X):
+        source, X = X, None
+    if source is None and chunk_rows is not None and not isinstance(X, (list, tuple)):
+        # chunk_rows on an in-memory array: stream through it as a source
+        # (the fit never materializes the (m, Lcap) evaluation matrix)
+        source, X = streaming_mod.as_source(np.asarray(X)), None
+    if source is not None:
+        return _fit_streaming(
+            source,
+            method,
+            psi=psi,
+            backend=backend,
+            mesh=mesh,
+            data_axes=data_axes,
+            config=config,
+            chunk_rows=chunk_rows,
+            out_sharding=out_sharding,
+            **method_kw,
+        )
     if isinstance(X, (list, tuple)):
         return fit_classes(
             X,
@@ -328,6 +364,7 @@ def fit(
             data_axes=data_axes,
             class_batch=class_batch,
             config=config,
+            chunk_rows=chunk_rows,
             **method_kw,
         )
     if class_batch not in ("auto", "off"):
@@ -355,6 +392,47 @@ def fit(
     return model
 
 
+def _fit_streaming(
+    source,
+    method: str,
+    *,
+    psi: float,
+    backend: str,
+    mesh,
+    data_axes: Sequence[str],
+    config,
+    chunk_rows: Optional[int],
+    out_sharding=None,
+    **method_kw,
+):
+    """Out-of-core dispatch: route an OAVI spec to :func:`repro.streaming.fit`."""
+    entry, variant = resolve(method)
+    if entry.name != "oavi":
+        raise ValueError(
+            f"streaming fit (source=) supports OAVI only, got method {method!r}"
+        )
+    cfg = config if config is not None else oavi_config_for(variant or "fast", psi, **method_kw)
+    source = streaming_mod.as_source(source)
+    backend_r, mesh_r = _resolve_backend(entry, backend, mesh, source.num_rows)
+    if backend_r == "sharded" and mesh_r is None:
+        mesh_r = _default_mesh(data_axes)
+    model = streaming_mod.fit(
+        source,
+        cfg,
+        chunk_rows=chunk_rows or streaming_mod.DEFAULT_CHUNK_ROWS,
+        mesh=mesh_r if backend_r == "sharded" else None,
+        data_axes=tuple(data_axes),
+    )
+    model.stats["api"] = {
+        "method": entry.spec(variant),
+        "backend": backend_r,
+        "streaming": True,
+    }
+    if out_sharding is not None:
+        model.transform_out_sharding = out_sharding
+    return model
+
+
 # ---------------------------------------------------------------------------
 # Multi-class fitting: class-batched when eligible, sequential otherwise
 # ---------------------------------------------------------------------------
@@ -370,6 +448,7 @@ def fit_classes(
     data_axes: Sequence[str] = ("data",),
     class_batch: str = "auto",
     config=None,
+    chunk_rows: Optional[int] = None,
     **method_kw,
 ) -> List[VanishingIdealModel]:
     """Fit one model per class — Algorithm 2's generator-construction phase.
@@ -401,6 +480,22 @@ def fit_classes(
     Xs = [np.asarray(X) for X in Xs]
 
     def seq_fit(X):
+        if chunk_rows is not None and entry.name == "oavi":
+            # out-of-core per-class fits: each class streams through the
+            # chunk accumulator (bit-exact vs its in-memory fit); the
+            # vmapped class batch does not compose with streaming yet
+            return fit(
+                X,
+                method,
+                psi=psi,
+                backend=backend,
+                mesh=mesh,
+                data_axes=data_axes,
+                config=config,
+                source=streaming_mod.as_source(X),
+                chunk_rows=chunk_rows,
+                **dict(method_kw),
+            )
         return fit(
             X,
             method,
@@ -412,7 +507,12 @@ def fit_classes(
             **dict(method_kw),
         )
 
-    if class_batch == "off" or entry.name != "oavi" or len(Xs) < 2:
+    if (
+        class_batch == "off"
+        or entry.name != "oavi"
+        or len(Xs) < 2
+        or chunk_rows is not None
+    ):
         return [seq_fit(X) for X in Xs]
     cfg = (
         config

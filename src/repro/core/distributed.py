@@ -63,6 +63,7 @@ from .oavi import (
     finalize_fit_stats,
     init_fit_stats,
     pow2_bucket,
+    sample_memory_stats,
 )
 from .ordering import pearson_order
 
@@ -260,6 +261,7 @@ def fit(
         coeffs = np.asarray(st.coeffs)
         stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
         stats["solver_iters"].append(int(np.asarray(st.iters)[:K].sum()))
+        sample_memory_stats(stats)
 
         ell = collect_degree(book, border, accepted, mses, coeffs, generators)
 

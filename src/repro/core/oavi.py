@@ -9,9 +9,13 @@ hundred items, Theorem 4.3), jitted JAX owns the *linear algebra*.  Per degree
 1.  Candidate columns ``B = A[:, parents] * X[:, vars]``  (gather + product)
 2.  Gram blocks   ``QL = A^T B`` (L x K) and ``C = B^T B`` (K x K)
     — these two matmuls are the *only* O(m) work in the whole degree.  They
-    are computed by :func:`repro.kernels.ops.gram_update`: the fused Pallas
-    kernel on TPU (border evaluation + both Grams in one VMEM-resident
-    sweep), the bit-identical gather+matmul reference elsewhere.
+    are computed by :func:`repro.kernels.ops.gram_accumulate`: the fused
+    Pallas kernel on TPU (border evaluation + both Grams in one VMEM-resident
+    sweep), the bit-identical blocked reference elsewhere.  The reduction
+    order is *canonical* (sequential fp32 accumulation over ``GRAM_BLOCK``
+    row blocks), which is what lets the out-of-core fit
+    (:mod:`repro.streaming.fit`) stream row chunks through the same op and
+    land on identical bits.
 3.  A small ``fori_loop`` over the K candidates replays the exact sequential
     semantics of Algorithm 1 (a term appended to O changes A for all later
     candidates of the same degree) using only the precomputed Gram blocks:
@@ -431,9 +435,14 @@ def _kernel_kwargs(cfg: OAVIConfig) -> Dict:
     }[cfg.kernel]
 
 
-def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
-    """Build the jitted degree step.  ``reduce_fn`` (e.g. a psum) is applied
-    to every Gram quantity; None means single-device."""
+def _make_stats_degree_step(cfg: OAVIConfig, reduce_fn=None):
+    """Build the *statistics-only* degree step: every accept/reject decision
+    of one degree from the raw Gram sufficient statistics alone — the
+    evaluation matrix A never enters.  This is the piece the out-of-core fit
+    (:mod:`repro.streaming.fit`) runs after its chunk accumulator has reduced
+    A away; the in-memory :func:`_make_degree_step` wraps it with the Gram
+    computation and the A column scatter.  ``reduce_fn`` (e.g. a psum) is
+    applied to the raw Gram quantities; None means single-device."""
 
     solver = _SOLVER_FNS[cfg.solver.name]
     use_chol = cfg.inverse_engine == "chol"
@@ -441,12 +450,11 @@ def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
     # closed-form optimum needed: always for 'fast', as a warm start otherwise
     need_closed_form = (not engine_oracle) or cfg.ihb
     rfn = reduce_fn if reduce_fn is not None else (lambda x: x)
-    gram_kw = _kernel_kwargs(cfg)
 
-    def degree_step(A, X, state: ihb_mod.IHBState, ell0, parents, vars_, valid, m_total):
-        dtype = A.dtype
-        Lcap = A.shape[1]
-        K = parents.shape[0]
+    def stats_step(QL_raw, C_raw, state: ihb_mod.IHBState, ell0, valid, m_total):
+        dtype = cfg.jax_dtype()
+        Lcap = QL_raw.shape[0]
+        K = valid.shape[0]
         psi = jnp.asarray(cfg.psi, dtype)
         # All Gram quantities are normalized by m (work with Abar = A/sqrt(m)):
         # entries stay in [0,1] (X in [0,1]^n), which keeps fp32 well behaved
@@ -454,14 +462,8 @@ def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
         inv_m = jnp.asarray(1.0 / m_total, dtype)
         one = jnp.asarray(1.0, dtype)
 
-        # ---- (1)+(2): all O(m) work, in one fused kernel dispatch ------
-        # (Pallas on TPU: border eval + both Grams in a single VMEM sweep;
-        # bit-identical gather+matmul fallback elsewhere.)
-        QL_raw, C_raw = kernel_ops.gram_update(A, X, parents, vars_, **gram_kw)
         QL = (rfn(QL_raw) * inv_m).astype(dtype)  # (L, K)
         C = (rfn(C_raw) * inv_m).astype(dtype)  # (K, K)
-        # candidate columns, needed again to scatter appended ones into A
-        B = jnp.take(A, parents, axis=1) * jnp.take(X, vars_, axis=1)
 
         # ---- (3): sequential acceptance over candidates ---------------
         def body(a, st: _LoopState) -> _LoopState:
@@ -545,7 +547,31 @@ def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
             mses=jnp.zeros((K,), dtype),
             iters=jnp.zeros((K,), jnp.int32),
         )
-        st = jax.lax.fori_loop(0, K, body, st0)
+        return jax.lax.fori_loop(0, K, body, st0)
+
+    return stats_step
+
+
+def _make_degree_step(cfg: OAVIConfig, reduce_fn=None):
+    """Build the jitted in-memory degree step: the fused Gram computation,
+    the statistics-only acceptance loop (:func:`_make_stats_degree_step`),
+    and the scatter of appended candidate columns into A."""
+
+    stats_step = _make_stats_degree_step(cfg, reduce_fn)
+    gram_kw = _kernel_kwargs(cfg)
+
+    def degree_step(A, X, state: ihb_mod.IHBState, ell0, parents, vars_, valid, m_total):
+        Lcap = A.shape[1]
+        # ---- (1)+(2): all O(m) work, in one fused kernel dispatch ------
+        # (Pallas on TPU: border eval + both Grams in a single VMEM sweep;
+        # bit-identical gather+matmul fallback elsewhere.)  The reduction is
+        # the canonical GRAM_BLOCK-row blocked order, so the streaming fit's
+        # chunk accumulator lands on the same bits (repro.streaming.fit).
+        QL_raw, C_raw = kernel_ops.gram_accumulate(A, X, parents, vars_, **gram_kw)
+        # candidate columns, needed again to scatter appended ones into A
+        B = jnp.take(A, parents, axis=1) * jnp.take(X, vars_, axis=1)
+
+        st = stats_step(QL_raw, C_raw, state, ell0, valid, m_total)
 
         # ---- write appended columns into A -----------------------------
         appended = (~st.accepted) & valid & (st.slots < Lcap)
@@ -625,9 +651,51 @@ def class_batchable(config: OAVIConfig) -> bool:
     )
 
 
+def device_memory_stats() -> Dict:
+    """Best-effort ``memory_stats()`` of the first local device.  TPU/GPU
+    runtimes report allocator counters (``peak_bytes_in_use``); CPU returns
+    nothing — callers must treat every key as optional."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        return {}
+    return dict(stats or {})
+
+
+def live_buffer_bytes() -> Optional[int]:
+    """Total bytes of all live device arrays — the measured fallback for the
+    memory benchmarks on backends without allocator stats (this container's
+    CPU).  Dominated by the persistent fit buffers (A, IHB state), which is
+    exactly the footprint the streaming fit is built to flatten."""
+    try:
+        return int(sum(x.nbytes for x in jax.live_arrays()))
+    except Exception:
+        return None
+
+
+def sample_memory_stats(stats: Dict) -> None:
+    """Record the current memory high-water marks into a fit ``stats`` dict:
+    ``peak_bytes`` from the device allocator where available (gracefully
+    absent otherwise) and ``live_bytes_peak`` from live-array accounting.
+    Fit loops call this per degree and once at finalize.
+
+    ``peak_bytes`` is the allocator's *process-lifetime* high-water mark —
+    it cannot be reset, so a fit that stays under an earlier fit's peak
+    inherits it (compare against ``peak_bytes_start`` from
+    :func:`init_fit_stats` to bound this fit's contribution).
+    ``live_bytes_peak`` is sampled per fit and is the per-fit comparable
+    quantity the memory benchmarks prefer."""
+    peak = device_memory_stats().get("peak_bytes_in_use")
+    if peak is not None:
+        stats["peak_bytes"] = max(int(peak), int(stats.get("peak_bytes") or 0))
+    live = live_buffer_bytes()
+    if live is not None:
+        stats["live_bytes_peak"] = max(live, int(stats.get("live_bytes_peak") or 0))
+
+
 def init_fit_stats(m: int, n: int, **extra) -> Dict:
-    """Common ``stats`` skeleton shared by the local, sharded and
-    class-batched fit loops."""
+    """Common ``stats`` skeleton shared by the local, sharded, class-batched
+    and streaming fit loops."""
     stats = {
         "border_sizes": [],
         "solver_iters": [],
@@ -639,6 +707,9 @@ def init_fit_stats(m: int, n: int, **extra) -> Dict:
         "m": m,
         "n": n,
     }
+    peak = device_memory_stats().get("peak_bytes_in_use")
+    if peak is not None:
+        stats["peak_bytes_start"] = int(peak)
     stats.update(extra)
     return stats
 
@@ -652,6 +723,7 @@ def finalize_fit_stats(
     t_start: float,
 ) -> Dict:
     """Fill the summary fields every fit loop reports."""
+    sample_memory_stats(stats)
     stats["time_total"] = time.perf_counter() - t_start
     stats["num_G"] = len(generators)
     stats["num_O"] = len(book)
@@ -773,6 +845,7 @@ def fit(
         iters = np.asarray(st.iters)
         stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
         stats["solver_iters"].append(int(iters[:K].sum()))
+        sample_memory_stats(stats)
 
         ell = collect_degree(book, border, accepted, mses, coeffs, generators)
 

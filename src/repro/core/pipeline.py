@@ -63,6 +63,11 @@ class PipelineConfig:
     # stragglers / oracle-solver configs fall back to sequential.  'off':
     # always fit classes sequentially.
     class_batch: str = "auto"
+    # out-of-core generator construction: when set, each per-class OAVI fit
+    # streams through repro.streaming.fit in chunk_rows-row chunks instead of
+    # materializing its evaluation matrix (bit-exact at matched capacity;
+    # takes precedence over class_batch).  None: in-memory fits.
+    chunk_rows: Optional[int] = None
 
 
 class VanishingIdealClassifier:
@@ -93,6 +98,7 @@ class VanishingIdealClassifier:
             backend=cfg.backend,
             mesh=cfg.mesh,
             class_batch=cfg.class_batch,
+            chunk_rows=cfg.chunk_rows,
             **dict(cfg.oavi_kw or {}),
         )
 
@@ -266,6 +272,7 @@ class VanishingIdealClassifier:
                 "backend": cfg.backend,
                 "batch_size": cfg.batch_size,
                 "class_batch": cfg.class_batch,
+                "chunk_rows": cfg.chunk_rows,
             },
             "svm_stats": self.svm.stats,
             "stats": self.stats,
@@ -288,6 +295,8 @@ class VanishingIdealClassifier:
             batch_size=cfg_meta["batch_size"],
             # pre-class-batch checkpoints lack the key; 'auto' is the default
             class_batch=cfg_meta.get("class_batch", "auto"),
+            # pre-streaming checkpoints lack the key; None = in-memory fits
+            chunk_rows=cfg_meta.get("chunk_rows"),
         )
         clf = cls(config)
         clf.scaler.lo = np.asarray(arrays["scaler_lo"])

@@ -2,6 +2,22 @@
 deterministic sharded LM token pipeline."""
 
 from . import lm, synthetic
-from .synthetic import appendix_c, random_cube, train_test_split, uci_like
+from .synthetic import (
+    appendix_c,
+    planted_source,
+    random_cube,
+    train_test_split,
+    uci_like,
+    write_shards,
+)
 
-__all__ = ["lm", "synthetic", "appendix_c", "random_cube", "train_test_split", "uci_like"]
+__all__ = [
+    "lm",
+    "synthetic",
+    "appendix_c",
+    "planted_source",
+    "random_cube",
+    "train_test_split",
+    "uci_like",
+    "write_shards",
+]

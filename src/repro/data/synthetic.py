@@ -125,6 +125,90 @@ def random_cube(m: int, n: int, seed: int = 0):
     return rng.uniform(0.0, 1.0, (m, n)).astype(np.float32)
 
 
+# ---------------------------------------------------------------------------
+# Streaming data: deterministic planted-polynomial tiles + .npy shard writer
+# ---------------------------------------------------------------------------
+
+STREAM_TILE_ROWS = 4096  # fixed tile granularity of the streamed generators
+
+
+def planted_stream_tile(
+    tile_idx: int, n: int = 3, seed: int = 0, degree: int = 2, noise: float = 0.03
+) -> np.ndarray:
+    """One full ``(STREAM_TILE_ROWS, n)`` tile of the planted-polynomial
+    stream — the same near-algebraic-set construction as
+    :func:`_planted_class`, made *tile-deterministic*: the constraint
+    parameters come from ``seed`` alone and each tile gets its own derived
+    rng, so row ``r`` has identical values no matter how the stream is
+    chunked or how large ``m`` is.  This is the shared generator behind the
+    streaming benchmarks (``bench_streaming`` and ``bench_scaling
+    --streaming``) and the shard writer."""
+    rng_w = np.random.default_rng(seed)
+    k = min(3, n)
+    w = rng_w.uniform(0.5, 1.5, k)
+    c = rng_w.uniform(0.5, 1.5)
+    rng = np.random.default_rng(np.random.SeedSequence([seed + 1, tile_idx]))
+    X = rng.uniform(0.0, 1.0, (STREAM_TILE_ROWS, n))
+    s = (w * X[:, :k] ** degree).sum(axis=1)
+    scale = (c / np.maximum(s, 1e-9)) ** (1.0 / degree)
+    X[:, :k] *= scale[:, None]
+    X += rng.normal(0.0, noise, X.shape)
+    return X.astype(np.float32)
+
+
+def planted_source(m: int, n: int = 3, seed: int = 0, degree: int = 2,
+                   noise: float = 0.03):
+    """Generator-backed :class:`repro.streaming.source.SyntheticSource` over
+    the planted-polynomial stream: ``m`` rows that occupy no storage."""
+    from ..streaming.source import SyntheticSource
+
+    return SyntheticSource(
+        lambda idx: planted_stream_tile(idx, n=n, seed=seed, degree=degree,
+                                        noise=noise),
+        num_rows=m,
+        num_features=n,
+        tile_rows=STREAM_TILE_ROWS,
+    )
+
+
+def write_shards(
+    path: str,
+    data,
+    shard_rows: int = 1 << 16,
+    dtype: str = "float32",
+) -> Dict:
+    """Write a source (or array) as a memory-mappable ``.npy`` shard
+    directory readable by :class:`repro.streaming.source.ShardDirSource`:
+    ``shard_00000.npy``, ... plus ``meta.json`` (format
+    ``repro.shards.v1``).  Returns the metadata dict."""
+    import json
+    import os
+
+    from ..streaming.source import SHARD_FORMAT, SHARD_META, as_source
+
+    source = as_source(data)
+    m, n = source.num_rows, source.num_features
+    os.makedirs(path, exist_ok=True)
+    num_shards = max((m + shard_rows - 1) // shard_rows, 1)
+    np_dtype = np.dtype(dtype)
+    for idx in range(num_shards):
+        lo = idx * shard_rows
+        hi = min(lo + shard_rows, m)
+        block = np.asarray(source.read(lo, hi), np_dtype)
+        np.save(os.path.join(path, f"shard_{idx:05d}.npy"), block)
+    meta = {
+        "format": SHARD_FORMAT,
+        "num_rows": int(m),
+        "num_features": int(n),
+        "shard_rows": int(shard_rows),
+        "num_shards": int(num_shards),
+        "dtype": str(np_dtype),
+    }
+    with open(os.path.join(path, SHARD_META), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
 def train_test_split(X, y, test_frac: float = 0.4, seed: int = 0):
     """Paper's 60/40 random partition."""
     rng = np.random.default_rng(seed)

@@ -53,6 +53,26 @@ def _gram_kernel(a_ref, x_ref, psel_ref, vsel_ref, ql_ref, c_ref):
     c_ref[...] += jnp.dot(b.T, b, preferred_element_type=jnp.float32)
 
 
+def _gram_acc_kernel(a_ref, x_ref, psel_ref, vsel_ref, ql0_ref, c0_ref, ql_ref, c_ref):
+    """Carry-in variant: the accumulators start from ``(ql0, c0)`` instead of
+    zero, so a stream of calls over row chunks reduces in exactly the same
+    block order as one call over the concatenated rows (out-of-core OAVI)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        ql_ref[...] = ql0_ref[...]
+        c_ref[...] = c0_ref[...]
+
+    a = a_ref[...]  # (bm, L)
+    x = x_ref[...]  # (bm, n)
+    parents = jnp.dot(a, psel_ref[...], preferred_element_type=jnp.float32)
+    varcols = jnp.dot(x, vsel_ref[...], preferred_element_type=jnp.float32)
+    b = parents * varcols  # (bm, K) candidate columns
+    ql_ref[...] += jnp.dot(a.T, b, preferred_element_type=jnp.float32)
+    c_ref[...] += jnp.dot(b.T, b, preferred_element_type=jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def gram_update(
     A: jax.Array,  # (m, L) evaluation matrix (padded columns are zero)
@@ -92,3 +112,48 @@ def gram_update(
         ],
         interpret=interpret,
     )(A, X, Psel, Vsel)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def gram_update_acc(
+    A: jax.Array,  # (m, L) evaluation matrix (padded columns are zero)
+    X: jax.Array,  # (m, n) data
+    Psel: jax.Array,  # (L, K) one-hot parent selectors
+    Vsel: jax.Array,  # (n, K) one-hot variable selectors
+    ql0: jax.Array,  # (L, K) fp32 carry-in cross-Gram accumulator
+    c0: jax.Array,  # (K, K) fp32 carry-in candidate-Gram accumulator
+    *,
+    bm: int = 512,
+    interpret: bool = False,
+):
+    """``(ql0 + A^T B, c0 + B^T B)`` accumulated sequentially over ``bm``-row
+    blocks — the streamable carry-in form of :func:`gram_update`: feeding row
+    chunks (each a multiple of ``bm``) through this kernel one at a time is
+    bit-identical to one call over all rows.
+    """
+    m, L = A.shape
+    n = X.shape[1]
+    K = Psel.shape[1]
+    assert m % bm == 0, f"m={m} not a multiple of bm={bm}"
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _gram_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, L), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((L, K), lambda i: (0, 0)),
+            pl.BlockSpec((n, K), lambda i: (0, 0)),
+            pl.BlockSpec((L, K), lambda i: (0, 0)),
+            pl.BlockSpec((K, K), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, K), lambda i: (0, 0)),
+            pl.BlockSpec((K, K), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, K), jnp.float32),
+            jax.ShapeDtypeStruct((K, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A, X, Psel, Vsel, ql0, c0)

@@ -16,7 +16,14 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention as _flash_kernel
 from .gram_update import gram_update as _gram_kernel
+from .gram_update import gram_update_acc as _gram_acc_kernel
 from .ihb_update import ihb_update as _ihb_kernel
+
+# Row-block granularity of the canonical (streamable) Gram reduction: the
+# degree step and the out-of-core chunk accumulator both reduce in GRAM_BLOCK
+# row blocks, so a streamed fit is bit-identical to the in-memory fit for any
+# chunk size that is a multiple of this.
+GRAM_BLOCK = 256
 
 
 def _on_tpu() -> bool:
@@ -59,6 +66,42 @@ def gram_update(A, X, parents, vars_, *, bm: int = 512, use_pallas=None, interpr
         A = jnp.pad(A, ((0, m_pad - m), (0, 0)))
         X = jnp.pad(X, ((0, m_pad - m), (0, 0)))
     return _gram_kernel(A, X, Psel, Vsel, bm=min(bm, m_pad), interpret=interpret)
+
+
+def gram_accumulate(
+    A, X, parents, vars_, acc=None, *, bm: int = GRAM_BLOCK, use_pallas=None,
+    interpret=False,
+):
+    """Canonical blocked Gram reduction with carry: ``(acc_QL + A^T B,
+    acc_C + B^T B)`` accumulated sequentially over ``bm``-row blocks.
+
+    This is the degree step's Gram op.  Unlike :func:`gram_update` (whose
+    off-TPU fallback is one un-blocked matmul, kept for bit-compat with the
+    pre-streaming formulation), the reduction order here is *defined*: fp32
+    block partials folded strictly left to right, matching the Pallas grid
+    accumulation bit for bit.  That makes it streamable — the out-of-core fit
+    feeds row chunks through the same op one at a time (carrying ``acc``) and
+    lands on the identical bits as the in-memory fit's single call.
+
+    ``acc=None`` starts from zeros.  ``m`` is padded up to a multiple of
+    ``bm`` with zero rows (bitwise no-ops: the OAVI domain is >= +0.0).
+    Un-normalized; the caller divides by m.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    L, n = A.shape[1], X.shape[1]
+    K = parents.shape[0]
+    if acc is None:
+        acc = (jnp.zeros((L, K), jnp.float32), jnp.zeros((K, K), jnp.float32))
+    m = A.shape[0]
+    m_pad = _round_up(m, bm)
+    if m_pad != m:
+        A = jnp.pad(A, ((0, m_pad - m), (0, 0)))
+        X = jnp.pad(X, ((0, m_pad - m), (0, 0)))
+    if not (use_pallas or interpret):
+        return ref.gram_accumulate_ref(A, X, parents, vars_, acc[0], acc[1], bm=bm)
+    Psel, Vsel = selection_matrices(parents, vars_, L, n, A.dtype)
+    return _gram_acc_kernel(A, X, Psel, Vsel, acc[0], acc[1], bm=bm, interpret=interpret)
 
 
 def ihb_update(N, q, btb, ell, *, use_pallas=None, interpret=False):

@@ -39,6 +39,41 @@ def border_columns_ref(A, X, parents, vars_):
     return jnp.take(A, parents, axis=1) * jnp.take(X, vars_, axis=1)
 
 
+def gram_accumulate_ref(A, X, parents, vars_, ql0, c0, *, bm: int):
+    """Blocked carry-in Gram reduction — the jnp mirror of the Pallas grid
+    accumulation (``gram_update_acc``): per ``bm``-row block compute both
+    Grams, then fold the blocks into ``(ql0, c0)`` strictly left to right.
+
+    This sequence of fp32 adds makes the reduction *streamable*: accumulating
+    row chunks one call at a time (any chunk size that is a multiple of
+    ``bm``, zero rows appended at the end are bitwise no-ops) produces the
+    identical bits as one call over the concatenated rows.  The per-block
+    Grams run as one batched matmul, which matches the per-block 2D matmul
+    bit for bit on every backend we test (the same batched-matmul stability
+    the class-batched fit relies on), so this reference and the Pallas kernel
+    agree exactly at matched ``bm``.
+
+    ``A.shape[0]`` must be a multiple of ``bm`` (ops.py pads with zero rows;
+    every value in the OAVI domain is >= +0.0, so zero-block adds cannot even
+    flip a signed zero).
+    """
+    m = A.shape[0]
+    nb = m // bm
+    B = jnp.take(A, parents, axis=1) * jnp.take(X, vars_, axis=1)
+    Af = A.astype(jnp.float32).reshape(nb, bm, A.shape[1])
+    Bf = B.astype(jnp.float32).reshape(nb, bm, B.shape[1])
+    QLb = jnp.einsum("bmi,bmj->bij", Af, Bf)
+    Cb = jnp.einsum("bmi,bmj->bij", Bf, Bf)
+
+    def body(carry, blocks):
+        ql, c = carry
+        gql, gc = blocks
+        return (ql + gql, c + gc), None
+
+    (ql, c), _ = jax.lax.scan(body, (ql0, c0), (QLb, Cb))
+    return ql, c
+
+
 def ihb_update_ref(N, q, btb, ell):
     """Theorem 4.9 block-inverse update on the padded inverse (identity in
     the inactive block) — mirrors :func:`repro.core.ihb.append_column`.

@@ -1,0 +1,33 @@
+"""Out-of-core OAVI: chunked data sources, one-pass scaling, and a streaming
+fit driver that rematerializes the evaluation matrix per degree and reduces
+it to Gram sufficient statistics on the fly — ``m`` is bounded by storage (or
+by nothing at all, for generator-backed sources), not device memory, and the
+result is bit-identical to the in-memory fit at matched capacity."""
+
+from .fit import DEFAULT_CHUNK_ROWS, fit, streaming_pearson_order
+from .scaler import StreamingMinMaxScaler
+from .source import (
+    ArraySource,
+    DataSource,
+    ScaledSource,
+    ShardDirSource,
+    SyntheticSource,
+    as_source,
+    is_source,
+    iter_chunks,
+)
+
+__all__ = [
+    "ArraySource",
+    "DEFAULT_CHUNK_ROWS",
+    "DataSource",
+    "ScaledSource",
+    "ShardDirSource",
+    "StreamingMinMaxScaler",
+    "SyntheticSource",
+    "as_source",
+    "fit",
+    "is_source",
+    "iter_chunks",
+    "streaming_pearson_order",
+]

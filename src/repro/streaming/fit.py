@@ -1,0 +1,422 @@
+"""Out-of-core OAVI: fit over data that never fully resides on device.
+
+The paper's central scaling observation is that every degree-step decision of
+OAVI reduces to ``O(|O| * |border|)`` Gram sufficient statistics — the
+``(m, Lcap)`` evaluation matrix A only ever enters through ``A^T B`` and
+``B^T B``.  The in-memory fit still materializes A (capping ``m`` at device
+memory); this driver does not:
+
+* **Per-degree A rematerialization** — a column of A is exactly the
+  evaluation of an O term, so for each fixed-size row chunk of X the A-block
+  is rebuilt from scratch with the degree-wavefront term evaluator
+  (:func:`repro.core.oavi.apply_wavefronts`, bit-identical to the
+  incrementally-built A: both multiply parent column by variable column in
+  the same association order).
+* **Streaming Gram accumulation** — each chunk's Gram blocks fold into
+  running ``(Lcap, Kcap)`` / ``(Kcap, Kcap)`` fp32 accumulators through
+  :func:`repro.kernels.ops.gram_accumulate`, whose ``GRAM_BLOCK``-row
+  sequential reduction makes the accumulated statistics *bit-identical* to
+  the in-memory degree step's single call — for any chunk size that is a
+  multiple of ``GRAM_BLOCK`` — so the streamed fit reproduces the in-memory
+  fit exactly at matched capacity.
+* **Statistics-only degree step** — the acceptance loop runs on the
+  accumulated statistics alone (:func:`repro.core.oavi._make_stats_degree_step`,
+  hoisted out of the in-memory step), covering both the closed-form ``fast``
+  engine and the convex-oracle configs (their IHB/AtA state is Gram-only).
+* **Sharding** — with a ``mesh``, each data shard streams the chunks of its
+  contiguous row span (the same row partition as
+  :func:`repro.core.distributed.fit`) into per-shard accumulators held
+  device-side under ``shard_map``; ONE psum of the accumulated statistics
+  per degree — the same collective count as the in-memory sharded fit, and
+  bit-identical to it at matched capacity.
+
+Peak device memory is O(chunk_rows * Lcap) + O(Lcap^2) regardless of ``m``:
+the half of the paper's "linear in m" claim that device memory previously
+denied us.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ops as kernel_ops
+from ..core import ihb as ihb_mod
+from ..core import terms as terms_mod
+from ..core.distributed import (
+    SHARD_MAP_KW,
+    data_spec,
+    num_data_shards,
+    shard_map_compat,
+)
+from ..core.oavi import (
+    Generator,
+    OAVIConfig,
+    OAVIModel,
+    _kernel_kwargs,
+    _make_stats_degree_step,
+    _np_dtype,
+    apply_wavefronts,
+    border_index_arrays,
+    collect_degree,
+    degree_step_entry,
+    finalize_fit_stats,
+    init_fit_stats,
+    pow2_bucket,
+    sample_memory_stats,
+    wavefront_schedule,
+)
+from ..core.ordering import pearson_order_from_moments
+from .source import DataSource, as_source, iter_chunks
+
+DEFAULT_CHUNK_ROWS = 4096
+
+
+def _check_chunk_rows(chunk_rows: int) -> int:
+    chunk_rows = int(chunk_rows)
+    if chunk_rows < kernel_ops.GRAM_BLOCK or chunk_rows & (chunk_rows - 1):
+        raise ValueError(
+            f"chunk_rows must be a power of two >= {kernel_ops.GRAM_BLOCK} "
+            f"(the canonical Gram block), got {chunk_rows}"
+        )
+    return chunk_rows
+
+
+def streaming_pearson_order(
+    source: DataSource, chunk_rows: int, reverse: bool = False
+) -> np.ndarray:
+    """One streaming pass of float64 sufficient statistics -> Pearson feature
+    order (Algorithm 5).  See :func:`pearson_scores_from_moments` for the
+    (ulp-level, tie-only) caveat vs the in-memory two-pass formula."""
+    n = source.num_features
+    s1 = np.zeros((n,), np.float64)
+    s2 = np.zeros((n, n), np.float64)
+    for chunk, valid in iter_chunks(source, chunk_rows):
+        rows = np.asarray(chunk[:valid], np.float64)
+        s1 += rows.sum(axis=0)
+        s2 += rows.T @ rows
+    return pearson_order_from_moments(s1, s2, source.num_rows, reverse=reverse)
+
+
+# ---------------------------------------------------------------------------
+# Chunk accumulator: jitted (rematerialize A-block, fold Gram blocks) per book
+# ---------------------------------------------------------------------------
+
+# LRU-bounded like the wavefront cache: one entry per (book, config, shapes);
+# a warm refit of the same data replays the same book sequence and compiles
+# nothing.
+_ACC_CACHE: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+_ACC_CACHE_SIZE = 64
+
+
+def _chunk_accumulator(
+    book: terms_mod.TermBook,
+    cfg: OAVIConfig,
+    Lcap: int,
+    chunk_rows: int,
+    mesh: Optional[Mesh],
+    data_axes: Tuple[str, ...],
+):
+    """Jitted ``(accQL, accC, Xc, mask, parents, vars_) -> (accQL, accC)``
+    for one term book: rematerialize the chunk's A-block with the wavefront
+    evaluator, fold its Gram blocks into the running accumulators (donated,
+    so the buffers are reused in place).  Returns ``(fn, seen, is_new)``;
+    ``seen`` mirrors the jit trace cache for recompile accounting."""
+    parents_np = np.asarray(book.parents, np.int32)
+    vars_np = np.asarray(book.vars, np.int32)
+    key = (
+        parents_np.tobytes(),
+        vars_np.tobytes(),
+        cfg,
+        Lcap,
+        chunk_rows,
+        mesh,
+        data_axes,
+    )
+    cached = _ACC_CACHE.get(key)
+    if cached is not None:
+        _ACC_CACHE.move_to_end(key)
+        return cached[0], cached[1], False
+
+    waves, wperm = wavefront_schedule(parents_np, vars_np)
+    ell_book = len(book)
+    gram_kw = _kernel_kwargs(cfg)
+
+    def body(accQL, accC, Xc, mask, parents, vars_):
+        # A-block = O-term evaluations of this chunk: bit-identical to the
+        # incrementally built A (same parent-times-variable association).
+        cols = apply_wavefronts(Xc, waves, wperm)
+        # padded chunk rows must be zero in EVERY column (the constant column
+        # doubles as the row mask, like the sharded path); real rows multiply
+        # by exactly 1.0
+        cols = cols * mask[:, None]
+        A = jnp.pad(cols, ((0, 0), (0, Lcap - ell_book)))
+        return kernel_ops.gram_accumulate(
+            A, Xc, parents, vars_, acc=(accQL, accC), **gram_kw
+        )
+
+    if mesh is None:
+        fn = jax.jit(body, donate_argnums=(0, 1))
+    else:
+        dspec2 = data_spec(data_axes)
+        dspec1 = P(data_axes if len(data_axes) > 1 else data_axes[0])
+        aspec = P(data_axes if len(data_axes) > 1 else data_axes[0], None, None)
+        rep = P()
+
+        def per_shard(accQL, accC, Xc, mask, parents, vars_):
+            ql, c = body(accQL[0], accC[0], Xc, mask, parents, vars_)
+            return ql[None], c[None]
+
+        fn = jax.jit(
+            shard_map_compat(
+                per_shard,
+                mesh=mesh,
+                in_specs=(aspec, aspec, dspec2, dspec1, rep, rep),
+                out_specs=(aspec, aspec),
+                **SHARD_MAP_KW,
+            ),
+            donate_argnums=(0, 1),
+        )
+    entry = (fn, set())
+    _ACC_CACHE[key] = entry
+    if len(_ACC_CACHE) > _ACC_CACHE_SIZE:
+        _ACC_CACHE.popitem(last=False)
+    return fn, entry[1], True
+
+
+def _streaming_stats_entry(
+    config: OAVIConfig, mesh: Optional[Mesh], data_axes: Tuple[str, ...]
+):
+    """Cached jitted statistics-only degree step — replicated stats loop
+    locally; under ``shard_map`` with ONE psum of the accumulators per degree
+    when sharded."""
+    if mesh is None:
+        return degree_step_entry(
+            config,
+            backend_key="streaming",
+            jitted_builder=lambda: jax.jit(_make_stats_degree_step(config)),
+        )
+
+    def build():
+        axes = tuple(data_axes)
+        reduce_fn = lambda x: jax.lax.psum(x, axes)  # noqa: E731
+        stats_step = _make_stats_degree_step(config, reduce_fn=reduce_fn)
+        aspec = P(axes if len(axes) > 1 else axes[0], None, None)
+        rep = P()
+
+        def per_shard(accQL, accC, state, ell0, valid, m_total):
+            return stats_step(accQL[0], accC[0], state, ell0, valid, m_total)
+
+        return jax.jit(
+            shard_map_compat(
+                per_shard,
+                mesh=mesh,
+                in_specs=(aspec, aspec, rep, rep, rep, rep),
+                out_specs=rep,
+                **SHARD_MAP_KW,
+            )
+        )
+
+    return degree_step_entry(
+        config, backend_key=("streaming", mesh, tuple(data_axes)), jitted_builder=build
+    )
+
+
+# ---------------------------------------------------------------------------
+# The streaming fit driver
+# ---------------------------------------------------------------------------
+
+
+def fit(
+    source,
+    config: OAVIConfig = OAVIConfig(),
+    *,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    mesh: Optional[Mesh] = None,
+    data_axes: Sequence[str] = ("data",),
+) -> OAVIModel:
+    """Run OAVI over a chunked :class:`~repro.streaming.source.DataSource`
+    (or array-like) without ever materializing the evaluation matrix.
+
+    Same semantics as :func:`repro.core.oavi.fit` — bit-exact against it at
+    matched capacity for any power-of-two ``chunk_rows`` that is a multiple
+    of :data:`repro.kernels.ops.GRAM_BLOCK` (and against
+    :func:`repro.core.distributed.fit` on the same ``mesh`` when sharded).
+    ``source`` must yield data in ``[0, 1]^n`` (compose with
+    :class:`~repro.streaming.source.ScaledSource`).
+    """
+    t_start = time.perf_counter()
+    source = as_source(source)
+    chunk_rows = _check_chunk_rows(chunk_rows)
+    dtype = config.jax_dtype()
+    np_dtype = _np_dtype(config.dtype)
+    m, n = source.num_rows, source.num_features
+    axes = tuple(data_axes)
+
+    perm = None
+    if config.ordering in ("pearson", "reverse_pearson"):
+        perm = streaming_pearson_order(
+            source, chunk_rows, reverse=(config.ordering == "reverse_pearson")
+        )
+
+    book = terms_mod.TermBook(n=n)
+    generators: List[Generator] = []
+
+    Lcap = pow2_bucket(config.cap_terms)
+    state = ihb_mod.init_state(
+        Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
+    )
+    ell = 1
+
+    # sharded layout: the SAME contiguous per-shard row spans as the
+    # in-memory distributed fit, so per-shard partials (and their psum) are
+    # bit-identical to it
+    if mesh is not None:
+        shards = num_data_shards(mesh, axes)
+        m_pad = ((m + shards - 1) // shards) * shards
+        span = m_pad // shards
+        dspec = data_spec(axes)
+        chunk_sharding = NamedSharding(mesh, dspec)
+        mask_sharding = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+        acc_sharding = NamedSharding(
+            mesh, P(axes if len(axes) > 1 else axes[0], None, None)
+        )
+        rep_sharding = NamedSharding(mesh, P())
+        state = jax.device_put(state, rep_sharding)
+        stats = init_fit_stats(
+            m,
+            n,
+            m_padded=m_pad,
+            mesh={a: int(mesh.shape[a]) for a in mesh.axis_names},
+            data_axes=list(axes),
+            streaming={"chunk_rows": chunk_rows, "num_chunks": 0, "passes": 0},
+        )
+    else:
+        shards = 1
+        span = m
+        stats = init_fit_stats(
+            m,
+            n,
+            streaming={"chunk_rows": chunk_rows, "num_chunks": 0, "passes": 0},
+        )
+
+    entry = _streaming_stats_entry(config, mesh, axes)
+    m_total = jnp.asarray(float(m), dtype)
+    steps_per_pass = max((span + chunk_rows - 1) // chunk_rows, 1)
+
+    def load_step(i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side chunk assembly for global step ``i``: each shard's rows
+        ``[s*span + i*c, ...)`` of its span, zero-padded, plus the row mask."""
+        c = chunk_rows
+        rows = np.zeros((shards * c, n), np_dtype)
+        mask = np.zeros((shards * c,), np_dtype)
+        for s in range(shards):
+            lo = s * span + i * c
+            hi = min(lo + c, (s + 1) * span, m)
+            if lo >= hi:
+                continue
+            block = np.asarray(source.read(lo, hi))
+            if perm is not None:
+                block = block[:, perm]
+            rows[s * c : s * c + hi - lo] = block
+            mask[s * c : s * c + hi - lo] = 1.0
+        return rows, mask
+
+    d = 0
+    while True:
+        d += 1
+        if d > config.max_degree:
+            stats["termination"] = f"max_degree={config.max_degree}"
+            break
+        border = book.border(d)
+        if not border:
+            stats["termination"] = "empty_border"
+            break
+        K = len(border)
+        stats["border_sizes"].append(K)
+        stats["degrees"].append(d)
+
+        # capacity management: only the O(Lcap^2) state grows — there is no
+        # (m, Lcap) buffer to regrow, which is the whole point
+        while ell + K > Lcap:
+            Lcap *= 2
+            stats["regrowths"] += 1
+            state = ihb_mod.grow_state(state, Lcap)
+            if mesh is not None:
+                state = jax.device_put(state, rep_sharding)
+
+        Kcap = max(config.cap_border, pow2_bucket(K))
+        parents, vars_, valid = border_index_arrays(book, border, Kcap)
+
+        acc_fn, acc_seen, acc_new = _chunk_accumulator(
+            book, config, Lcap, chunk_rows, mesh, axes
+        )
+        acc_sig = (Kcap, chunk_rows, n, str(dtype))
+        if acc_new or acc_sig not in acc_seen:
+            acc_seen.add(acc_sig)
+            stats["recompiles"] += 1
+        sig = (Lcap, Kcap, str(dtype))
+        if sig not in entry.seen:
+            entry.seen.add(sig)
+            stats["recompiles"] += 1
+
+        t_deg = time.perf_counter()
+        parents_d = jnp.asarray(parents)
+        vars_d = jnp.asarray(vars_)
+        if mesh is None:
+            accQL = jnp.zeros((Lcap, Kcap), jnp.float32)
+            accC = jnp.zeros((Kcap, Kcap), jnp.float32)
+        else:
+            accQL = jax.device_put(
+                jnp.zeros((shards, Lcap, Kcap), jnp.float32), acc_sharding
+            )
+            accC = jax.device_put(
+                jnp.zeros((shards, Kcap, Kcap), jnp.float32), acc_sharding
+            )
+
+        for i in range(steps_per_pass):
+            rows, mask = load_step(i)
+            if mesh is None:
+                rows_d = jnp.asarray(rows)
+                mask_d = jnp.asarray(mask)
+            else:
+                rows_d = jax.device_put(rows, chunk_sharding)
+                mask_d = jax.device_put(mask, mask_sharding)
+            accQL, accC = acc_fn(accQL, accC, rows_d, mask_d, parents_d, vars_d)
+        stats["streaming"]["num_chunks"] += steps_per_pass
+        stats["streaming"]["passes"] += 1
+
+        st = entry.fn(
+            accQL,
+            accC,
+            state,
+            jnp.asarray(ell, jnp.int32),
+            jnp.asarray(valid),
+            m_total,
+        )
+        state = st.ihb
+        accepted = np.asarray(st.accepted)
+        mses = np.asarray(st.mses)
+        coeffs = np.asarray(st.coeffs)
+        stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
+        stats["solver_iters"].append(int(np.asarray(st.iters)[:K].sum()))
+        sample_memory_stats(stats)
+
+        ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+
+    finalize_fit_stats(stats, book, generators, Lcap, config, t_start)
+    return OAVIModel(
+        n=n,
+        psi=config.psi,
+        book=book,
+        generators=generators,
+        feature_perm=perm,
+        stats=stats,
+        dtype=config.dtype,
+    )

@@ -1,0 +1,212 @@
+"""Chunked data sources for out-of-core OAVI.
+
+A :class:`DataSource` exposes random-access row reads over a dataset whose
+rows may live anywhere — an in-memory array, a directory of memory-mapped
+``.npy`` shards (written by :func:`repro.data.synthetic.write_shards`), or a
+deterministic generator that synthesizes rows on demand.  The streaming fit
+driver (:mod:`repro.streaming.fit`) only ever touches a source through
+:func:`iter_chunks`, which yields fixed-size power-of-two row chunks (the
+trailing chunk zero-padded with its valid-row count), so device buffers stay
+O(chunk) no matter how large ``num_rows`` is.
+
+All sources yield *raw* rows; compose with :class:`ScaledSource` (wrapping a
+fitted :class:`repro.core.transform.MinMaxScaler` or its streaming twin) to
+feed the fit the ``[0, 1]^n`` data OAVI expects.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, Iterator, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+SHARD_FORMAT = "repro.shards.v1"
+SHARD_META = "meta.json"
+
+
+@runtime_checkable
+class DataSource(Protocol):
+    """Random-access row reads; the whole streaming subsystem's data contract."""
+
+    num_rows: int
+    num_features: int
+
+    def read(self, start: int, stop: int) -> np.ndarray:
+        """Rows ``[start, stop)`` as a ``(stop - start, num_features)`` array."""
+        ...
+
+
+def is_source(obj) -> bool:
+    """Duck-typed source check (used by :func:`repro.api.fit` dispatch)."""
+    return (
+        hasattr(obj, "read")
+        and hasattr(obj, "num_rows")
+        and hasattr(obj, "num_features")
+    )
+
+
+def as_source(obj) -> DataSource:
+    """Pass sources through; wrap array-likes in :class:`ArraySource`."""
+    if is_source(obj):
+        return obj
+    return ArraySource(np.asarray(obj))
+
+
+def iter_chunks(
+    source: DataSource,
+    chunk_rows: int,
+    start: int = 0,
+    stop: Optional[int] = None,
+) -> Iterator[Tuple[np.ndarray, int]]:
+    """Fixed-size chunks over ``source`` rows ``[start, stop)``.
+
+    Yields ``(chunk, valid)`` where ``chunk`` is always exactly
+    ``(chunk_rows, n)`` — the trailing chunk is zero-padded — and ``valid``
+    is the number of real rows in it.  Zero padding composes with the
+    blocked Gram reduction as a bitwise no-op (see
+    :func:`repro.kernels.ops.gram_accumulate`).
+    """
+    stop = source.num_rows if stop is None else stop
+    n = source.num_features
+    for lo in range(start, stop, chunk_rows):
+        hi = min(lo + chunk_rows, stop)
+        rows = source.read(lo, hi)
+        valid = hi - lo
+        if valid < chunk_rows:
+            padded = np.zeros((chunk_rows, n), rows.dtype)
+            padded[:valid] = rows
+            rows = padded
+        yield rows, valid
+
+
+class ArraySource:
+    """In-memory array as a source (views, no copies)."""
+
+    def __init__(self, X):
+        self.X = np.asarray(X)
+        if self.X.ndim != 2:
+            raise ValueError(f"expected (m, n) data, got shape {self.X.shape}")
+        self.num_rows = int(self.X.shape[0])
+        self.num_features = int(self.X.shape[1])
+
+    def read(self, start: int, stop: int) -> np.ndarray:
+        return self.X[start:stop]
+
+
+class ShardDirSource:
+    """A directory of ``shard_%05d.npy`` files + ``meta.json``, opened with
+    ``mmap_mode='r'`` so reads touch only the requested rows — the on-disk
+    layout written by :func:`repro.data.synthetic.write_shards`."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(os.path.join(path, SHARD_META)) as f:
+            meta = json.load(f)
+        if meta.get("format") != SHARD_FORMAT:
+            raise ValueError(
+                f"{path!r} is not a {SHARD_FORMAT} shard directory "
+                f"(format={meta.get('format')!r})"
+            )
+        self.meta: Dict = meta
+        self.num_rows = int(meta["num_rows"])
+        self.num_features = int(meta["num_features"])
+        self.shard_rows = int(meta["shard_rows"])
+        self.num_shards = int(meta["num_shards"])
+        self._mmaps: Dict[int, np.ndarray] = {}
+
+    def _shard(self, idx: int) -> np.ndarray:
+        mm = self._mmaps.get(idx)
+        if mm is None:
+            fname = os.path.join(self.path, f"shard_{idx:05d}.npy")
+            mm = np.load(fname, mmap_mode="r")
+            self._mmaps[idx] = mm
+        return mm
+
+    def read(self, start: int, stop: int) -> np.ndarray:
+        if not (0 <= start <= stop <= self.num_rows):
+            raise IndexError(f"rows [{start}, {stop}) out of range {self.num_rows}")
+        out = np.empty((stop - start, self.num_features), np.dtype(self.meta["dtype"]))
+        pos = start
+        while pos < stop:
+            idx = pos // self.shard_rows
+            lo = pos - idx * self.shard_rows
+            hi = min(self.shard_rows, lo + (stop - pos))
+            out[pos - start : pos - start + hi - lo] = self._shard(idx)[lo:hi]
+            pos += hi - lo
+        return out
+
+
+class SyntheticSource:
+    """Generator-backed source: rows are synthesized on demand from a
+    deterministic per-tile generator, so arbitrarily large datasets occupy no
+    storage at all.
+
+    ``tile_fn(tile_idx)`` must return the full ``(tile_rows, n)`` tile for
+    its index, deterministically — reads slice tiles, so any chunking of the
+    row range sees the identical values (the chunk-size-invariance the
+    bit-exactness guarantees rest on).  The last produced tile is cached,
+    which makes sequential chunk scans at any ``chunk_rows <= tile_rows`` (or
+    multiples) cheap.
+    """
+
+    def __init__(
+        self,
+        tile_fn: Callable[[int], np.ndarray],
+        num_rows: int,
+        num_features: int,
+        tile_rows: int = 4096,
+    ):
+        self.tile_fn = tile_fn
+        self.num_rows = int(num_rows)
+        self.num_features = int(num_features)
+        self.tile_rows = int(tile_rows)
+        self._cache: Optional[Tuple[int, np.ndarray]] = None
+
+    def _tile(self, idx: int) -> np.ndarray:
+        if self._cache is not None and self._cache[0] == idx:
+            return self._cache[1]
+        tile = np.asarray(self.tile_fn(idx))
+        if tile.shape != (self.tile_rows, self.num_features):
+            raise ValueError(
+                f"tile_fn({idx}) returned shape {tile.shape}, expected "
+                f"({self.tile_rows}, {self.num_features})"
+            )
+        self._cache = (idx, tile)
+        return tile
+
+    def read(self, start: int, stop: int) -> np.ndarray:
+        if not (0 <= start <= stop <= self.num_rows):
+            raise IndexError(f"rows [{start}, {stop}) out of range {self.num_rows}")
+        parts = []
+        pos = start
+        while pos < stop:
+            idx = pos // self.tile_rows
+            lo = pos - idx * self.tile_rows
+            hi = min(self.tile_rows, lo + (stop - pos))
+            parts.append(self._tile(idx)[lo:hi])
+            pos += hi - lo
+        if len(parts) == 1:
+            return parts[0]
+        return np.concatenate(parts, axis=0)
+
+
+class ScaledSource:
+    """A source composed with a fitted min-max scaler: reads are transformed
+    chunk-by-chunk.  The transform is elementwise, so the scaled stream is
+    bit-identical to scaling the materialized array."""
+
+    def __init__(self, source: DataSource, scaler):
+        if scaler.lo is None or scaler.scale is None:
+            raise ValueError(
+                "ScaledSource needs a *fitted* scaler; fit it first (e.g. "
+                "StreamingMinMaxScaler.fit_source)"
+            )
+        self.source = as_source(source)
+        self.scaler = scaler
+        self.num_rows = self.source.num_rows
+        self.num_features = self.source.num_features
+
+    def read(self, start: int, stop: int) -> np.ndarray:
+        return self.scaler.transform(self.source.read(start, stop))
