@@ -14,7 +14,11 @@
 #   make bench-multiclass sequential-vs-class-batched multi-class fit benchmark
 #                         (BENCH_multiclass.json)
 #   make bench-streaming  out-of-core streaming fit benchmark (BENCH_streaming.json)
+#   make bench-online     incremental update + continuous serving loop benchmark
+#                         (BENCH_online.json)
 #   make serve-smoke      in-process CPU run of the serving CLI (repro.launch.serve_vi)
+#   make continuous-smoke in-process CPU run of the ingest->refit->activate loop
+#                         (repro.launch.continuous_vi)
 #   make bench            full quick benchmark sweep
 #   make clean            remove compiled bytecode and pytest caches
 #   make dev-deps         install dev-only deps (pytest, hypothesis, pyflakes)
@@ -23,7 +27,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-api lint ci bench bench-smoke bench-transform bench-fit \
-        bench-serve bench-multiclass bench-streaming serve-smoke clean dev-deps
+        bench-serve bench-multiclass bench-streaming bench-online serve-smoke \
+        continuous-smoke clean dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -37,8 +42,8 @@ lint:
 ci: lint test bench-smoke
 
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched,streaming_oavi
-	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve multiclass streaming
+	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched,streaming_oavi,online_oavi
+	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve multiclass streaming online
 
 bench-transform:
 	$(PYTHON) -m benchmarks.run --only transform_fused
@@ -54,6 +59,13 @@ bench-multiclass:
 
 bench-streaming:
 	$(PYTHON) -m benchmarks.run --only streaming_oavi
+
+bench-online:
+	$(PYTHON) -m benchmarks.run --only online_oavi
+
+continuous-smoke:
+	$(PYTHON) -m repro.launch.continuous_vi --base-rows 4096 --increments 4 \
+		--increment-rows 1024 --shard-rows 1024 --chunk-rows 512
 
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve_vi --fit-m 1500 --requests 96 --mean-rows 64 \

@@ -1,0 +1,154 @@
+"""Incremental-OAVI benchmark: update-vs-refit speedup + the serving loop.
+
+What this measures (and asserts):
+
+* **update vs full refit** — after a base fit at m, a 1/16-increment
+  :func:`repro.online.update` folds only the new rows into the persisted
+  Gram state; wall-clock against a full warm streaming refit on the grown
+  source must show **>= 5x** speedup (asserted), with **0 recompiles** warm
+  (asserted) and bit-identical generators (asserted at the smallest size).
+* **the loop** — ``launch/continuous_vi.py`` run in process under replayed
+  arrivals: staleness (arrival -> activation), serve p50/p99 while updates
+  are in flight, and 0 bitwise serving mismatches / 0 warm recompiles
+  (asserted).
+
+Emits ``results/BENCH_online.json`` (``bench.v1`` schema).
+
+    PYTHONPATH=src python -m benchmarks.run --only online_oavi
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro import online, streaming
+from repro.core.oavi import OAVIConfig
+from repro.data.synthetic import planted_source
+from repro.kernels.ops import GRAM_BLOCK
+from repro.streaming import ScaledSource
+
+from .common import Reporter, scaled_planted_source, timeit, write_bench_json
+
+CHUNK_ROWS = 4096
+INCREMENT_FRAC = 16  # update folds m/16 new rows
+MIN_SPEEDUP = 5.0
+
+
+def _cfg() -> OAVIConfig:
+    return OAVIConfig(psi=0.005, engine="fast", ordering="pearson", cap_terms=64)
+
+
+def _assert_bit_exact(a, b) -> None:
+    assert a.book.terms == b.book.terms, "term books differ"
+    assert [g.term for g in a.generators] == [g.term for g in b.generators]
+    for ga, gb in zip(a.generators, b.generators):
+        assert np.array_equal(ga.coeffs, gb.coeffs), f"coeffs differ for {ga.term}"
+        assert ga.mse == gb.mse
+
+
+def run(rep: Reporter, quick: bool = True):
+    cfg = _cfg()
+    # m must be large enough that the O(m) refit data work dominates the
+    # m-independent per-degree costs both paths share (stats step, dispatch)
+    sizes = [65_536, 131_072] if quick else [131_072, 262_144, 524_288]
+    rows = []
+
+    for i, m_base in enumerate(sizes):
+        m_new = m_base // INCREMENT_FRAC
+        m_full = m_base + m_new
+        # one source, one frozen scaler: the base view is a strict prefix of
+        # the grown view (planted_source is tile-deterministic)
+        grown = scaled_planted_source(m_full, chunk_rows=CHUNK_ROWS)
+        base = ScaledSource(planted_source(m_base, n=3, seed=0), grown.scaler)
+
+        # warm every cache both paths touch, then time warm-vs-warm
+        streaming.fit(grown, cfg, chunk_rows=CHUNK_ROWS)
+        model0, state0 = online.fit(base, cfg, chunk_rows=CHUNK_ROWS)
+        results = []
+        t_update = timeit(
+            lambda: results.append(online.update(model0, state0, grown))
+        )
+        res = results[-1]
+        refits = []
+        t_refit = timeit(
+            lambda: refits.append(streaming.fit(grown, cfg, chunk_rows=CHUNK_ROWS))
+        )
+        assert res.stats["recompiles"] == 0, "warm update recompiled"
+        assert res.stats["replayed_degrees"] == [], (
+            "update replayed degrees — the speedup would not be an apples-to-"
+            f"apples fold: {res.stats}"
+        )
+        if i == 0:
+            _assert_bit_exact(res.model, refits[-1])
+        speedup = t_refit / max(t_update, 1e-9)
+        row = {
+            "section": "update_vs_refit",
+            "m_base": m_base,
+            "m_new": m_new,
+            "increment_frac": f"1/{INCREMENT_FRAC}",
+            "chunk_rows": CHUNK_ROWS,
+            "t_update_s": round(t_update, 4),
+            "t_full_refit_s": round(t_refit, 4),
+            "speedup": round(speedup, 2),
+            "folded_degrees": res.stats["folded_degrees"],
+            "replayed_degrees": res.stats["replayed_degrees"],
+            "recompiles_warm": res.stats["recompiles"],
+            "update_chunks": res.stats["chunks"],
+            "refit_chunks": refits[-1].stats["streaming"]["num_chunks"],
+            "bit_exact_checked": i == 0,
+        }
+        rows.append(row)
+        rep.add("online_oavi", **row)
+        assert speedup >= MIN_SPEEDUP, (
+            f"update speedup {speedup:.2f}x < {MIN_SPEEDUP}x at m={m_base} "
+            f"(update {t_update:.3f}s vs refit {t_refit:.3f}s)"
+        )
+
+    # ---- the loop: staleness + serving under in-flight updates -----------
+    import tempfile
+
+    from repro.launch import continuous_vi
+
+    loop_args = (
+        ["--base-rows", "8192", "--increments", "4", "--increment-rows", "2048",
+         "--shard-rows", "2048", "--chunk-rows", "2048", "--min-update-rows",
+         "2048"]
+        if quick
+        else ["--base-rows", "65536", "--increments", "8", "--increment-rows",
+              "4096", "--shard-rows", "4096", "--chunk-rows", "4096",
+              "--min-update-rows", "4096"]
+    )
+    with tempfile.TemporaryDirectory(prefix="bench_online_") as workdir:
+        report = continuous_vi.main(loop_args + ["--workdir", workdir])
+    assert report["serve"]["mismatches"] == 0, "serving diverged during refit"
+    assert report["warm_recompiles"] == 0, "loop updates recompiled warm"
+    assert report["staleness_s"], "no arrival ever reached serving"
+    row = {
+        "section": "continuous_loop",
+        "base_rows": report["base_rows"],
+        "total_rows": report["total_rows"],
+        "updates": len(report["updates"]),
+        "versions_activated": report["versions_activated"],
+        "staleness_mean_s": round(report["staleness_mean_s"], 4),
+        "staleness_max_s": round(report["staleness_max_s"], 4),
+        "serve_requests": report["serve"]["requests"],
+        "serve_during_updates": report["serve"]["during_update_requests"],
+        "serve_p50_ms": round(report["serve"]["lat_p50_ms"], 3),
+        "serve_p99_ms": round(report["serve"]["lat_p99_ms"], 3),
+        "mismatches": report["serve"]["mismatches"],
+        "recompiles_warm": report["warm_recompiles"],
+    }
+    rows.append(row)
+    rep.add("online_oavi", **row)
+
+    write_bench_json(
+        "online",
+        rows,
+        meta={
+            "quick": quick,
+            "chunk_rows": CHUNK_ROWS,
+            "gram_block": GRAM_BLOCK,
+            "increment_frac": INCREMENT_FRAC,
+            "min_speedup": MIN_SPEEDUP,
+        },
+    )

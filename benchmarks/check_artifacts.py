@@ -14,7 +14,9 @@ import os
 import sys
 
 SCHEMA = "bench.v1"
-DEFAULT_NAMES = ["fit", "transform", "scaling", "serve", "multiclass", "streaming"]
+DEFAULT_NAMES = [
+    "fit", "transform", "scaling", "serve", "multiclass", "streaming", "online",
+]
 
 
 def check(name: str, out_dir: str = "results") -> str:

@@ -18,6 +18,7 @@ from . import (
     bench_fit,
     bench_ihb,
     bench_multiclass,
+    bench_online,
     bench_ordering,
     bench_performance,
     bench_scaling,
@@ -42,6 +43,7 @@ BENCHES = {
     "serve_engine": bench_serve.run,
     "multiclass_batched": bench_multiclass.run,
     "streaming_oavi": bench_streaming.run,
+    "online_oavi": bench_online.run,
     "roofline": roofline.run,
 }
 

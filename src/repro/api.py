@@ -293,6 +293,7 @@ def fit(
     class_batch: str = "auto",
     source=None,
     chunk_rows: Optional[int] = None,
+    capture_state: bool = False,
     **method_kw,
 ) -> Union[VanishingIdealModel, List[VanishingIdealModel]]:
     """Fit a vanishing-ideal model with the selected ``method`` and backend.
@@ -332,6 +333,10 @@ def fit(
         :data:`repro.streaming.DEFAULT_CHUNK_ROWS`.  Setting it with an
         in-memory ``X`` (array or per-class list) streams through the
         array(s) as sources — same out-of-core fit path, OAVI only.
+    capture_state : streaming OAVI fits only — also capture the incremental
+        :class:`repro.online.FitState` (attached as ``model.fit_state``) so
+        the model can later be refreshed in place with :func:`update` when
+        the source grows.  Local backend only.
     **method_kw : forwarded to the method's config constructor (e.g.
         ``cap_terms=64``, ``solver_kw={"max_iter": 2000}``).
     """
@@ -352,7 +357,13 @@ def fit(
             config=config,
             chunk_rows=chunk_rows,
             out_sharding=out_sharding,
+            capture_state=capture_state,
             **method_kw,
+        )
+    if capture_state:
+        raise ValueError(
+            "capture_state=True needs the streaming fit path: pass source= "
+            "(or an in-memory X together with chunk_rows=)"
         )
     if isinstance(X, (list, tuple)):
         return fit_classes(
@@ -403,9 +414,12 @@ def _fit_streaming(
     config,
     chunk_rows: Optional[int],
     out_sharding=None,
+    capture_state: bool = False,
     **method_kw,
 ):
-    """Out-of-core dispatch: route an OAVI spec to :func:`repro.streaming.fit`."""
+    """Out-of-core dispatch: route an OAVI spec to :func:`repro.streaming.fit`
+    (or, with ``capture_state``, to :func:`repro.online.fit` — same fold,
+    same caches, plus the persisted accumulators)."""
     entry, variant = resolve(method)
     if entry.name != "oavi":
         raise ValueError(
@@ -414,6 +428,27 @@ def _fit_streaming(
     cfg = config if config is not None else oavi_config_for(variant or "fast", psi, **method_kw)
     source = streaming_mod.as_source(source)
     backend_r, mesh_r = _resolve_backend(entry, backend, mesh, source.num_rows)
+    if capture_state:
+        if backend_r == "sharded":
+            raise ValueError(
+                "capture_state=True is local-only (an incremental update is "
+                "O(new rows); run full sharded refits without it)"
+            )
+        from . import online as online_mod
+
+        model, fit_state = online_mod.fit(
+            source, cfg, chunk_rows=chunk_rows or streaming_mod.DEFAULT_CHUNK_ROWS
+        )
+        model.stats["api"] = {
+            "method": entry.spec(variant),
+            "backend": backend_r,
+            "streaming": True,
+            "online": True,
+        }
+        model.fit_state = fit_state
+        if out_sharding is not None:
+            model.transform_out_sharding = out_sharding
+        return model
     if backend_r == "sharded" and mesh_r is None:
         mesh_r = _default_mesh(data_axes)
     model = streaming_mod.fit(
@@ -431,6 +466,28 @@ def _fit_streaming(
     if out_sharding is not None:
         model.transform_out_sharding = out_sharding
     return model
+
+
+def update(model, state, source, **kw):
+    """Refresh a :func:`fit(..., capture_state=True) <fit>` model in place
+    after its source grew.
+
+    Folds only the new rows into ``state``'s persisted per-degree Gram
+    accumulators and re-runs the m-independent degree steps — bit-identical
+    to refitting from scratch on the grown source at matched capacity, at
+    O(new rows) cost and zero recompiles warm.  Returns the
+    :class:`repro.online.UpdateResult` whose ``.model`` carries a fresh
+    ``fit_state`` for the next increment.  See :func:`repro.online.update`
+    for keyword arguments (``chunk_rows``, ``scaler``, ``prefetch``, ...).
+    """
+    from . import online as online_mod
+
+    result = online_mod.update(model, state, source, **kw)
+    api_stats = dict(getattr(model, "stats", {}).get("api") or {})
+    api_stats.update({"backend": "local", "streaming": True, "online": True})
+    result.model.stats["api"] = api_stats
+    result.model.fit_state = result.state
+    return result
 
 
 # ---------------------------------------------------------------------------
@@ -943,4 +1000,5 @@ __all__ = [
     "resolve",
     "save",
     "save_state_dict",
+    "update",
 ]

@@ -68,6 +68,12 @@ class PipelineConfig:
     # materializing its evaluation matrix (bit-exact at matched capacity;
     # takes precedence over class_batch).  None: in-memory fits.
     chunk_rows: Optional[int] = None
+    # incremental fitting: capture each per-class fit's persisted Gram state
+    # (repro.online.FitState, stored on clf.fit_states in class order) so the
+    # per-class models can later be refreshed with repro.api.update when data
+    # arrives.  Requires chunk_rows (the streaming fit path) and an OAVI
+    # method; forces sequential per-class fits (states are per-class).
+    capture_fit_state: bool = False
 
 
 class VanishingIdealClassifier:
@@ -84,6 +90,7 @@ class VanishingIdealClassifier:
         self.classes_: Optional[np.ndarray] = None
         self.stats: Dict = {}
         self.engine = None  # optional serving TransformEngine (attach_engine)
+        self.fit_states: List = []  # per-class FitState (capture_fit_state)
 
     def _fit_generator_models(self, Xcs) -> List:
         """Per-class generator construction through :func:`repro.api.fit_classes`
@@ -91,6 +98,28 @@ class VanishingIdealClassifier:
         from .. import api
 
         cfg = self.config
+        self.fit_states = []
+        if cfg.capture_fit_state:
+            if cfg.chunk_rows is None:
+                raise ValueError(
+                    "capture_fit_state=True requires chunk_rows (the "
+                    "streaming fit path persists the Gram accumulators)"
+                )
+            models = []
+            for Xc in Xcs:
+                model = api.fit(
+                    Xc,
+                    method=cfg.method,
+                    psi=cfg.psi,
+                    backend=cfg.backend,
+                    mesh=cfg.mesh,
+                    chunk_rows=cfg.chunk_rows,
+                    capture_state=True,
+                    **dict(cfg.oavi_kw or {}),
+                )
+                models.append(model)
+                self.fit_states.append(model.fit_state)
+            return models
         return api.fit_classes(
             Xcs,
             method=cfg.method,
@@ -273,6 +302,7 @@ class VanishingIdealClassifier:
                 "batch_size": cfg.batch_size,
                 "class_batch": cfg.class_batch,
                 "chunk_rows": cfg.chunk_rows,
+                "capture_fit_state": cfg.capture_fit_state,
             },
             "svm_stats": self.svm.stats,
             "stats": self.stats,
@@ -297,6 +327,7 @@ class VanishingIdealClassifier:
             class_batch=cfg_meta.get("class_batch", "auto"),
             # pre-streaming checkpoints lack the key; None = in-memory fits
             chunk_rows=cfg_meta.get("chunk_rows"),
+            capture_fit_state=cfg_meta.get("capture_fit_state", False),
         )
         clf = cls(config)
         clf.scaler.lo = np.asarray(arrays["scaler_lo"])

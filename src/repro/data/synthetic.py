@@ -176,11 +176,23 @@ def write_shards(
     data,
     shard_rows: int = 1 << 16,
     dtype: str = "float32",
+    append: bool = False,
 ) -> Dict:
     """Write a source (or array) as a memory-mappable ``.npy`` shard
     directory readable by :class:`repro.streaming.source.ShardDirSource`:
     ``shard_00000.npy``, ... plus ``meta.json`` (format
-    ``repro.shards.v1``).  Returns the metadata dict."""
+    ``repro.shards.v1``).  Returns the metadata dict.
+
+    ``append=True`` grows an existing shard directory in place with the rows
+    of ``data``: new shard files are written first, ``meta.json`` is
+    replaced last via an atomic rename — a concurrent
+    :class:`~repro.streaming.source.ShardDirSource` (or its ``refresh()``)
+    therefore always sees a committed, self-consistent directory, never the
+    half-written state.  Appending requires the existing row count to be a
+    multiple of ``shard_rows`` (all existing shards full): the reader
+    indexes rows as ``pos // shard_rows``, so growth may only ever add
+    shards, not rewrite history.
+    """
     import json
     import os
 
@@ -189,23 +201,58 @@ def write_shards(
     source = as_source(data)
     m, n = source.num_rows, source.num_features
     os.makedirs(path, exist_ok=True)
-    num_shards = max((m + shard_rows - 1) // shard_rows, 1)
     np_dtype = np.dtype(dtype)
-    for idx in range(num_shards):
+    first_shard, row_offset = 0, 0
+    if append:
+        with open(os.path.join(path, SHARD_META)) as f:
+            meta = json.load(f)
+        if meta.get("format") != SHARD_FORMAT:
+            raise ValueError(
+                f"{path!r} is not a {SHARD_FORMAT} shard directory "
+                f"(format={meta.get('format')!r})"
+            )
+        if int(meta["num_features"]) != n or str(meta["dtype"]) != str(np_dtype):
+            raise ValueError(
+                f"append mismatch at {path!r}: existing "
+                f"(n={meta['num_features']}, dtype={meta['dtype']}), "
+                f"appending (n={n}, dtype={np_dtype})"
+            )
+        shard_rows = int(meta["shard_rows"])
+        row_offset = int(meta["num_rows"])
+        if row_offset % shard_rows != 0:
+            raise ValueError(
+                f"cannot append to {path!r}: existing num_rows={row_offset} "
+                f"is not a multiple of shard_rows={shard_rows} (the trailing "
+                "shard is partial; readers assume all but the last shard are "
+                "full)"
+            )
+        first_shard = int(meta["num_shards"])
+        if first_shard * shard_rows != row_offset:
+            raise ValueError(
+                f"{path!r}: meta.json is inconsistent — "
+                f"num_shards={first_shard} * shard_rows={shard_rows} != "
+                f"num_rows={row_offset} (partial write?)"
+            )
+    num_new = max((m + shard_rows - 1) // shard_rows, 0 if append else 1)
+    for idx in range(num_new):
         lo = idx * shard_rows
         hi = min(lo + shard_rows, m)
         block = np.asarray(source.read(lo, hi), np_dtype)
-        np.save(os.path.join(path, f"shard_{idx:05d}.npy"), block)
+        np.save(os.path.join(path, f"shard_{first_shard + idx:05d}.npy"), block)
     meta = {
         "format": SHARD_FORMAT,
-        "num_rows": int(m),
+        "num_rows": int(row_offset + m),
         "num_features": int(n),
         "shard_rows": int(shard_rows),
-        "num_shards": int(num_shards),
+        "num_shards": int(first_shard + num_new),
         "dtype": str(np_dtype),
     }
-    with open(os.path.join(path, SHARD_META), "w") as f:
+    # meta commits the write: tmp + rename is atomic on POSIX, so readers see
+    # either the old or the new directory state, never a torn meta.json
+    tmp = os.path.join(path, SHARD_META + ".tmp")
+    with open(tmp, "w") as f:
         json.dump(meta, f, indent=1)
+    os.replace(tmp, os.path.join(path, SHARD_META))
     return meta
 
 

@@ -1,0 +1,378 @@
+"""Continuous vanishing-ideal fitting: ingest -> drift-gated update -> hot-swap.
+
+The online analogue of :mod:`repro.launch.serve_vi`: instead of fitting once
+and replaying a trace, this driver keeps a model CURRENT while its training
+data grows, without ever taking serving down:
+
+1. **ingest** — a writer thread appends row batches to a shard directory
+   (:func:`repro.data.synthetic.write_shards` ``append=True``; meta.json
+   committed last, atomically), the arrival pattern of a production feature
+   store.  The fit-side :class:`~repro.streaming.source.ShardDirSource`
+   picks the rows up in place via ``refresh()``.
+2. **drift gate** — every arrival's rows feed a
+   :class:`~repro.online.DriftMonitor` (one-pass moments in the scaled
+   space).  An update runs when drift triggers, when enough rows are
+   pending (``--min-update-rows``), or when the stream ends.
+3. **update** — :func:`repro.online.update` folds the new rows into the
+   persisted per-degree Gram state: bit-identical to a full refit on all
+   rows, O(new rows) of data work, zero recompiles warm.
+4. **activate** — the refreshed model is *staged* into the
+   :class:`~repro.serving.ModelRegistry` (``activate=False``), its engine
+   warmed and its expected probe outputs recorded, then hot-swapped
+   atomically.  Serving traffic (closed-loop prober threads through a
+   per-version :class:`~repro.serving.MicroBatcher`) never stops; every
+   response is checked bitwise against the expected output of the version
+   that served it, so a half-swapped or torn model would fail loudly.
+
+Reported: per-update fold/replay accounting and warm recompile counts,
+staleness (data arrival -> serving activation latency) per arrival, serve
+p50/p99 and the update/serve overlap (requests completed while an update
+was in flight — the point of the exercise).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.continuous_vi --increments 4
+    PYTHONPATH=src python -m repro.launch.continuous_vi \
+        --base-rows 65536 --increment-rows 4096 --drift-at-increment 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Data: deterministic arrival batches over the planted-polynomial stream
+# ---------------------------------------------------------------------------
+
+
+def arrival_batch(
+    batch_idx: int, rows: int, n: int, seed: int, drifted: bool = False
+) -> np.ndarray:
+    """One deterministic ingest batch: near-algebraic-set rows (the
+    construction behind :func:`repro.data.synthetic.planted_stream_tile`),
+    keyed by ``(seed, batch_idx)`` so replays are exact.  ``drifted`` batches
+    are affinely shifted — the distribution the model was fitted on moved,
+    which the frozen-scaler drift signals (mean shift, out-of-range values)
+    are built to catch."""
+    rng_w = np.random.default_rng(seed)
+    k = min(3, n)
+    w = rng_w.uniform(0.5, 1.5, k)
+    c = rng_w.uniform(0.5, 1.5)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, batch_idx + 1]))
+    X = rng.uniform(0.0, 1.0, (rows, n))
+    s = (w * X[:, :k] ** 2).sum(axis=1)
+    scale = (c / np.maximum(s, 1e-9)) ** 0.5
+    X[:, :k] *= scale[:, None]
+    X += rng.normal(0.0, 0.03, X.shape)
+    if drifted:
+        X = 0.6 * X + 0.35
+    return X.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving handle: one version's batcher + expected probe outputs
+# ---------------------------------------------------------------------------
+
+
+class ServingHandle:
+    """Everything a prober needs from ONE model version, bound together so a
+    single atomic reference swap retargets traffic: requests submitted
+    through a handle are checked against the expected outputs of exactly the
+    version that computes them (a torn swap cannot silently pass)."""
+
+    def __init__(self, version: int, entry, batcher, expected: List[np.ndarray]):
+        self.version = version
+        self.entry = entry
+        self.batcher = batcher
+        self.expected = expected
+
+
+def stage_handle(registry, name: str, version: int, probes, batcher_config):
+    """Build the serving handle for a STAGED version: compute its expected
+    probe outputs through the (already warmed) engine and start its
+    micro-batcher — all before any traffic sees the version."""
+    from ..serving import MicroBatcher
+
+    entry = registry.get(name, version)
+    expected = [np.asarray(entry.transform(p, scaled=True)) for p in probes]
+    batcher = MicroBatcher(entry.engine, head=entry.head, config=batcher_config)
+    batcher.start()
+    return ServingHandle(version, entry, batcher, expected)
+
+
+# ---------------------------------------------------------------------------
+# The loop
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> Dict:
+    from ..core.oavi import OAVIConfig
+    from ..data.synthetic import write_shards
+    from ..online import DriftConfig, DriftMonitor
+    from ..online import fit as online_fit
+    from ..online import update as online_update
+    from ..serving import BatcherConfig, EngineConfig, ModelRegistry
+    from ..streaming import ScaledSource, ShardDirSource
+    from ..streaming.scaler import StreamingMinMaxScaler
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--base-rows", type=int, default=4096,
+                    help="rows in the initial (offline) fit")
+    ap.add_argument("--increments", type=int, default=4,
+                    help="number of ingest batches appended after the base")
+    ap.add_argument("--increment-rows", type=int, default=1024,
+                    help="rows per ingest batch (multiple of --shard-rows)")
+    ap.add_argument("--shard-rows", type=int, default=1024)
+    ap.add_argument("--chunk-rows", type=int, default=512)
+    ap.add_argument("--n", type=int, default=3)
+    ap.add_argument("--psi", type=float, default=0.005)
+    ap.add_argument("--engine", choices=["fast", "oracle"], default="fast")
+    ap.add_argument("--min-update-rows", type=int, default=2048,
+                    help="pending-row trigger when drift stays quiet")
+    ap.add_argument("--drift-at-increment", type=int, default=-1,
+                    help="first drifted ingest batch index (-1: no drift)")
+    ap.add_argument("--interval-ms", type=float, default=0.0,
+                    help="ingest inter-arrival time (0: replay as fast as possible)")
+    ap.add_argument("--serve-threads", type=int, default=2)
+    ap.add_argument("--probe-rows", type=str, default="8,24,64",
+                    help="comma-separated probe request sizes")
+    ap.add_argument("--max-delay-ms", type=float, default=1.0)
+    ap.add_argument("--workdir", type=str, default=None,
+                    help="shard directory (default: a fresh temp dir)")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write the report dict as JSON here")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.increment_rows % args.shard_rows or args.base_rows % args.shard_rows:
+        raise SystemExit(
+            "--base-rows and --increment-rows must be multiples of "
+            "--shard-rows (append only ever adds whole shards)"
+        )
+
+    workdir = args.workdir or tempfile.mkdtemp(prefix="continuous_vi_")
+    os.makedirs(workdir, exist_ok=True)
+    shard_dir = os.path.join(workdir, "shards")
+
+    # -- base fit: offline model + persisted Gram state -------------------
+    base = arrival_batch(-1, args.base_rows, args.n, args.seed)
+    write_shards(shard_dir, base, shard_rows=args.shard_rows)
+    raw_src = ShardDirSource(shard_dir)
+    scaler = StreamingMinMaxScaler().fit(base)  # frozen: updates never rescale
+    src = ScaledSource(raw_src, scaler)
+
+    config = OAVIConfig(psi=args.psi, engine=args.engine)
+    t0 = time.perf_counter()
+    model, state = online_fit(src, config, chunk_rows=args.chunk_rows, scaler=scaler)
+    t_base_fit = time.perf_counter() - t0
+    monitor = DriftMonitor.from_fit_state(state, DriftConfig())
+    print(
+        f"base fit: m={args.base_rows} |G|+|O|={model.stats['G_plus_O']} "
+        f"in {t_base_fit:.2f}s ({model.stats['recompiles']} compiles)"
+    )
+
+    # -- serving stack: registry + per-version batcher handle --------------
+    registry = ModelRegistry(engine_config=EngineConfig(), warmup=True)
+    entry = registry.register("vi", model, activate=True)
+    if entry.engine is None:
+        raise SystemExit("model set has no fused plan; nothing to serve")
+    probe_sizes = [int(s) for s in args.probe_rows.split(",") if s]
+    pool = src.read(0, min(args.base_rows, 4096))
+    rng = np.random.default_rng(args.seed + 7)
+    probes = []
+    for q in probe_sizes:
+        take = rng.integers(0, pool.shape[0] - q + 1)
+        probes.append(np.ascontiguousarray(pool[take : take + q]))
+    batcher_config = BatcherConfig(max_delay_ms=args.max_delay_ms)
+    handle = stage_handle(registry, "vi", entry.version, probes, batcher_config)
+    handle_lock = threading.Lock()
+    handle_box = {"h": handle}
+
+    # -- serving traffic: closed-loop probers, bitwise-checked -------------
+    stop_serving = threading.Event()
+    updating = threading.Event()
+    serve_lat: List[List[float]] = [[] for _ in range(args.serve_threads)]
+    serve_overlap = [0] * args.serve_threads  # completed while updating
+    serve_mismatch = [0] * args.serve_threads
+    serve_errors: List[BaseException] = []
+
+    def prober(tid: int):
+        prng = np.random.default_rng(args.seed + 100 + tid)
+        while not stop_serving.is_set():
+            i = int(prng.integers(0, len(probes)))
+            with handle_lock:
+                h = handle_box["h"]
+            t_req = time.perf_counter()
+            try:
+                out = h.batcher.submit(probes[i], "transform").result()
+            except RuntimeError:
+                continue  # handle swapped under us and its batcher stopped
+            except BaseException as e:  # pragma: no cover - surfaced below
+                serve_errors.append(e)
+                return
+            serve_lat[tid].append((time.perf_counter() - t_req) * 1e3)
+            if updating.is_set():
+                serve_overlap[tid] += 1
+            if not np.array_equal(out, h.expected[i]):
+                serve_mismatch[tid] += 1
+
+    serve_threads = [
+        threading.Thread(target=prober, args=(t,), daemon=True)
+        for t in range(args.serve_threads)
+    ]
+    for t in serve_threads:
+        t.start()
+
+    # -- ingest: append arrival batches to the shard dir -------------------
+    arrivals: List[Dict] = []  # {"cum_rows", "t_arrival"} per batch
+    arrivals_lock = threading.Lock()
+    ingest_done = threading.Event()
+
+    def ingest():
+        cum = args.base_rows
+        for b in range(args.increments):
+            drifted = 0 <= args.drift_at_increment <= b
+            rows = arrival_batch(b, args.increment_rows, args.n, args.seed, drifted)
+            write_shards(shard_dir, rows, append=True)
+            cum += args.increment_rows
+            with arrivals_lock:
+                arrivals.append({"cum_rows": cum, "t_arrival": time.perf_counter()})
+            if args.interval_ms:
+                time.sleep(args.interval_ms / 1e3)
+        ingest_done.set()
+
+    ingest_thread = threading.Thread(target=ingest, daemon=True)
+    ingest_thread.start()
+
+    # -- controller: refresh -> drift gate -> update -> stage -> activate --
+    updates: List[Dict] = []
+    staleness: List[float] = []
+    fitted_rows = args.base_rows
+    total_rows = args.base_rows + args.increments * args.increment_rows
+    old_handles: List[ServingHandle] = []
+    try:
+        while fitted_rows < total_rows:
+            grew = raw_src.refresh()
+            if grew:
+                # fold the freshly visible rows into the drift window
+                for lo in range(src.num_rows - grew, src.num_rows, args.chunk_rows):
+                    monitor.observe(src.read(lo, min(lo + args.chunk_rows, src.num_rows)))
+            pending = src.num_rows - fitted_rows
+            drifted, sig = monitor.should_refit()
+            run = pending > 0 and (
+                drifted
+                or pending >= args.min_update_rows
+                or (ingest_done.is_set() and src.num_rows == total_rows)
+            )
+            if not run:
+                time.sleep(0.002)
+                continue
+
+            updating.set()
+            t_up = time.perf_counter()
+            result = online_update(model, state, src, scaler=scaler)
+            model, state = result.model, result.state
+            staged = registry.register("vi", model, activate=False)
+            new_handle = stage_handle(
+                registry, "vi", staged.version, probes, batcher_config
+            )
+            registry.activate("vi", staged.version)
+            with handle_lock:
+                old = handle_box["h"]
+                handle_box["h"] = new_handle
+            old_handles.append(old)  # stopped after the loop; drains in-flight
+            t_active = time.perf_counter()
+            updating.clear()
+            fitted_rows = src.num_rows
+            with arrivals_lock:
+                for a in arrivals:
+                    if "t_active" not in a and a["cum_rows"] <= fitted_rows:
+                        a["t_active"] = t_active
+                        staleness.append(t_active - a["t_arrival"])
+            monitor.rebase()
+            rec = dict(result.stats)
+            rec.update(
+                version=staged.version,
+                rows=fitted_rows,
+                drift=sig,
+                time_to_active=t_active - t_up,
+            )
+            updates.append(rec)
+            print(
+                f"update v{staged.version}: +{rec['new_rows']} rows -> "
+                f"{fitted_rows}, folded {rec['folded_degrees']} / replayed "
+                f"{rec['replayed_degrees']} degrees, "
+                f"{rec['recompiles']} recompiles, active in "
+                f"{rec['time_to_active']:.3f}s"
+                + (f" [drift: {sig['triggered']}]" if sig["triggered"] else "")
+            )
+        ingest_thread.join()
+    finally:
+        stop_serving.set()
+        for t in serve_threads:
+            t.join()
+        for h in old_handles + [handle_box["h"]]:
+            h.batcher.stop()
+    if serve_errors:
+        raise serve_errors[0]
+
+    # -- report ------------------------------------------------------------
+    lats = np.asarray([x for per in serve_lat for x in per])
+    overlap_requests = int(sum(serve_overlap))
+    mismatches = int(sum(serve_mismatch))
+    update_busy = float(sum(u["time_to_active"] for u in updates))
+    report = {
+        "base_rows": args.base_rows,
+        "total_rows": total_rows,
+        "increments": args.increments,
+        "engine": args.engine,
+        "time_base_fit": t_base_fit,
+        "updates": updates,
+        "warm_recompiles": int(sum(u["recompiles"] for u in updates)),
+        "versions_activated": 1 + len(updates),
+        "staleness_s": staleness,
+        "staleness_mean_s": float(np.mean(staleness)) if staleness else 0.0,
+        "staleness_max_s": float(np.max(staleness)) if staleness else 0.0,
+        "serve": {
+            "requests": int(lats.size),
+            "mismatches": mismatches,
+            "during_update_requests": overlap_requests,
+            "lat_p50_ms": float(np.percentile(lats, 50)) if lats.size else 0.0,
+            "lat_p99_ms": float(np.percentile(lats, 99)) if lats.size else 0.0,
+        },
+        "overlap": {
+            "update_busy_s": update_busy,
+            "served_during_updates": overlap_requests,
+        },
+    }
+    print(
+        f"{len(updates)} updates to m={total_rows} "
+        f"({report['warm_recompiles']} warm recompiles), staleness "
+        f"mean {report['staleness_mean_s']:.3f}s max {report['staleness_max_s']:.3f}s"
+    )
+    print(
+        f"served {report['serve']['requests']} probe requests "
+        f"(p50 {report['serve']['lat_p50_ms']:.2f}ms, "
+        f"p99 {report['serve']['lat_p99_ms']:.2f}ms), "
+        f"{overlap_requests} completed during in-flight updates, "
+        f"{mismatches} bitwise mismatches"
+    )
+    if mismatches:
+        print("ERROR: served responses diverged from their version's expected output")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Incremental OAVI: batch fitting turned into continuous fitting.
+
+The Gram sufficient statistics that drive the streaming degree step are
+additive over rows and bit-reproducible under the blocked-reduction carry-in
+contract, so a fit over continuously-arriving data is a *fold*: persist the
+per-degree accumulators (:class:`FitState`), fold new chunks in
+(:func:`update` — bit-identical to a full streaming refit on the
+concatenated data), re-run the m-independent statistics-only degree steps
+(zero recompiles warm), and gate the whole thing on cheap one-pass drift
+signals (:class:`DriftMonitor`).  The ingest→refit→activate serving loop
+lives in ``launch/continuous_vi.py``.
+"""
+
+from .drift import DriftConfig, DriftMonitor
+from .state import FIT_STATE_FORMAT, DegreeRecord, FitState
+from .update import UpdateResult, fit, update
+
+__all__ = [
+    "DegreeRecord",
+    "DriftConfig",
+    "DriftMonitor",
+    "FIT_STATE_FORMAT",
+    "FitState",
+    "UpdateResult",
+    "fit",
+    "update",
+]

@@ -1,0 +1,479 @@
+"""Incremental OAVI: fold new rows into persisted Gram state.
+
+:func:`update` takes a fitted model, its :class:`~repro.online.state.FitState`
+and the *grown* source (old rows first, new rows appended) and produces the
+model of the grown data — without re-reading the old rows, degree by degree:
+
+* a degree whose stored :class:`DegreeRecord` still matches the (new) fit's
+  decision history folds only rows ``[aligned_rows, m_new)`` into the saved
+  accumulators — the per-degree data work drops from O(m) to O(new rows);
+* a degree whose border changed (new data flipped an accept/reject upstream,
+  growing or shrinking the book prefix) replays rows ``[0, m_new)`` — border
+  growth is handled by replaying only the affected degrees, never the whole
+  fit, because the book is prefix-append-only: degrees before the first
+  changed decision keep folding.
+
+Bit-exactness: both paths produce accumulators bit-identical to a full
+streaming refit over the concatenated source at matched capacity.  The fold
+resumes on a :data:`~repro.kernels.ops.GRAM_BLOCK` boundary
+(``FitState.aligned_rows``), so the blocked fp32 reduction sees the exact
+same block partition as a one-shot pass (the ``gram_accumulate`` carry-in
+contract); the m-independent statistics-only degree step then runs on
+bit-equal inputs.  The Pearson moment fold keeps the same guarantee by
+snapshotting moments on the ``chunk_rows`` grid (the one-shot pass's own
+chunk partition).
+
+Zero recompiles warm: the degree loop reuses the streaming fit's global
+chunk-accumulator and stats-step caches, so an update after any warm
+streaming fit (or prior update) of the same config and book sequence
+compiles nothing.
+
+The degree step re-runs for *every* degree — folded or replayed — because
+the IHB factors are rebuilt from the new statistics as the degrees advance;
+that work is O(Lcap^2) per degree, independent of ``m``, which is exactly
+why folding wins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import ihb as ihb_mod
+from ..core import terms as terms_mod
+from ..core.oavi import (
+    Generator,
+    OAVIConfig,
+    OAVIModel,
+    _np_dtype,
+    border_index_arrays,
+    collect_degree,
+    finalize_fit_stats,
+    init_fit_stats,
+    pow2_bucket,
+    sample_memory_stats,
+)
+from ..core.ordering import pearson_order_from_moments
+from ..kernels import ops as kernel_ops
+from ..streaming.fit import (
+    DEFAULT_CHUNK_ROWS,
+    _check_chunk_rows,
+    _chunk_accumulator,
+    _streaming_stats_entry,
+    accumulate_source_range,
+    pearson_moments,
+)
+from ..streaming.source import DataSource, as_source
+from .state import DegreeRecord, FitState
+
+
+@dataclasses.dataclass
+class UpdateResult:
+    """What :func:`update` hands back: the refreshed model (a new version,
+    bit-identical to a full refit on the grown data), the new fit state for
+    the *next* update, and update-level accounting."""
+
+    model: OAVIModel
+    state: FitState
+    stats: Dict
+
+
+def _probe_row(source: DataSource, row: int) -> np.ndarray:
+    return np.array(source.read(row, row + 1)[0])
+
+
+def _pearson_perm(
+    source: DataSource,
+    chunk_rows: int,
+    config: OAVIConfig,
+    base: Optional[FitState],
+) -> Tuple[np.ndarray, Tuple[np.ndarray, np.ndarray], int]:
+    """Feature permutation of the (grown) source + the chunk-aligned moment
+    snapshot for the next state.
+
+    Moments are snapshotted at ``(m // chunk_rows) * chunk_rows`` — a chunk
+    boundary of the one-shot pass — so folding new full chunks on top of the
+    snapshot reproduces :func:`streaming_pearson_order`'s float64 sums bit
+    for bit (same chunk partition, same summation order).  A base state with
+    a different ``chunk_rows`` cannot reuse its snapshot (different
+    partition): moments recompute from scratch, still matching the one-shot
+    pass at the *new* chunk size."""
+    m = source.num_rows
+    aligned = (m // chunk_rows) * chunk_rows
+    if (
+        base is not None
+        and base.moments is not None
+        and base.chunk_rows == chunk_rows
+        and base.moment_rows <= aligned
+    ):
+        s1, s2 = pearson_moments(
+            source,
+            chunk_rows,
+            start=base.moment_rows,
+            stop=aligned,
+            s1=base.moments[0],
+            s2=base.moments[1],
+        )
+    else:
+        s1, s2 = pearson_moments(source, chunk_rows, stop=aligned)
+    s1f, s2f = pearson_moments(source, chunk_rows, start=aligned, s1=s1, s2=s2)
+    perm = pearson_order_from_moments(
+        s1f, s2f, m, reverse=(config.ordering == "reverse_pearson")
+    )
+    return perm, (s1, s2), aligned
+
+
+def _scaler_stats(scaler) -> Tuple[Optional[np.ndarray], Optional[np.ndarray]]:
+    if scaler is None or getattr(scaler, "lo", None) is None:
+        return None, None
+    lo = np.asarray(scaler.lo, np.float64)
+    hi = getattr(scaler, "hi", None)
+    if hi is None and getattr(scaler, "scale", None) is not None:
+        # plain MinMaxScaler keeps (lo, scale); recover hi where the range
+        # was non-degenerate, else hi = lo
+        scale = np.asarray(scaler.scale, np.float64)
+        hi = np.where(scale > 0, lo + 1.0 / np.where(scale > 0, scale, 1.0), lo)
+    return lo, (None if hi is None else np.asarray(hi, np.float64))
+
+
+def _drive(
+    source: DataSource,
+    config: OAVIConfig,
+    chunk_rows: int,
+    state_in: Optional[FitState],
+    perm: Optional[np.ndarray],
+    moments: Optional[Tuple[np.ndarray, np.ndarray]],
+    moment_rows: int,
+    scaler,
+    prefetch: bool,
+) -> Tuple[OAVIModel, FitState]:
+    """The shared degree loop behind :func:`fit` (``state_in=None``: every
+    degree streams all rows) and :func:`update` (matching degrees fold only
+    rows past the snapshot).  Local path only — an update is O(new rows) of
+    data work, which a serving-side host handles without a mesh; sharded
+    *full* fits stay with :func:`repro.streaming.fit`."""
+    t_start = time.perf_counter()
+    dtype = config.jax_dtype()
+    np_dtype = _np_dtype(config.dtype)
+    m, n = source.num_rows, source.num_features
+    aligned_new = (m // kernel_ops.GRAM_BLOCK) * kernel_ops.GRAM_BLOCK
+    base_rows = state_in.num_rows if state_in is not None else 0
+
+    book = terms_mod.TermBook(n=n)
+    generators: List[Generator] = []
+    Lcap = pow2_bucket(config.cap_terms)
+    ihb_state = ihb_mod.init_state(
+        Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
+    )
+    ell = 1
+    stats = init_fit_stats(
+        m,
+        n,
+        streaming={"chunk_rows": chunk_rows, "num_chunks": 0, "passes": 0},
+        online={
+            "base_rows": base_rows,
+            "new_rows": m - base_rows,
+            "folded_degrees": 0,
+            "replayed_degrees": [],
+        },
+    )
+    entry = _streaming_stats_entry(config, None, ("data",))
+    m_total = jnp.asarray(float(m), dtype)
+    records_out: List[DegreeRecord] = []
+
+    d = 0
+    while True:
+        d += 1
+        if d > config.max_degree:
+            stats["termination"] = f"max_degree={config.max_degree}"
+            break
+        border = book.border(d)
+        if not border:
+            stats["termination"] = "empty_border"
+            break
+        K = len(border)
+        stats["border_sizes"].append(K)
+        stats["degrees"].append(d)
+
+        while ell + K > Lcap:
+            Lcap *= 2
+            stats["regrowths"] += 1
+            ihb_state = ihb_mod.grow_state(ihb_state, Lcap)
+
+        Kcap = max(config.cap_border, pow2_bucket(K))
+        parents, vars_, valid = border_index_arrays(book, border, Kcap)
+
+        acc_fn, acc_seen, acc_new = _chunk_accumulator(
+            book, config, Lcap, chunk_rows, None, ("data",)
+        )
+        acc_sig = (Kcap, chunk_rows, n, str(dtype))
+        if acc_new or acc_sig not in acc_seen:
+            acc_seen.add(acc_sig)
+            stats["recompiles"] += 1
+        sig = (Lcap, Kcap, str(dtype))
+        if sig not in entry.seen:
+            entry.seen.add(sig)
+            stats["recompiles"] += 1
+
+        t_deg = time.perf_counter()
+        parents_d = jnp.asarray(parents)
+        vars_d = jnp.asarray(vars_)
+        rec = (
+            state_in.record_matches(d, book, K, Lcap, Kcap)
+            if state_in is not None
+            else None
+        )
+        if rec is not None:
+            # resume the fold where the snapshot ends — a GRAM_BLOCK
+            # boundary, so the remaining blocks land exactly where a
+            # one-shot pass would put them
+            accQL = jnp.asarray(rec.accQL)
+            accC = jnp.asarray(rec.accC)
+            start_row = state_in.aligned_rows
+            stats["online"]["folded_degrees"] += 1
+        else:
+            accQL = jnp.zeros((Lcap, Kcap), jnp.float32)
+            accC = jnp.zeros((Kcap, Kcap), jnp.float32)
+            start_row = 0
+            stats["online"]["replayed_degrees"].append(d)
+
+        accQL, accC, nc = accumulate_source_range(
+            acc_fn,
+            source,
+            start_row,
+            aligned_new,
+            chunk_rows,
+            (accQL, accC),
+            parents_d,
+            vars_d,
+            perm=perm,
+            np_dtype=np_dtype,
+            prefetch=prefetch,
+        )
+        # snapshot BEFORE the unaligned tail: the record must cover exactly
+        # [0, aligned_new) so the next update can resume on a block boundary
+        # (np.asarray forces + copies to host before acc_fn donates the
+        # device buffers again)
+        records_out.append(
+            DegreeRecord(
+                degree=d,
+                ell=ell,
+                K=K,
+                Lcap=Lcap,
+                Kcap=Kcap,
+                accQL=np.asarray(accQL),
+                accC=np.asarray(accC),
+            )
+        )
+        if aligned_new < m:
+            accQL, accC, nc2 = accumulate_source_range(
+                acc_fn,
+                source,
+                aligned_new,
+                m,
+                chunk_rows,
+                (accQL, accC),
+                parents_d,
+                vars_d,
+                perm=perm,
+                np_dtype=np_dtype,
+                prefetch=prefetch,
+            )
+            nc += nc2
+        stats["streaming"]["num_chunks"] += nc
+        stats["streaming"]["passes"] += 1
+
+        st = entry.fn(
+            accQL,
+            accC,
+            ihb_state,
+            jnp.asarray(ell, jnp.int32),
+            jnp.asarray(valid),
+            m_total,
+        )
+        ihb_state = st.ihb
+        accepted = np.asarray(st.accepted)
+        mses = np.asarray(st.mses)
+        coeffs = np.asarray(st.coeffs)
+        stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
+        stats["solver_iters"].append(int(np.asarray(st.iters)[:K].sum()))
+        sample_memory_stats(stats)
+
+        ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+
+    finalize_fit_stats(stats, book, generators, Lcap, config, t_start)
+    scaler_lo, scaler_hi = _scaler_stats(scaler)
+    model = OAVIModel(
+        n=n,
+        psi=config.psi,
+        book=book,
+        generators=generators,
+        feature_perm=perm,
+        stats=stats,
+        dtype=config.dtype,
+    )
+    new_state = FitState(
+        n=n,
+        num_rows=m,
+        aligned_rows=aligned_new,
+        chunk_rows=chunk_rows,
+        config=config,
+        book_parents=np.asarray(book.parents, np.int32),
+        book_vars=np.asarray(book.vars, np.int32),
+        records=records_out,
+        feature_perm=None if perm is None else np.asarray(perm),
+        moments=moments,
+        moment_rows=moment_rows,
+        scaler_lo=scaler_lo,
+        scaler_hi=scaler_hi,
+        probe_first=_probe_row(source, 0) if m else None,
+        probe_last=_probe_row(source, m - 1) if m else None,
+    )
+    return model, new_state
+
+
+def fit(
+    source,
+    config: OAVIConfig = OAVIConfig(),
+    *,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    scaler=None,
+    prefetch: bool = True,
+) -> Tuple[OAVIModel, FitState]:
+    """Streaming OAVI fit that also captures the incremental
+    :class:`FitState` — bit-identical model to :func:`repro.streaming.fit`
+    on the same source at the same ``chunk_rows`` (it is the same chunk
+    accumulator and stats step, driven through the same caches).
+
+    ``scaler`` (optional, a fitted min-max scaler) is recorded in the state
+    as the drift-monitoring reference; pass the frozen scaler the source is
+    composed with."""
+    source = as_source(source)
+    chunk_rows = _check_chunk_rows(chunk_rows)
+    perm = moments = None
+    moment_rows = 0
+    if config.ordering in ("pearson", "reverse_pearson"):
+        perm, moments, moment_rows = _pearson_perm(source, chunk_rows, config, None)
+    return _drive(
+        source, config, chunk_rows, None, perm, moments, moment_rows, scaler, prefetch
+    )
+
+
+def update(
+    model: Optional[OAVIModel],
+    state: FitState,
+    source,
+    *,
+    chunk_rows: Optional[int] = None,
+    scaler=None,
+    prefetch: bool = True,
+    check_probes: bool = True,
+) -> UpdateResult:
+    """Refit on a grown source, folding instead of re-reading where possible.
+
+    ``source`` must be the FULL grown dataset: rows ``[0, state.num_rows)``
+    bit-identical to the data the state accumulated (same scaler, same
+    order), new rows appended after.  Full access — not just the delta — is
+    required because a flipped degree decision forces a full-range replay of
+    the affected degrees; unchanged degrees never touch the old rows.
+
+    Returns an :class:`UpdateResult` whose model is bit-identical to
+    ``streaming.fit`` (or :func:`fit`) on the same source at the same
+    capacity and chunk size, for every engine the streaming fit supports.
+    """
+    t0 = time.perf_counter()
+    source = as_source(source)
+    config = state.config
+    chunk_rows = (
+        state.chunk_rows if chunk_rows is None else _check_chunk_rows(chunk_rows)
+    )
+    m_new = source.num_rows
+    if source.num_features != state.n:
+        raise ValueError(
+            f"source has {source.num_features} features, state was built on "
+            f"{state.n}"
+        )
+    if m_new < state.num_rows:
+        raise ValueError(
+            f"source shrank: {m_new} rows < state.num_rows={state.num_rows}; "
+            "update() only supports appended data"
+        )
+    if model is not None:
+        mp = np.asarray(model.book.parents, np.int32)
+        mv = np.asarray(model.book.vars, np.int32)
+        if not (
+            np.array_equal(mp, state.book_parents)
+            and np.array_equal(mv, state.book_vars)
+        ):
+            raise ValueError(
+                "model/state mismatch: the FitState does not belong to this "
+                "model (different term books)"
+            )
+    if check_probes and state.probe_first is not None and state.num_rows:
+        same_first = np.array_equal(_probe_row(source, 0), state.probe_first)
+        same_last = state.probe_last is None or np.array_equal(
+            _probe_row(source, state.num_rows - 1), state.probe_last
+        )
+        if not (same_first and same_last):
+            raise ValueError(
+                "source prefix mismatch: rows the state already accumulated "
+                "changed (different data, ordering, or scaler); incremental "
+                "statistics would be silently wrong — refit from scratch"
+            )
+
+    refit_reason = None
+    perm = moments = None
+    moment_rows = 0
+    state_eff: Optional[FitState] = state
+    if chunk_rows != state.chunk_rows:
+        # a different chunk grid re-partitions the Pearson moment sums; the
+        # Gram records themselves stay foldable (their alignment is
+        # GRAM_BLOCK, not chunk_rows)
+        refit_reason = "chunk_rows_changed"
+    if config.ordering in ("pearson", "reverse_pearson"):
+        perm, moments, moment_rows = _pearson_perm(source, chunk_rows, config, state)
+        if state.feature_perm is None or not np.array_equal(
+            perm, np.asarray(state.feature_perm)
+        ):
+            # the permutation relabels every book column: no record survives
+            state_eff = None
+            refit_reason = "feature_order_changed"
+    elif state.feature_perm is not None:
+        state_eff = None
+        refit_reason = "feature_order_changed"
+
+    new_model, new_state = _drive(
+        source,
+        config,
+        chunk_rows,
+        state_eff,
+        perm,
+        moments,
+        moment_rows,
+        scaler,
+        prefetch,
+    )
+    if scaler is None:
+        # carry the drift reference forward unless the caller replaces it
+        new_state.scaler_lo = state.scaler_lo
+        new_state.scaler_hi = state.scaler_hi
+    online = new_model.stats["online"]
+    online["base_rows"] = state.num_rows  # even when records were dropped
+    online["new_rows"] = m_new - state.num_rows
+    if refit_reason is not None:
+        online["refit_reason"] = refit_reason
+    up_stats = {
+        "base_rows": state.num_rows,
+        "new_rows": m_new - state.num_rows,
+        "folded_degrees": online["folded_degrees"],
+        "replayed_degrees": list(online["replayed_degrees"]),
+        "refit_reason": refit_reason,
+        "recompiles": new_model.stats["recompiles"],
+        "chunks": new_model.stats["streaming"]["num_chunks"],
+        "time_update": time.perf_counter() - t0,
+    }
+    return UpdateResult(model=new_model, state=new_state, stats=up_stats)

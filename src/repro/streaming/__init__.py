@@ -4,7 +4,14 @@ it to Gram sufficient statistics on the fly — ``m`` is bounded by storage (or
 by nothing at all, for generator-backed sources), not device memory, and the
 result is bit-identical to the in-memory fit at matched capacity."""
 
-from .fit import DEFAULT_CHUNK_ROWS, fit, streaming_pearson_order
+from .fit import (
+    DEFAULT_CHUNK_ROWS,
+    accumulate_source_range,
+    fit,
+    pearson_moments,
+    prefetch_map,
+    streaming_pearson_order,
+)
 from .scaler import StreamingMinMaxScaler
 from .source import (
     ArraySource,
@@ -25,9 +32,12 @@ __all__ = [
     "ShardDirSource",
     "StreamingMinMaxScaler",
     "SyntheticSource",
+    "accumulate_source_range",
     "as_source",
     "fit",
     "is_source",
     "iter_chunks",
+    "pearson_moments",
+    "prefetch_map",
     "streaming_pearson_order",
 ]

@@ -39,7 +39,8 @@ from __future__ import annotations
 
 import time
 from collections import OrderedDict
-from typing import List, Optional, Sequence, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,20 +89,62 @@ def _check_chunk_rows(chunk_rows: int) -> int:
     return chunk_rows
 
 
+def pearson_moments(
+    source: DataSource,
+    chunk_rows: int,
+    start: int = 0,
+    stop: Optional[int] = None,
+    s1: Optional[np.ndarray] = None,
+    s2: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold rows ``[start, stop)`` of ``source`` into the float64 Pearson
+    sufficient statistics ``(s1, s2) = (sum x, sum x x^T)`` — the one-pass
+    moment state behind :func:`streaming_pearson_order`, exposed so an
+    online fit can persist it and fold only *new* rows on update."""
+    n = source.num_features
+    s1 = np.zeros((n,), np.float64) if s1 is None else np.array(s1, np.float64)
+    s2 = np.zeros((n, n), np.float64) if s2 is None else np.array(s2, np.float64)
+    for chunk, valid in iter_chunks(source, chunk_rows, start=start, stop=stop):
+        rows = np.asarray(chunk[:valid], np.float64)
+        s1 += rows.sum(axis=0)
+        s2 += rows.T @ rows
+    return s1, s2
+
+
 def streaming_pearson_order(
     source: DataSource, chunk_rows: int, reverse: bool = False
 ) -> np.ndarray:
     """One streaming pass of float64 sufficient statistics -> Pearson feature
     order (Algorithm 5).  See :func:`pearson_scores_from_moments` for the
     (ulp-level, tie-only) caveat vs the in-memory two-pass formula."""
-    n = source.num_features
-    s1 = np.zeros((n,), np.float64)
-    s2 = np.zeros((n, n), np.float64)
-    for chunk, valid in iter_chunks(source, chunk_rows):
-        rows = np.asarray(chunk[:valid], np.float64)
-        s1 += rows.sum(axis=0)
-        s2 += rows.T @ rows
+    s1, s2 = pearson_moments(source, chunk_rows)
     return pearson_order_from_moments(s1, s2, source.num_rows, reverse=reverse)
+
+
+def prefetch_map(stage, items: Iterable, enabled: bool = True):
+    """Yield ``stage(item)`` for each item, keeping ONE staged result in
+    flight ahead of the consumer (host->device double buffering).
+
+    While the consumer runs the jitted accumulator on chunk ``i``, a single
+    worker thread assembles and device-puts chunk ``i+1`` — the host-side
+    read/pad/transfer work overlaps the device work instead of serializing
+    with it.  Order is preserved and every item is staged exactly once, so
+    the values the consumer folds are identical with prefetching on or off
+    (bit-identity is a pure function of the fold order, which this never
+    changes)."""
+    if not enabled:
+        for item in items:
+            yield stage(item)
+        return
+    with ThreadPoolExecutor(max_workers=1) as pool:
+        pending = None
+        for item in items:
+            nxt = pool.submit(stage, item)
+            if pending is not None:
+                yield pending.result()
+            pending = nxt
+        if pending is not None:
+            yield pending.result()
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +233,58 @@ def _chunk_accumulator(
     return fn, entry[1], True
 
 
+def accumulate_source_range(
+    acc_fn,
+    source: DataSource,
+    start: int,
+    stop: int,
+    chunk_rows: int,
+    acc: Tuple[jax.Array, jax.Array],
+    parents_d: jax.Array,
+    vars_d: jax.Array,
+    perm: Optional[np.ndarray] = None,
+    np_dtype=np.float32,
+    prefetch: bool = True,
+) -> Tuple[jax.Array, jax.Array, int]:
+    """Fold rows ``[start, stop)`` of ``source`` into the Gram accumulators
+    through one jitted chunk accumulator (local path).
+
+    ``start`` must sit on a :data:`~repro.kernels.ops.GRAM_BLOCK` boundary of
+    the *global* row index: every chunk then covers whole GRAM_BLOCK blocks
+    (trailing zero-padding is a bitwise no-op), so the block partition — and
+    therefore every fp32 partial — is identical to a single pass over
+    ``[0, stop)`` no matter where the range is split.  This is what lets an
+    online update resume accumulation exactly where a previous fit's
+    statistics end (:mod:`repro.online`).  Returns
+    ``(accQL, accC, num_chunks)``."""
+    if start % kernel_ops.GRAM_BLOCK:
+        raise ValueError(
+            f"range start {start} is not a multiple of the Gram block "
+            f"({kernel_ops.GRAM_BLOCK}); the blocked fp32 reduction would "
+            "not match a one-shot pass bit for bit"
+        )
+    n = source.num_features
+
+    def stage(lo: int):
+        hi = min(lo + chunk_rows, stop)
+        rows = np.zeros((chunk_rows, n), np_dtype)
+        mask = np.zeros((chunk_rows,), np_dtype)
+        block = np.asarray(source.read(lo, hi))
+        if perm is not None:
+            block = block[:, perm]
+        rows[: hi - lo] = block
+        mask[: hi - lo] = 1.0
+        return jnp.asarray(rows), jnp.asarray(mask)
+
+    accQL, accC = acc
+    num_chunks = 0
+    steps = range(start, stop, chunk_rows)
+    for rows_d, mask_d in prefetch_map(stage, steps, enabled=prefetch):
+        accQL, accC = acc_fn(accQL, accC, rows_d, mask_d, parents_d, vars_d)
+        num_chunks += 1
+    return accQL, accC, num_chunks
+
+
 def _streaming_stats_entry(
     config: OAVIConfig, mesh: Optional[Mesh], data_axes: Tuple[str, ...]
 ):
@@ -240,6 +335,7 @@ def fit(
     chunk_rows: int = DEFAULT_CHUNK_ROWS,
     mesh: Optional[Mesh] = None,
     data_axes: Sequence[str] = ("data",),
+    prefetch: bool = True,
 ) -> OAVIModel:
     """Run OAVI over a chunked :class:`~repro.streaming.source.DataSource`
     (or array-like) without ever materializing the evaluation matrix.
@@ -250,6 +346,11 @@ def fit(
     :func:`repro.core.distributed.fit` on the same ``mesh`` when sharded).
     ``source`` must yield data in ``[0, 1]^n`` (compose with
     :class:`~repro.streaming.source.ScaledSource`).
+
+    ``prefetch`` double-buffers the host->device pipeline: chunk ``i+1`` is
+    read, permuted, padded and transferred by a worker thread while chunk
+    ``i``'s jitted accumulator runs (:func:`prefetch_map`).  The fold order
+    is unchanged, so the result is bit-identical with it on or off.
     """
     t_start = time.perf_counter()
     source = as_source(source)
@@ -380,14 +481,18 @@ def fit(
                 jnp.zeros((shards, Kcap, Kcap), jnp.float32), acc_sharding
             )
 
-        for i in range(steps_per_pass):
+        def stage(i: int):
             rows, mask = load_step(i)
             if mesh is None:
-                rows_d = jnp.asarray(rows)
-                mask_d = jnp.asarray(mask)
-            else:
-                rows_d = jax.device_put(rows, chunk_sharding)
-                mask_d = jax.device_put(mask, mask_sharding)
+                return jnp.asarray(rows), jnp.asarray(mask)
+            return (
+                jax.device_put(rows, chunk_sharding),
+                jax.device_put(mask, mask_sharding),
+            )
+
+        for rows_d, mask_d in prefetch_map(
+            stage, range(steps_per_pass), enabled=prefetch
+        ):
             accQL, accC = acc_fn(accQL, accC, rows_d, mask_d, parents_d, vars_d)
         stats["streaming"]["num_chunks"] += steps_per_pass
         stats["streaming"]["passes"] += 1

@@ -26,6 +26,13 @@ SHARD_FORMAT = "repro.shards.v1"
 SHARD_META = "meta.json"
 
 
+def _npy_rows(fname: str) -> int:
+    """Row count of a ``.npy`` file from its header alone (mmap: no data
+    is actually read)."""
+    arr = np.load(fname, mmap_mode="r")
+    return int(arr.shape[0]) if arr.ndim else 0
+
+
 @runtime_checkable
 class DataSource(Protocol):
     """Random-access row reads; the whole streaming subsystem's data contract."""
@@ -98,15 +105,28 @@ class ArraySource:
 class ShardDirSource:
     """A directory of ``shard_%05d.npy`` files + ``meta.json``, opened with
     ``mmap_mode='r'`` so reads touch only the requested rows — the on-disk
-    layout written by :func:`repro.data.synthetic.write_shards`."""
+    layout written by :func:`repro.data.synthetic.write_shards`.
+
+    The directory may *grow* while the source is open
+    (``write_shards(..., append=True)`` adds shard files and then atomically
+    rewrites ``meta.json``): :meth:`refresh` re-reads the metadata and picks
+    up the new rows in place, validating that every shard file the new
+    metadata promises actually exists with the advertised row count — a
+    partial write (shards without a committed meta, or a meta naming missing
+    shards) fails loudly instead of serving truncated data.
+    """
 
     def __init__(self, path: str):
         self.path = path
-        with open(os.path.join(path, SHARD_META)) as f:
+        self._mmaps: Dict[int, np.ndarray] = {}
+        self._load_meta(validate=True)
+
+    def _load_meta(self, validate: bool) -> None:
+        with open(os.path.join(self.path, SHARD_META)) as f:
             meta = json.load(f)
         if meta.get("format") != SHARD_FORMAT:
             raise ValueError(
-                f"{path!r} is not a {SHARD_FORMAT} shard directory "
+                f"{self.path!r} is not a {SHARD_FORMAT} shard directory "
                 f"(format={meta.get('format')!r})"
             )
         self.meta: Dict = meta
@@ -114,7 +134,63 @@ class ShardDirSource:
         self.num_features = int(meta["num_features"])
         self.shard_rows = int(meta["shard_rows"])
         self.num_shards = int(meta["num_shards"])
-        self._mmaps: Dict[int, np.ndarray] = {}
+        if validate:
+            self._validate_meta()
+
+    def _validate_meta(self) -> None:
+        """meta.json row-count consistency: every promised shard exists and
+        the per-shard row counts add up to ``num_rows`` (all shards full
+        except possibly the last)."""
+        expect_shards = max(
+            (self.num_rows + self.shard_rows - 1) // self.shard_rows, 1
+        )
+        if self.num_shards != expect_shards:
+            raise ValueError(
+                f"{self.path!r}: meta.json is inconsistent — num_shards="
+                f"{self.num_shards} but num_rows={self.num_rows} at "
+                f"shard_rows={self.shard_rows} needs {expect_shards} shards "
+                "(partial write?)"
+            )
+        total = 0
+        for idx in range(self.num_shards):
+            fname = os.path.join(self.path, f"shard_{idx:05d}.npy")
+            if not os.path.exists(fname):
+                raise ValueError(
+                    f"{self.path!r}: meta.json promises shard_{idx:05d}.npy "
+                    "but the file is missing (partial write?)"
+                )
+            rows = _npy_rows(fname)
+            expect = min(self.shard_rows, self.num_rows - idx * self.shard_rows)
+            if rows < expect:
+                raise ValueError(
+                    f"{self.path!r}: shard_{idx:05d}.npy has {rows} rows, "
+                    f"meta.json needs {expect} (partial write?)"
+                )
+            total += min(rows, expect)
+        if total != self.num_rows:
+            raise ValueError(
+                f"{self.path!r}: shard files cover {total} rows, meta.json "
+                f"says num_rows={self.num_rows} (partial write?)"
+            )
+
+    def refresh(self) -> int:
+        """Re-read ``meta.json`` and pick up rows appended since the source
+        was opened (no re-open needed: existing shard mmaps stay valid, new
+        ``shard_%05d.npy`` files are mapped on first read).  Returns the
+        number of new rows.  A shard that grew in place (the previously-last,
+        partial shard rewritten fuller) is remapped."""
+        old_rows, old_shards = self.num_rows, self.num_shards
+        self._load_meta(validate=True)
+        if self.num_rows < old_rows:
+            raise ValueError(
+                f"{self.path!r}: refresh() saw num_rows shrink "
+                f"{old_rows} -> {self.num_rows}; shard dirs may only grow"
+            )
+        # the old trailing shard may have been rewritten with more rows
+        # (append into a partial shard): drop its cached mmap
+        if self.num_rows > old_rows and old_shards >= 1:
+            self._mmaps.pop(old_shards - 1, None)
+        return self.num_rows - old_rows
 
     def _shard(self, idx: int) -> np.ndarray:
         mm = self._mmaps.get(idx)
@@ -205,8 +281,16 @@ class ScaledSource:
             )
         self.source = as_source(source)
         self.scaler = scaler
-        self.num_rows = self.source.num_rows
-        self.num_features = self.source.num_features
+
+    # delegate, don't cache: a growing wrapped source (ShardDirSource after
+    # refresh()) must propagate its new row count through the wrapper
+    @property
+    def num_rows(self) -> int:
+        return self.source.num_rows
+
+    @property
+    def num_features(self) -> int:
+        return self.source.num_features
 
     def read(self, start: int, stop: int) -> np.ndarray:
         return self.scaler.transform(self.source.read(start, stop))

@@ -1,0 +1,565 @@
+"""Incremental OAVI (repro.online) + the continuous serving loop.
+
+The load-bearing properties:
+
+* **fold commutativity**: ``update(update(S, a), b)`` is bit-identical to
+  ``update(S, a ++ b)`` and to a one-shot streaming fit on the concatenated
+  data — for fast and oracle engines, across chunk sizes, at arbitrary
+  (non-block-aligned) increment sizes;
+* **zero warm recompiles**: an update after any warm streaming fit of the
+  same config compiles nothing (shared accumulator/stats-step caches);
+* **border growth**: new data that flips an accept/reject decision replays
+  only the affected degrees, and the result still matches the one-shot fit;
+* FitState survives a save -> load round trip mid-sequence;
+* shard directories grow in place (append + refresh) and partial writes
+  fail loudly instead of serving truncated data;
+* host->device prefetch changes nothing but the wall clock;
+* the serving registry's hot-swap is atomic under reader/writer churn, and
+  ``launch/continuous_vi.py`` serves bit-correct responses while updates
+  are in flight.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro import api, streaming
+from repro.core.oavi import OAVIConfig
+from repro.data.synthetic import planted_source, random_cube, write_shards
+from repro import online
+from repro.online import DriftConfig, DriftMonitor, FitState
+from repro.streaming import ArraySource, ScaledSource, ShardDirSource
+from repro.streaming.fit import prefetch_map
+from repro.streaming.scaler import StreamingMinMaxScaler
+
+M_BASE = 2500
+M_MID = 3211  # deliberately NOT a multiple of GRAM_BLOCK or chunk_rows
+M_FULL = 3900
+
+
+def _assert_models_bit_equal(a, b):
+    assert a.book.terms == b.book.terms
+    assert [g.term for g in a.generators] == [g.term for g in b.generators]
+    for ga, gb in zip(a.generators, b.generators):
+        assert np.array_equal(ga.coeffs, gb.coeffs), ga.term
+        assert ga.mse == gb.mse
+
+
+@pytest.fixture(scope="module")
+def stream():
+    """Prefix-consistent planted stream: ``planted_source`` is
+    tile-deterministic, so the m-row source is literally the first m rows of
+    the larger one — exactly the grown-source contract update() assumes.
+    Seed 3's per-feature variance ranking is stable from 2500 to 3900 rows,
+    so growth does not flip the Pearson order (fold-count assertions depend
+    on that; bit-identity holds either way)."""
+    scaler = StreamingMinMaxScaler(dtype="float32").fit_source(
+        planted_source(M_FULL, n=3, seed=3), 1024
+    )
+    view = lambda m: ScaledSource(planted_source(m, n=3, seed=3), scaler)  # noqa: E731
+    return view, scaler
+
+
+CFG = OAVIConfig(psi=0.005, engine="fast", ordering="pearson", cap_terms=64)
+
+
+# ---------------------------------------------------------------------------
+# fold commutativity / bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk_rows", [512, 1024, 2048])
+def test_update_bit_identical_to_one_shot_fast(stream, chunk_rows):
+    view, _ = stream
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=chunk_rows)
+    res = online.update(model0, state0, view(M_FULL))
+    ref = streaming.fit(view(M_FULL), CFG, chunk_rows=chunk_rows)
+    _assert_models_bit_equal(res.model, ref)
+    assert np.array_equal(res.model.feature_perm, ref.feature_perm)
+
+
+def test_update_chain_commutes_with_one_hop(stream):
+    """update(update(S, a), b) == update(S, a ++ b) == one-shot, at
+    non-aligned increment boundaries."""
+    view, _ = stream
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    hop1 = online.update(model0, state0, view(M_MID))
+    chained = online.update(hop1.model, hop1.state, view(M_FULL))
+    one_hop = online.update(model0, state0, view(M_FULL))
+    ref = streaming.fit(view(M_FULL), CFG, chunk_rows=512)
+    _assert_models_bit_equal(chained.model, ref)
+    _assert_models_bit_equal(one_hop.model, ref)
+    # the two paths also agree on the *state* they hand to the next update
+    for ra, rb in zip(chained.state.records, one_hop.state.records):
+        assert (ra.degree, ra.ell, ra.K, ra.Lcap, ra.Kcap) == (
+            rb.degree, rb.ell, rb.K, rb.Lcap, rb.Kcap)
+        assert np.array_equal(ra.accQL, rb.accQL)
+        assert np.array_equal(ra.accC, rb.accC)
+
+
+def test_update_bit_identical_oracle_engine(stream):
+    view, _ = stream
+    cfg = OAVIConfig(psi=0.005, engine="oracle", ihb=True, ordering="none",
+                     cap_terms=64)
+    model0, state0 = online.fit(view(M_BASE), cfg, chunk_rows=512)
+    res = online.update(model0, state0, view(M_FULL))
+    ref = streaming.fit(view(M_FULL), cfg, chunk_rows=512)
+    _assert_models_bit_equal(res.model, ref)
+
+
+def test_update_zero_recompiles_warm(stream):
+    view, _ = stream
+    streaming.fit(view(M_FULL), CFG, chunk_rows=512)  # warm the caches
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    assert model0.stats["recompiles"] == 0
+    res = online.update(model0, state0, view(M_FULL))
+    assert res.stats["recompiles"] == 0
+    assert res.stats["folded_degrees"] > 0
+
+
+def test_update_folds_unchanged_degrees(stream):
+    """Planted data growing with more of the same: the decision history is
+    stable, so every degree folds and none replays."""
+    view, _ = stream
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    res = online.update(model0, state0, view(M_FULL))
+    assert res.stats["replayed_degrees"] == []
+    assert res.stats["folded_degrees"] == len(state0.records)
+    assert res.stats["refit_reason"] is None
+    # the fold only touched new rows: chunks ~ new_rows/chunk_rows per degree,
+    # nowhere near a full m-row pass per degree
+    full_chunks = -(-M_FULL // 512) * len(res.state.records)
+    assert res.stats["chunks"] < full_chunks
+
+
+def test_update_replays_on_border_change():
+    """New data that flips an accept/reject decision (x0 vanished on the base
+    rows, varies on the appended ones) replays only the degrees past the
+    flip — earlier degrees keep folding — and the result still matches the
+    one-shot fit on the concatenated data."""
+    cfg = OAVIConfig(psi=0.005, engine="fast", ordering="none", cap_terms=64)
+    rng = np.random.default_rng(0)
+    base = rng.uniform(0, 1, (2560, 3)).astype(np.float32)
+    base[:, 0] = 0.5 + rng.normal(0, 0.01, 2560).astype(np.float32)
+    grown = np.concatenate(
+        [base, rng.uniform(0, 1, (1280, 3)).astype(np.float32)], axis=0
+    )
+    model0, state0 = online.fit(ArraySource(base), cfg, chunk_rows=512)
+    res = online.update(model0, state0, ArraySource(grown))
+    ref = streaming.fit(ArraySource(grown), cfg, chunk_rows=512)
+    _assert_models_bit_equal(res.model, ref)
+    assert res.stats["replayed_degrees"], "expected the new data to flip a degree"
+    assert res.stats["folded_degrees"] > 0  # degrees before the flip still fold
+    assert res.stats["refit_reason"] is None
+
+
+def test_update_perm_change_drops_records(stream):
+    """A feature-order flip relabels the book's columns: no record survives,
+    the update degrades to a full replay — and still matches one-shot."""
+    view, _ = stream
+    base = np.asarray(view(2560).read(0, 2560))
+    # appended rows reverse the per-feature variance ranking
+    extra = np.zeros((1280, 3), np.float32)
+    extra[:, 0] = 0.5
+    extra[:, 2] = np.linspace(0, 1, 1280, dtype=np.float32)
+    grown = np.concatenate([base, extra], axis=0)
+    model0, state0 = online.fit(ArraySource(base), CFG, chunk_rows=512)
+    res = online.update(model0, state0, ArraySource(grown))
+    ref = streaming.fit(ArraySource(grown), CFG, chunk_rows=512)
+    if res.stats["refit_reason"] == "feature_order_changed":
+        assert res.stats["folded_degrees"] == 0
+    _assert_models_bit_equal(res.model, ref)
+
+
+# ---------------------------------------------------------------------------
+# guards
+# ---------------------------------------------------------------------------
+
+
+def test_update_rejects_shrunk_source(stream):
+    view, _ = stream
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    with pytest.raises(ValueError, match="shrank"):
+        online.update(model0, state0, view(M_BASE - 512))
+
+
+def test_update_rejects_changed_prefix(stream):
+    view, _ = stream
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    tampered = np.asarray(view(M_FULL).read(0, M_FULL)).copy()
+    tampered[0, 0] += 0.25  # a row the state already accumulated
+    with pytest.raises(ValueError, match="prefix mismatch"):
+        online.update(model0, state0, ArraySource(tampered))
+
+
+def test_update_rejects_foreign_model(stream):
+    view, _ = stream
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    other, _ = online.fit(
+        view(M_BASE), OAVIConfig(psi=0.5, engine="fast", cap_terms=64),
+        chunk_rows=512,
+    )
+    if other.book.terms != model0.book.terms:
+        with pytest.raises(ValueError, match="does not belong"):
+            online.update(other, state0, view(M_FULL))
+
+
+def test_update_rejects_feature_mismatch(stream):
+    view, _ = stream
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    with pytest.raises(ValueError, match="features"):
+        online.update(model0, state0, ArraySource(np.zeros((4000, 5), np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# FitState serialization
+# ---------------------------------------------------------------------------
+
+
+def test_fit_state_save_load_update_round_trip(stream, tmp_path):
+    view, _ = stream
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    state0.save(str(tmp_path / "state"))
+    loaded = FitState.load(str(tmp_path / "state"))
+    assert loaded.num_rows == state0.num_rows
+    assert loaded.aligned_rows == state0.aligned_rows
+    assert loaded.config == state0.config
+    assert np.array_equal(loaded.book_parents, state0.book_parents)
+    assert np.array_equal(loaded.moments[0], state0.moments[0])
+    assert loaded.moment_rows == state0.moment_rows
+    for ra, rb in zip(loaded.records, state0.records):
+        assert np.array_equal(ra.accQL, rb.accQL)
+        assert np.array_equal(ra.accC, rb.accC)
+    res = online.update(model0, loaded, view(M_FULL))
+    ref = streaming.fit(view(M_FULL), CFG, chunk_rows=512)
+    _assert_models_bit_equal(res.model, ref)
+
+
+def test_fit_state_format_tag_enforced(stream, tmp_path):
+    view, _ = stream
+    _, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    state0.save(str(tmp_path / "state"))
+    with pytest.raises(ValueError, match="format"):
+        api.load_state_dict(str(tmp_path / "state"), "repro.some_other_format.v1")
+
+
+# ---------------------------------------------------------------------------
+# api / pipeline wiring
+# ---------------------------------------------------------------------------
+
+
+def test_api_capture_state_and_update(stream):
+    view, _ = stream
+    model = api.fit(view(M_BASE), "oavi:fast", psi=0.005, chunk_rows=512,
+                    capture_state=True, ordering="pearson", cap_terms=64)
+    assert isinstance(model.fit_state, FitState)
+    assert model.stats["api"]["online"] is True
+    res = api.update(model, model.fit_state, view(M_FULL))
+    ref = streaming.fit(
+        view(M_FULL),
+        OAVIConfig(psi=0.005, engine="fast", ordering="pearson", cap_terms=64),
+        chunk_rows=512,
+    )
+    _assert_models_bit_equal(res.model, ref)
+    assert isinstance(res.model.fit_state, FitState)
+    assert res.model.stats["api"]["online"] is True
+
+
+def test_api_capture_state_requires_streaming():
+    X = random_cube(512, 3, seed=0)
+    with pytest.raises(ValueError, match="capture_state"):
+        api.fit(X, "oavi:fast", capture_state=True)
+
+
+def test_pipeline_capture_fit_state():
+    from repro.core.pipeline import PipelineConfig, VanishingIdealClassifier
+
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (1200, 3)).astype(np.float32)
+    y = (X[:, 0] > 0.5).astype(int)
+    clf = VanishingIdealClassifier(PipelineConfig(
+        method="oavi:fast", psi=0.01, chunk_rows=512, capture_fit_state=True,
+        oavi_kw={"cap_terms": 64, "max_degree": 3},
+    ))
+    clf.fit(X, y)
+    assert len(clf.fit_states) == len(clf.models) == 2
+    for c, m, s in zip(clf.classes_, clf.models, clf.fit_states):
+        assert s.num_rows == int(np.sum(y == c))
+        assert np.array_equal(np.asarray(m.book.parents, np.int32), s.book_parents)
+
+
+def test_pipeline_capture_fit_state_requires_chunk_rows():
+    from repro.core.pipeline import PipelineConfig, VanishingIdealClassifier
+
+    clf = VanishingIdealClassifier(PipelineConfig(capture_fit_state=True))
+    with pytest.raises(ValueError, match="chunk_rows"):
+        clf.fit(np.zeros((64, 3), np.float32), np.zeros(64, int))
+
+
+# ---------------------------------------------------------------------------
+# drift monitor
+# ---------------------------------------------------------------------------
+
+
+def test_drift_quiet_on_same_distribution(stream):
+    view, _ = stream
+    _, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    mon = DriftMonitor.from_fit_state(state0)
+    mon.observe(np.asarray(view(M_FULL).read(M_BASE, M_FULL)))
+    trig, sig = mon.should_refit()
+    assert not trig and sig["triggered"] == []
+
+
+def test_drift_triggers_on_mean_shift(stream):
+    view, _ = stream
+    _, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    mon = DriftMonitor.from_fit_state(state0)
+    shifted = np.asarray(view(M_FULL).read(M_BASE, M_FULL)) * 0.9 + 0.4
+    mon.observe(shifted)
+    trig, sig = mon.should_refit()
+    assert trig and "mean_shift" in sig["triggered"]
+    assert sig["oob_frac"] > 0  # shifted values escape the frozen [0,1] box
+
+
+def test_drift_min_rows_gate(stream):
+    view, _ = stream
+    _, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    mon = DriftMonitor.from_fit_state(state0, DriftConfig(min_rows=512))
+    mon.observe(np.full((100, 3), 5.0, np.float32))  # wildly off, but tiny
+    assert not mon.should_refit()[0]
+    mon.observe(np.full((412, 3), 5.0, np.float32))
+    assert mon.should_refit()[0]
+
+
+def test_drift_rebase_absorbs_window(stream):
+    view, _ = stream
+    _, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    mon = DriftMonitor.from_fit_state(state0)
+    mon.observe(np.asarray(view(M_FULL).read(M_BASE, M_FULL)))
+    assert mon.window_rows == M_FULL - M_BASE
+    mon.rebase()
+    assert mon.window_rows == 0
+    assert mon.signals()["mean_shift"] == 0.0  # empty window: quiet
+
+
+def test_drift_requires_moments():
+    cfg = OAVIConfig(psi=0.005, engine="fast", ordering="none", cap_terms=64)
+    _, state = online.fit(
+        ArraySource(random_cube(512, 3, seed=1)), cfg, chunk_rows=512
+    )
+    with pytest.raises(ValueError, match="moment"):
+        DriftMonitor.from_fit_state(state)
+
+
+# ---------------------------------------------------------------------------
+# shard growth (append / refresh / partial writes)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_append_refresh_round_trip(tmp_path):
+    d = str(tmp_path / "shards")
+    a = random_cube(1024, 3, seed=0)
+    b = random_cube(512, 3, seed=1)
+    write_shards(d, a, shard_rows=512)
+    src = ShardDirSource(d)
+    assert src.num_rows == 1024
+    write_shards(d, b, append=True)
+    assert src.num_rows == 1024  # invisible until refresh: reads stay stable
+    assert src.refresh() == 512
+    assert src.num_rows == 1536
+    assert np.array_equal(src.read(0, 1536), np.concatenate([a, b]))
+    assert src.refresh() == 0
+
+
+def test_shard_append_rejects_partial_trailing_shard(tmp_path):
+    d = str(tmp_path / "shards")
+    write_shards(d, random_cube(700, 3, seed=0), shard_rows=512)  # 700 % 512 != 0
+    with pytest.raises(ValueError, match="multiple of shard_rows"):
+        write_shards(d, random_cube(512, 3, seed=1), append=True)
+
+
+def test_shard_append_rejects_schema_mismatch(tmp_path):
+    d = str(tmp_path / "shards")
+    write_shards(d, random_cube(512, 3, seed=0), shard_rows=512)
+    with pytest.raises(ValueError, match="append mismatch"):
+        write_shards(d, random_cube(512, 4, seed=1), append=True)
+
+
+def test_shard_partial_write_detected(tmp_path):
+    import json
+    import os
+
+    d = str(tmp_path / "shards")
+    write_shards(d, random_cube(1024, 3, seed=0), shard_rows=512)
+    # meta promising a shard that never landed = torn write
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    meta["num_rows"], meta["num_shards"] = 2048, 4
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="partial write"):
+        ShardDirSource(d)
+
+
+def test_shard_refresh_rejects_shrink(tmp_path):
+    import json
+    import os
+
+    d = str(tmp_path / "shards")
+    write_shards(d, random_cube(1024, 3, seed=0), shard_rows=512)
+    src = ShardDirSource(d)
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    meta["num_rows"], meta["num_shards"] = 512, 1
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="shrink"):
+        src.refresh()
+
+
+def test_online_update_over_growing_shard_dir(tmp_path):
+    """The integration the continuous loop runs on: append, refresh, update
+    — bit-identical to the one-shot fit on everything."""
+    d = str(tmp_path / "shards")
+    base = np.asarray(planted_source(2560, n=3, seed=2).read(0, 2560))
+    more = np.asarray(planted_source(3584, n=3, seed=2).read(2560, 3584))
+    write_shards(d, base, shard_rows=512)
+    raw = ShardDirSource(d)
+    scaler = StreamingMinMaxScaler(dtype="float32").fit(base)
+    src = ScaledSource(raw, scaler)
+    model0, state0 = online.fit(src, CFG, chunk_rows=512)
+    write_shards(d, more, append=True)
+    assert raw.refresh() == 1024
+    res = online.update(model0, state0, src)
+    ref = streaming.fit(
+        ScaledSource(ArraySource(np.concatenate([base, more])), scaler),
+        CFG, chunk_rows=512,
+    )
+    _assert_models_bit_equal(res.model, ref)
+
+
+# ---------------------------------------------------------------------------
+# prefetch
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_map_preserves_order_and_laziness():
+    staged = []
+    out = list(prefetch_map(lambda i: staged.append(i) or i * i, range(6)))
+    assert out == [0, 1, 4, 9, 16, 25]
+    assert staged == list(range(6))
+    assert list(prefetch_map(lambda i: i, [])) == []
+    assert list(prefetch_map(lambda i: i, [7], enabled=False)) == [7]
+
+
+def test_streaming_fit_prefetch_bit_identical(stream):
+    view, _ = stream
+    on = streaming.fit(view(M_BASE), CFG, chunk_rows=512, prefetch=True)
+    off = streaming.fit(view(M_BASE), CFG, chunk_rows=512, prefetch=False)
+    _assert_models_bit_equal(on, off)
+
+
+def test_online_update_prefetch_bit_identical(stream):
+    view, _ = stream
+    model0, state0 = online.fit(view(M_BASE), CFG, chunk_rows=512)
+    a = online.update(model0, state0, view(M_FULL), prefetch=True)
+    b = online.update(model0, state0, view(M_FULL), prefetch=False)
+    _assert_models_bit_equal(a.model, b.model)
+
+
+# ---------------------------------------------------------------------------
+# registry hot-swap atomicity
+# ---------------------------------------------------------------------------
+
+
+def test_registry_hot_swap_atomic_under_churn():
+    """Readers hammering the registry during register/activate/remove churn
+    never observe a half-registered model: every resolved entry is fully
+    warmed, was explicitly activated, and transforms to exactly its own
+    version's expected output."""
+    from repro.serving import EngineConfig, ModelRegistry
+
+    X = random_cube(600, 3, seed=0)
+    model = api.fit(X, "oavi:fast", psi=0.01, backend="local", cap_terms=64)
+    probe = X[:40]
+    expected = {}
+
+    reg = ModelRegistry(engine_config=EngineConfig(min_bucket=32, max_bucket=128))
+    first = reg.register("vi", model, activate=False)
+    expected[first.version] = first.transform(probe, scaled=True)
+    reg.activate("vi", first.version)
+
+    stop = threading.Event()
+    failures = []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                entry = reg.get("vi")  # active version, whatever it is now
+            except KeyError as e:  # an active pointer must always exist here
+                failures.append(e)
+                return
+            if not entry.ever_activated or entry.engine is None:
+                failures.append(AssertionError(
+                    f"resolved un-activated/unwarmed v{entry.version}"))
+                return
+            out = entry.transform(probe, scaled=True)
+            if not np.array_equal(out, expected[entry.version]):
+                failures.append(AssertionError(
+                    f"v{entry.version} served foreign bits"))
+                return
+
+    readers = [threading.Thread(target=reader) for _ in range(4)]
+    for t in readers:
+        t.start()
+    try:
+        for _ in range(25):  # writer: stage -> check -> swap -> retire old
+            staged = reg.register("vi", model, activate=False)
+            expected[staged.version] = staged.transform(probe, scaled=True)
+            assert reg.active_version("vi") != staged.version  # staging is dark
+            reg.activate("vi", staged.version)
+            for v in reg.versions("vi")[:-1]:
+                reg.remove("vi", v)
+    finally:
+        stop.set()
+        for t in readers:
+            t.join()
+    assert not failures, failures[0]
+    assert reg.versions("vi") == (26,)
+
+
+# ---------------------------------------------------------------------------
+# the loop, end to end (in process)
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_vi_serves_bit_correct_during_refit(tmp_path):
+    from repro.launch import continuous_vi
+
+    report = continuous_vi.main([
+        "--base-rows", "2048", "--increments", "3", "--increment-rows", "512",
+        "--shard-rows", "512", "--chunk-rows", "512", "--min-update-rows",
+        "1024", "--serve-threads", "2", "--workdir", str(tmp_path),
+    ])
+    assert report["serve"]["mismatches"] == 0
+    assert report["serve"]["requests"] > 0
+    assert report["warm_recompiles"] == 0
+    assert len(report["updates"]) >= 1
+    assert report["versions_activated"] == 1 + len(report["updates"])
+    assert len(report["staleness_s"]) == 3  # every arrival reached serving
+    assert all(s > 0 for s in report["staleness_s"])
+    assert report["serve"]["during_update_requests"] > 0  # true overlap
+
+
+def test_continuous_vi_drift_gate_triggers(tmp_path):
+    from repro.launch import continuous_vi
+
+    report = continuous_vi.main([
+        "--base-rows", "2048", "--increments", "2", "--increment-rows", "512",
+        "--shard-rows", "512", "--chunk-rows", "512", "--min-update-rows",
+        "99999", "--drift-at-increment", "0", "--serve-threads", "1",
+        "--workdir", str(tmp_path),
+    ])
+    assert any(u["drift"]["triggered"] for u in report["updates"])
+    assert report["serve"]["mismatches"] == 0
