@@ -3,7 +3,8 @@
 #   make test             tier-1 test suite (the CI / verify command)
 #   make test-api         just the unified-API tests (fast)
 #   make lint             dead-import lint (pyflakes when installed, AST fallback)
-#   make ci               lint + tier-1 tests + bench-smoke artifact checks
+#   make ci               lint + tier-1 tests + chaos-smoke + bench-smoke
+#                         artifact checks
 #                         (what .github/workflows/ci.yml runs)
 #   make bench-smoke      smoke benchmark subset (fig4_scaling, transform_fused,
 #                         fit_fused, serve_engine, multiclass_batched at quick
@@ -16,6 +17,11 @@
 #   make bench-streaming  out-of-core streaming fit benchmark (BENCH_streaming.json)
 #   make bench-online     incremental update + continuous serving loop benchmark
 #                         (BENCH_online.json)
+#   make bench-resilience integrity overhead + crash-recovery benchmark
+#                         (BENCH_resilience.json)
+#   make chaos-smoke      fault-injection harness (repro.launch.chaos_vi --fast):
+#                         kill/resume, corrupt state, degraded activation,
+#                         transient faults, poison isolation, torn shards
 #   make serve-smoke      in-process CPU run of the serving CLI (repro.launch.serve_vi)
 #   make continuous-smoke in-process CPU run of the ingest->refit->activate loop
 #                         (repro.launch.continuous_vi)
@@ -27,8 +33,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-api lint ci bench bench-smoke bench-transform bench-fit \
-        bench-serve bench-multiclass bench-streaming bench-online serve-smoke \
-        continuous-smoke clean dev-deps
+        bench-serve bench-multiclass bench-streaming bench-online \
+        bench-resilience chaos-smoke serve-smoke continuous-smoke clean dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -39,11 +45,11 @@ test-api:
 lint:
 	$(PYTHON) tools/lint.py src/repro benchmarks tools
 
-ci: lint test bench-smoke
+ci: lint test chaos-smoke bench-smoke
 
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched,streaming_oavi,online_oavi
-	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve multiclass streaming online
+	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched,streaming_oavi,online_oavi,resilience_chaos
+	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve multiclass streaming online resilience
 
 bench-transform:
 	$(PYTHON) -m benchmarks.run --only transform_fused
@@ -62,6 +68,12 @@ bench-streaming:
 
 bench-online:
 	$(PYTHON) -m benchmarks.run --only online_oavi
+
+bench-resilience:
+	$(PYTHON) -m benchmarks.run --only resilience_chaos
+
+chaos-smoke:
+	$(PYTHON) -m repro.launch.chaos_vi --fast
 
 continuous-smoke:
 	$(PYTHON) -m repro.launch.continuous_vi --base-rows 4096 --increments 4 \

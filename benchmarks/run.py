@@ -21,6 +21,7 @@ from . import (
     bench_online,
     bench_ordering,
     bench_performance,
+    bench_resilience,
     bench_scaling,
     bench_serve,
     bench_solvers,
@@ -44,6 +45,7 @@ BENCHES = {
     "multiclass_batched": bench_multiclass.run,
     "streaming_oavi": bench_streaming.run,
     "online_oavi": bench_online.run,
+    "resilience_chaos": bench_resilience.run,
     "roofline": roofline.run,
 }
 

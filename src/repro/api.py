@@ -31,6 +31,8 @@ One entry point over every algorithm family in the repo:
 from __future__ import annotations
 
 import dataclasses
+import json
+import logging
 from typing import (
     Any,
     Callable,
@@ -76,6 +78,9 @@ from .core.oavi import OAVIModel, apply_wavefronts, wavefront_schedule
 from .core.oracles import OracleConfig
 from .core.transform import feature_transform as _legacy_feature_transform
 from .core.vca import VCAModel
+from .resilience.integrity import IntegrityError
+
+_log = logging.getLogger("repro.api")
 
 # ``backend="auto"``: shard only when the sample count amortizes the psum +
 # shard_map overhead (the collectives are m-independent, the fixed cost isn't).
@@ -662,33 +667,63 @@ def _json_safe(obj):
     return obj
 
 
-def save_state_dict(path: str, arrays: Dict, meta: Dict, fmt: str) -> str:
+def save_state_dict(path: str, arrays: Dict, meta: Dict, fmt: str, step: int = 0) -> str:
     """Write one ``(arrays, meta)`` state dict as a committed, format-tagged
     checkpoint — the single save-side protocol shared by :func:`save` and
     :meth:`VanishingIdealClassifier.save`.  Arrays land as manifest-tracked
     leaves, ``meta`` (made JSON-safe) in the manifest, and the COMMITTED
-    marker makes the write crash-safe.  Returns the committed directory."""
+    marker makes the write crash-safe.  Returns the committed directory.
+
+    ``step`` versions the save inside ``path``: a caller that checkpoints a
+    lineage (e.g. the continuous controller's per-version ``FitState``)
+    bumps it so :func:`load_state_dict` has older committed steps to fall
+    back to when the head is corrupted after commit."""
     metadata = {
         "format": fmt,
         "kind": meta.get("kind"),
         "meta": _json_safe(meta),
         "array_keys": sorted(arrays),
     }
-    return ckpt_store.save(path, step=0, tree=dict(arrays), metadata=metadata)
+    return ckpt_store.save(path, step=step, tree=dict(arrays), metadata=metadata)
 
 
 def load_state_dict(path: str, fmt: str) -> Tuple[Dict[str, np.ndarray], Dict]:
-    """Load the newest committed state dict at ``path``, checking its format
-    tag — the restore-side counterpart of :func:`save_state_dict`."""
-    metadata, step = ckpt_store.read_metadata(path)
-    if metadata.get("format") != fmt:
-        raise ValueError(
-            f"{path!r} is not a {fmt} checkpoint "
-            f"(format={metadata.get('format')!r})"
-        )
-    like = {k: np.zeros(()) for k in metadata["array_keys"]}
-    arrays, metadata = ckpt_store.restore(path, step, like)
-    return arrays, metadata
+    """Load the newest *verifiable* committed state dict at ``path``,
+    checking its format tag — the restore-side counterpart of
+    :func:`save_state_dict`.
+
+    Every leaf is checksum-verified before deserializing (manifest v2); a
+    corrupt head step falls back to the newest older committed step that
+    verifies, so post-commit bit rot costs freshness, not availability.
+    When every committed step is damaged, the head's
+    :class:`~repro.resilience.integrity.IntegrityError` (naming the bad
+    file) propagates."""
+    steps = ckpt_store.committed_steps(path)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoint under {path!r}")
+    head_err: Optional[IntegrityError] = None
+    for step in reversed(steps):
+        try:
+            metadata, _ = ckpt_store.read_metadata(path, step)
+            if metadata.get("format") != fmt:
+                raise ValueError(
+                    f"{path!r} is not a {fmt} checkpoint "
+                    f"(format={metadata.get('format')!r})"
+                )
+            like = {k: np.zeros(()) for k in metadata["array_keys"]}
+            arrays, metadata = ckpt_store.restore(path, step, like)
+        except (IntegrityError, json.JSONDecodeError) as e:
+            _log.warning("checkpoint step %d at %r failed verification: %s", step, path, e)
+            if head_err is None:
+                head_err = e if isinstance(e, IntegrityError) else IntegrityError(str(e))
+            continue
+        if step != steps[-1]:
+            _log.warning(
+                "loaded step %d from %r (newest committed step %d is corrupt)",
+                step, path, steps[-1],
+            )
+        return arrays, metadata
+    raise head_err
 
 
 def save(model: VanishingIdealModel, path: str) -> str:

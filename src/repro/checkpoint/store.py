@@ -3,7 +3,7 @@
 Layout (one directory per step)::
 
     <dir>/step_000123/
-        manifest.json       # tree structure, shapes, dtypes, user metadata
+        manifest.json       # tree structure, shapes, dtypes, checksums, metadata
         leaf_00000.npy ...  # one file per pytree leaf (host-gathered)
         COMMITTED           # written last — a checkpoint without it is junk
 
@@ -12,6 +12,17 @@ Why this design survives failures:
 * **atomicity** — leaves are written into ``step_N.tmp`` and the directory is
   renamed only after the COMMITTED marker is fsync'd; a crash mid-save leaves
   a ``.tmp`` directory that restore ignores and the next save overwrites.
+* **integrity** — manifest v2 records a CRC32 + byte length per leaf file,
+  computed from the exact bytes written; :func:`restore` verifies them before
+  any leaf reaches a kernel, raising
+  :class:`~repro.resilience.integrity.IntegrityError` naming the bad file.  A
+  committed-then-corrupted checkpoint (bit rot, torn page under the rename)
+  therefore fails *loudly* — never silently-wrong numerics.  v1 manifests
+  (no checksums) still load.
+* **fallback** — :func:`load_latest` / :func:`latest_verifiable_step` walk
+  committed steps newest-first and land on the newest one that passes
+  verification, so one corrupt head degrades recovery freshness instead of
+  killing it.
 * **elasticity** — leaves are stored *unsharded* (host-gathered); restore
   device_puts them under whatever shardings the *new* mesh prescribes, so a
   job can resume on a different device count (tested: save@N -> restore@M).
@@ -19,22 +30,31 @@ Why this design survives failures:
   (leaf, shard-index) — the manifest format already records per-leaf shape
   so that extension is additive.
 * **async** — ``save_async`` snapshots to host (device_get) synchronously
-  (cheap) and writes in a daemon thread, overlapping I/O with the next steps.
+  (cheap) and writes in a daemon thread, overlapping I/O with the next steps;
+  a failed background write re-raises on ``wait()`` or the next ``save``.
 """
 
 from __future__ import annotations
 
+import io
 import json
+import logging
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from ..resilience import chaos
+from ..resilience.integrity import IntegrityError, checksum_bytes, verify_file
+
 _MANIFEST = "manifest.json"
 _MARKER = "COMMITTED"
+MANIFEST_VERSION = 2  # v1: no checksums; v2: per-leaf crc32 + byte length
+
+log = logging.getLogger("repro.checkpoint")
 
 
 def _leaf_paths(tree) -> Tuple[Any, list]:
@@ -74,12 +94,26 @@ def save(directory: str, step: int, tree, metadata: Optional[Dict] = None) -> st
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
         encoded, stored_as = _encode_leaf(arr)
-        np.save(os.path.join(tmp, fname), encoded)
-        entry = {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        # serialize in memory first: the checksum must cover the exact bytes
+        # that land on disk (npy header included), not a re-read that could
+        # already be damaged
+        buf = io.BytesIO()
+        np.save(buf, encoded)
+        payload = buf.getvalue()
+        with open(os.path.join(tmp, fname), "wb") as f:
+            f.write(payload)
+        entry = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "bytes": len(payload),
+            "checksum": checksum_bytes(payload),
+        }
         if stored_as is not None:
             entry["extension_dtype"] = stored_as
         entries.append(entry)
     manifest = {
+        "manifest_version": MANIFEST_VERSION,
         "step": step,
         "treedef": str(treedef),
         "num_leaves": len(leaves),
@@ -97,15 +131,22 @@ def save(directory: str, step: int, tree, metadata: Optional[Dict] = None) -> st
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    chaos.fire("store.committed", path=final)
     return final
 
 
 class AsyncSaver:
     """Overlap checkpoint I/O with training: snapshot on call, write in a
-    daemon thread.  ``wait()`` joins the in-flight save (call before exit)."""
+    daemon thread.  ``wait()`` joins the in-flight save (call before exit).
+
+    A failing background write is never swallowed: the exception is captured
+    and re-raised on the next ``wait()`` or ``save()`` — a checkpoint the
+    caller believes exists but does not is precisely the failure that turns
+    a later crash into data loss."""
 
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self.last_path: Optional[str] = None
 
     def save(self, directory: str, step: int, tree, metadata=None):
@@ -113,7 +154,10 @@ class AsyncSaver:
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
-            self.last_path = save(directory, step, host_tree, metadata)
+            try:
+                self.last_path = save(directory, step, host_tree, metadata)
+            except BaseException as e:  # noqa: BLE001 - surfaced on wait()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -122,13 +166,18 @@ class AsyncSaver:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                "async checkpoint write failed (the checkpoint does NOT exist)"
+            ) from err
 
 
-def latest_step(directory: str) -> Optional[int]:
-    """Largest committed step in ``directory`` (ignores .tmp wreckage)."""
+def committed_steps(directory: str) -> List[int]:
+    """All committed steps in ``directory``, ascending (ignores .tmp wreckage)."""
     if not os.path.isdir(directory):
-        return None
-    best = None
+        return []
+    steps = []
     for name in os.listdir(directory):
         full = os.path.join(directory, name)
         if (
@@ -137,11 +186,56 @@ def latest_step(directory: str) -> Optional[int]:
             and os.path.exists(os.path.join(full, _MARKER))
         ):
             try:
-                s = int(name.split("_")[1])
+                steps.append(int(name.split("_")[1]))
             except ValueError:
                 continue
-            best = s if best is None else max(best, s)
-    return best
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Largest committed step in ``directory`` (ignores .tmp wreckage)."""
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
+
+
+def verify(directory: str, step: int) -> None:
+    """Verify one committed step's content: every leaf file must match its
+    manifest checksum and byte length.  Raises
+    :class:`~repro.resilience.integrity.IntegrityError` naming the first bad
+    file, or :class:`FileNotFoundError` when the step is not committed.  v1
+    manifests (no checksums) verify only file presence."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, _MARKER)):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    try:
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise IntegrityError(
+            f"{os.path.join(path, _MANIFEST)}: unreadable manifest ({e})",
+            path=os.path.join(path, _MANIFEST),
+        ) from e
+    for entry in manifest["leaves"]:
+        leaf_path = os.path.join(path, entry["file"])
+        if "checksum" in entry:
+            verify_file(leaf_path, entry["checksum"], entry.get("bytes"))
+        elif not os.path.exists(leaf_path):
+            raise IntegrityError(
+                f"{leaf_path}: leaf file missing from committed checkpoint",
+                path=leaf_path,
+            )
+
+
+def latest_verifiable_step(directory: str) -> Optional[int]:
+    """Newest committed step that passes :func:`verify` — the recovery
+    anchor when the head checkpoint was corrupted after commit."""
+    for step in reversed(committed_steps(directory)):
+        try:
+            verify(directory, step)
+            return step
+        except IntegrityError as e:
+            log.warning("checkpoint step %d fails verification (%s); falling back", step, e)
+    return None
 
 
 def read_metadata(directory: str, step: Optional[int] = None) -> Tuple[Dict, int]:
@@ -164,13 +258,22 @@ def restore(
     step: int,
     like,
     shardings=None,
+    *,
+    verify_integrity: bool = True,
 ):
     """Restore the step's pytree.  ``like`` provides the tree structure
     (abstract or concrete).  ``shardings`` (optional pytree of NamedSharding)
-    re-shards onto the *current* mesh — elastic resume."""
+    re-shards onto the *current* mesh — elastic resume.
+
+    ``verify_integrity`` (default on) checks every leaf file against its
+    manifest checksum *before* deserializing — a flipped bit or truncation
+    raises :class:`~repro.resilience.integrity.IntegrityError` naming the
+    file instead of materializing corrupt numerics."""
     path = os.path.join(directory, f"step_{step:08d}")
     if not os.path.exists(os.path.join(path, _MARKER)):
         raise FileNotFoundError(f"no committed checkpoint at {path}")
+    if verify_integrity:
+        verify(directory, step)
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
     treedef = jax.tree.structure(like)
@@ -190,15 +293,39 @@ def restore(
     return tree, manifest["metadata"]
 
 
+def load_latest(directory: str, like, shardings=None):
+    """Restore the newest *verifiable* committed checkpoint: a corrupt head
+    (post-commit bit rot) is skipped with a warning instead of killing the
+    restore.  Returns ``(tree, metadata, step)``; raises
+    :class:`FileNotFoundError` when nothing is committed and
+    :class:`~repro.resilience.integrity.IntegrityError` when every committed
+    step is damaged."""
+    steps = committed_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoint under {directory!r}")
+    last_err: Optional[IntegrityError] = None
+    for step in reversed(steps):
+        try:
+            tree, metadata = restore(directory, step, like)
+            if step != steps[-1]:
+                log.warning(
+                    "restored step %d (newest committed step %d failed "
+                    "verification)", step, steps[-1],
+                )
+            if shardings is not None:
+                tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+            return tree, metadata, step
+        except IntegrityError as e:
+            log.warning("step %d: %s", step, e)
+            last_err = e
+    raise IntegrityError(
+        f"every committed checkpoint under {directory!r} fails verification "
+        f"(newest failure: {last_err})",
+        path=getattr(last_err, "path", None),
+    )
+
+
 def cleanup(directory: str, keep_last: int = 3):
     """Delete all but the newest ``keep_last`` committed checkpoints."""
-    if not os.path.isdir(directory):
-        return
-    steps = sorted(
-        int(n.split("_")[1])
-        for n in os.listdir(directory)
-        if n.startswith("step_") and not n.endswith(".tmp")
-        and os.path.exists(os.path.join(directory, n, _MARKER))
-    )
-    for s in steps[:-keep_last]:
+    for s in committed_steps(directory)[:-keep_last]:
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)

@@ -183,6 +183,16 @@ def write_shards(
     ``shard_00000.npy``, ... plus ``meta.json`` (format
     ``repro.shards.v1``).  Returns the metadata dict.
 
+    ``meta.json`` records a CRC32 content checksum and byte length per shard
+    file (``checksums`` / ``shard_bytes``, aligned with shard index);
+    :class:`~repro.streaming.source.ShardDirSource` verifies each shard
+    against them before its rows are served, so a flipped bit or truncated
+    shard raises :class:`~repro.resilience.integrity.IntegrityError` naming
+    the file instead of feeding corrupt rows to a fit.  Appending to a
+    pre-checksum directory keeps the old shards' entries as ``null``
+    (unknown — verification is skipped for them rather than paying a full
+    re-read of history).
+
     ``append=True`` grows an existing shard directory in place with the rows
     of ``data``: new shard files are written first, ``meta.json`` is
     replaced last via an atomic rename — a concurrent
@@ -196,6 +206,8 @@ def write_shards(
     import json
     import os
 
+    from ..resilience import chaos
+    from ..resilience.integrity import checksum_file
     from ..streaming.source import SHARD_FORMAT, SHARD_META, as_source
 
     source = as_source(data)
@@ -203,6 +215,8 @@ def write_shards(
     os.makedirs(path, exist_ok=True)
     np_dtype = np.dtype(dtype)
     first_shard, row_offset = 0, 0
+    checksums: list = []
+    shard_bytes: list = []
     if append:
         with open(os.path.join(path, SHARD_META)) as f:
             meta = json.load(f)
@@ -233,12 +247,21 @@ def write_shards(
                 f"num_shards={first_shard} * shard_rows={shard_rows} != "
                 f"num_rows={row_offset} (partial write?)"
             )
+        # extend the checksum ledger; a pre-checksum directory keeps None
+        # (unknown) for its existing shards instead of re-reading history
+        checksums = list(meta.get("checksums") or [None] * first_shard)
+        shard_bytes = list(meta.get("shard_bytes") or [None] * first_shard)
     num_new = max((m + shard_rows - 1) // shard_rows, 0 if append else 1)
     for idx in range(num_new):
         lo = idx * shard_rows
         hi = min(lo + shard_rows, m)
         block = np.asarray(source.read(lo, hi), np_dtype)
-        np.save(os.path.join(path, f"shard_{first_shard + idx:05d}.npy"), block)
+        fname = os.path.join(path, f"shard_{first_shard + idx:05d}.npy")
+        np.save(fname, block)
+        crc, nbytes = checksum_file(fname)
+        checksums.append(crc)
+        shard_bytes.append(nbytes)
+        chaos.fire("shards.shard_written", path=fname)
     meta = {
         "format": SHARD_FORMAT,
         "num_rows": int(row_offset + m),
@@ -246,13 +269,18 @@ def write_shards(
         "shard_rows": int(shard_rows),
         "num_shards": int(first_shard + num_new),
         "dtype": str(np_dtype),
+        "checksums": checksums,
+        "shard_bytes": shard_bytes,
     }
     # meta commits the write: tmp + rename is atomic on POSIX, so readers see
     # either the old or the new directory state, never a torn meta.json
     tmp = os.path.join(path, SHARD_META + ".tmp")
     with open(tmp, "w") as f:
         json.dump(meta, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, os.path.join(path, SHARD_META))
+    chaos.fire("shards.committed", path=os.path.join(path, SHARD_META))
     return meta
 
 

@@ -24,10 +24,36 @@ data grows, without ever taking serving down:
    response is checked bitwise against the expected output of the version
    that served it, so a half-swapped or torn model would fail loudly.
 
+Resilience (the contracts the chaos harness in
+:mod:`repro.launch.chaos_vi` exercises):
+
+* **crash recovery** — every phase transition (ingest commit, update start,
+  state persisted, version staged/activated) is journaled durably
+  (:class:`~repro.resilience.journal.Journal`, fsync per append) *before*
+  its effects matter.  The per-update :class:`~repro.online.FitState` is
+  checkpointed with content checksums under ``workdir/state``.  A SIGKILL'd
+  controller re-run with the same ``--workdir`` resumes: it loads the newest
+  *verifiable* state, rebuilds + catches up the model with one
+  :func:`~repro.online.update` call (fold commutativity makes the final
+  model bit-identical to an uninterrupted run), and the ingest thread skips
+  batches whose shards are already committed (re-writing any torn orphan
+  shard deterministically, since batches are keyed by ``(seed, batch)``).
+* **degrade, don't die** — a failed update / stage / activation is
+  journaled, any leaked staged version is removed, and the loop keeps
+  serving the last-good version in a ``degraded`` health state; it recovers
+  on the next successful update, and only ``--max-failures`` *consecutive*
+  failures abort the process.
+* **fault injection** — ``--chaos plan.json`` installs a deterministic
+  :class:`~repro.resilience.chaos.FaultPlan`; controller sites
+  (``controller.update_start`` / ``state_saved`` / ``staged`` /
+  ``activated``) fire *after* the corresponding journal append, so a
+  ``sigkill`` fault there is exactly a crash between durable transitions.
+
 Reported: per-update fold/replay accounting and warm recompile counts,
 staleness (data arrival -> serving activation latency) per arrival, serve
 p50/p99 and the update/serve overlap (requests completed while an update
-was in flight — the point of the exercise).
+was in flight — the point of the exercise), plus health / failure / resume
+accounting.
 
 Usage::
 
@@ -41,10 +67,11 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import shutil
 import tempfile
 import threading
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -115,12 +142,22 @@ def stage_handle(registry, name: str, version: int, probes, batcher_config):
 
 
 def main(argv=None) -> Dict:
+    from .. import api as vi_api
+    from ..checkpoint import store as ckpt_store
     from ..core.oavi import OAVIConfig
     from ..data.synthetic import write_shards
-    from ..online import DriftConfig, DriftMonitor
+    from ..online import DriftConfig, DriftMonitor, FitState
     from ..online import fit as online_fit
     from ..online import update as online_update
-    from ..serving import BatcherConfig, EngineConfig, ModelRegistry
+    from ..resilience import chaos
+    from ..resilience.integrity import IntegrityError
+    from ..resilience.journal import Journal, JournalError
+    from ..serving import (
+        BatcherConfig,
+        EngineConfig,
+        ModelRegistry,
+        ShutdownError,
+    )
     from ..streaming import ScaledSource, ShardDirSource
     from ..streaming.scaler import StreamingMinMaxScaler
 
@@ -147,10 +184,19 @@ def main(argv=None) -> Dict:
                     help="comma-separated probe request sizes")
     ap.add_argument("--max-delay-ms", type=float, default=1.0)
     ap.add_argument("--workdir", type=str, default=None,
-                    help="shard directory (default: a fresh temp dir)")
+                    help="persistent working directory: shards/, state/, "
+                    "journal.jsonl, final_model/ (default: a fresh temp dir)")
     ap.add_argument("--out", type=str, default=None,
                     help="write the report dict as JSON here")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos", type=str, default=None,
+                    help="install a JSON FaultPlan (see repro.resilience.chaos)")
+    ap.add_argument("--max-failures", type=int, default=3,
+                    help="consecutive failed updates tolerated before aborting")
+    ap.add_argument("--keep-states", type=int, default=3,
+                    help="FitState checkpoint steps retained under workdir/state")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore an existing journal/state and restart from scratch")
     args = ap.parse_args(argv)
 
     if args.increment_rows % args.shard_rows or args.base_rows % args.shard_rows:
@@ -158,33 +204,63 @@ def main(argv=None) -> Dict:
             "--base-rows and --increment-rows must be multiples of "
             "--shard-rows (append only ever adds whole shards)"
         )
+    if args.chaos:
+        chaos.install(chaos.FaultPlan.load(args.chaos))
 
     workdir = args.workdir or tempfile.mkdtemp(prefix="continuous_vi_")
     os.makedirs(workdir, exist_ok=True)
     shard_dir = os.path.join(workdir, "shards")
+    state_dir = os.path.join(workdir, "state")
+    final_dir = os.path.join(workdir, "final_model")
+    journal_path = os.path.join(workdir, "journal.jsonl")
 
-    # -- base fit: offline model + persisted Gram state -------------------
+    # -- resume decision: a dead process left a durable lineage behind? ----
+    # A mid-history-corrupted journal (JournalError) is not resumable — the
+    # lineage is a lie; fall through to a loud from-scratch restart.
+    try:
+        journal = Journal(journal_path)
+        resumed = (
+            not args.no_resume
+            and journal.last("base_fitted") is not None
+            and bool(ckpt_store.committed_steps(state_dir))
+        )
+    except JournalError as e:
+        print(f"journal unusable ({e}); restarting from scratch")
+        journal = None
+        resumed = False
+
+    # the frozen scaler is recomputed, not persisted: the base batch is
+    # deterministic in (seed, base_rows, n), so fresh and resumed processes
+    # derive bit-identical scaling — a prerequisite for bit-identical folds
     base = arrival_batch(-1, args.base_rows, args.n, args.seed)
-    write_shards(shard_dir, base, shard_rows=args.shard_rows)
+    scaler = StreamingMinMaxScaler().fit(base)
+    config = OAVIConfig(psi=args.psi, engine=args.engine)
+    total_rows = args.base_rows + args.increments * args.increment_rows
+
+    state: Optional[FitState] = None
+    if resumed:
+        try:
+            state = FitState.load(state_dir)  # newest VERIFIABLE committed step
+        except (IntegrityError, FileNotFoundError, ValueError) as e:
+            print(f"resume failed ({e}); refitting from scratch")
+            resumed = False
+    if not resumed:
+        # fresh start: clear any half-written artifacts of a dead process
+        if journal is not None:
+            journal.close()
+        for p in (shard_dir, state_dir, final_dir):
+            if os.path.exists(p):
+                shutil.rmtree(p)
+        if os.path.exists(journal_path):
+            os.remove(journal_path)
+        journal = Journal(journal_path)
+        write_shards(shard_dir, base, shard_rows=args.shard_rows)
+
     raw_src = ShardDirSource(shard_dir)
-    scaler = StreamingMinMaxScaler().fit(base)  # frozen: updates never rescale
     src = ScaledSource(raw_src, scaler)
 
-    config = OAVIConfig(psi=args.psi, engine=args.engine)
-    t0 = time.perf_counter()
-    model, state = online_fit(src, config, chunk_rows=args.chunk_rows, scaler=scaler)
-    t_base_fit = time.perf_counter() - t0
-    monitor = DriftMonitor.from_fit_state(state, DriftConfig())
-    print(
-        f"base fit: m={args.base_rows} |G|+|O|={model.stats['G_plus_O']} "
-        f"in {t_base_fit:.2f}s ({model.stats['recompiles']} compiles)"
-    )
-
-    # -- serving stack: registry + per-version batcher handle --------------
+    # -- serving scaffolding (probes are deterministic on both paths) ------
     registry = ModelRegistry(engine_config=EngineConfig(), warmup=True)
-    entry = registry.register("vi", model, activate=True)
-    if entry.engine is None:
-        raise SystemExit("model set has no fused plan; nothing to serve")
     probe_sizes = [int(s) for s in args.probe_rows.split(",") if s]
     pool = src.read(0, min(args.base_rows, 4096))
     rng = np.random.default_rng(args.seed + 7)
@@ -193,16 +269,144 @@ def main(argv=None) -> Dict:
         take = rng.integers(0, pool.shape[0] - q + 1)
         probes.append(np.ascontiguousarray(pool[take : take + q]))
     batcher_config = BatcherConfig(max_delay_ms=args.max_delay_ms)
-    handle = stage_handle(registry, "vi", entry.version, probes, batcher_config)
     handle_lock = threading.Lock()
-    handle_box = {"h": handle}
+    handle_box: Dict[str, Optional[ServingHandle]] = {"h": None}
+    old_handles: List[ServingHandle] = []
+    updating = threading.Event()
+
+    # -- journaled update cycle --------------------------------------------
+    # Each chaos site fires AFTER its journal append: a sigkill fault there
+    # is a crash between durable transitions, the exact case resume covers.
+    arrivals: List[Dict] = []  # {"cum_rows", "t_arrival"} per batch
+    arrivals_lock = threading.Lock()
+    staleness: List[float] = []
+    updates: List[Dict] = []
+    failures: List[Dict] = []
+    health = {"state": "ok", "consecutive_failures": 0}
+    model = None
+    fitted_rows = 0
+    next_step = (ckpt_store.committed_steps(state_dir)[-1] + 1) if resumed else 1
+    update_seq = sum(1 for r in journal.replay() if r["kind"] == "update_start")
+
+    def update_cycle() -> Dict:
+        """Fold -> persist state -> stage -> activate, each transition
+        journaled first.  On failure: journal it, unwind any staged leak,
+        re-raise — the caller decides degraded-vs-fatal."""
+        nonlocal model, state, fitted_rows, next_step, update_seq
+        idx = update_seq
+        update_seq += 1
+        staged_version = None
+        new_handle = None
+        updating.set()
+        t_up = time.perf_counter()
+        journal.append("update_start", update=idx, rows_visible=src.num_rows)
+        chaos.fire("controller.update_start", update=idx)
+        try:
+            result = online_update(model, state, src, scaler=scaler)
+            step = next_step
+            result.state.save(state_dir, step=step)
+            ckpt_store.cleanup(state_dir, args.keep_states)
+            journal.append(
+                "state_saved", update=idx, step=step, rows=result.state.num_rows
+            )
+            chaos.fire("controller.state_saved", update=idx)
+            staged = registry.register("vi", result.model, activate=False)
+            staged_version = staged.version
+            new_handle = stage_handle(
+                registry, "vi", staged.version, probes, batcher_config
+            )
+            journal.append("staged", update=idx, version=staged.version)
+            chaos.fire("controller.staged", update=idx)
+            registry.activate("vi", staged.version)
+            with handle_lock:
+                old = handle_box["h"]
+                handle_box["h"] = new_handle
+            journal.append(
+                "activated",
+                update=idx,
+                version=staged.version,
+                rows=result.state.num_rows,
+            )
+            chaos.fire("controller.activated", update=idx)
+        except Exception as e:
+            journal.append(
+                "update_failed", update=idx, error=f"{type(e).__name__}: {e}"
+            )
+            if new_handle is not None:
+                new_handle.batcher.stop()
+            if staged_version is not None:
+                try:
+                    registry.remove("vi", staged_version)
+                except KeyError:
+                    pass  # never got registered
+            raise
+        finally:
+            updating.clear()
+        next_step = step + 1
+        model, state = result.model, result.state
+        fitted_rows = result.state.num_rows
+        if old is not None:
+            old_handles.append(old)  # stopped after the loop; drains in-flight
+        t_active = time.perf_counter()
+        with arrivals_lock:
+            for a in arrivals:
+                if "t_active" not in a and a["cum_rows"] <= fitted_rows:
+                    a["t_active"] = t_active
+                    staleness.append(t_active - a["t_arrival"])
+        rec = dict(result.stats)
+        rec.update(
+            version=staged_version,
+            rows=fitted_rows,
+            time_to_active=t_active - t_up,
+        )
+        return rec
+
+    # -- initial activation: base fit (fresh) or catch-up update (resumed) --
+    resume_info: Dict = {"resumed": False}
+    t_base_fit = 0.0
+    if resumed:
+        t0 = time.perf_counter()
+        state_rows = state.num_rows
+        rec = update_cycle()  # model=None: rebuild from state + fold pending
+        resume_info = {
+            "resumed": True,
+            "state_rows": int(state_rows),
+            "caught_up_rows": int(fitted_rows),
+            "recompiles": rec["recompiles"],  # cold: excluded from warm count
+            "time_catch_up": time.perf_counter() - t0,
+        }
+        print(
+            f"resumed: state at m={state_rows}, caught up to m={fitted_rows} "
+            f"in {resume_info['time_catch_up']:.2f}s "
+            f"({rec['recompiles']} cold compiles)"
+        )
+    else:
+        t0 = time.perf_counter()
+        model, state = online_fit(
+            src, config, chunk_rows=args.chunk_rows, scaler=scaler
+        )
+        t_base_fit = time.perf_counter() - t0
+        state.save(state_dir, step=0)
+        journal.append("base_fitted", rows=state.num_rows, step=0)
+        fitted_rows = state.num_rows
+        entry = registry.register("vi", model, activate=True)
+        if entry.engine is None:
+            raise SystemExit("model set has no fused plan; nothing to serve")
+        handle_box["h"] = stage_handle(
+            registry, "vi", entry.version, probes, batcher_config
+        )
+        print(
+            f"base fit: m={args.base_rows} |G|+|O|={model.stats['G_plus_O']} "
+            f"in {t_base_fit:.2f}s ({model.stats['recompiles']} compiles)"
+        )
+    monitor = DriftMonitor.from_fit_state(state, DriftConfig())
 
     # -- serving traffic: closed-loop probers, bitwise-checked -------------
     stop_serving = threading.Event()
-    updating = threading.Event()
     serve_lat: List[List[float]] = [[] for _ in range(args.serve_threads)]
     serve_overlap = [0] * args.serve_threads  # completed while updating
     serve_mismatch = [0] * args.serve_threads
+    serve_fault = [0] * args.serve_threads  # degraded-mode request failures
     serve_errors: List[BaseException] = []
 
     def prober(tid: int):
@@ -214,8 +418,11 @@ def main(argv=None) -> Dict:
             t_req = time.perf_counter()
             try:
                 out = h.batcher.submit(probes[i], "transform").result()
-            except RuntimeError:
+            except ShutdownError:
                 continue  # handle swapped under us and its batcher stopped
+            except RuntimeError:
+                serve_fault[tid] += 1  # injected/transient fault; keep serving
+                continue
             except BaseException as e:  # pragma: no cover - surfaced below
                 serve_errors.append(e)
                 return
@@ -233,39 +440,51 @@ def main(argv=None) -> Dict:
         t.start()
 
     # -- ingest: append arrival batches to the shard dir -------------------
-    arrivals: List[Dict] = []  # {"cum_rows", "t_arrival"} per batch
-    arrivals_lock = threading.Lock()
+    # On resume, batches whose shards are already committed (meta.json rows)
+    # are skipped; a torn append (orphan shard files past the committed
+    # meta) is harmlessly re-written — batches are deterministic, so the
+    # overwrite is bit-identical and the meta commit completes it.
+    already = max(0, (raw_src.num_rows - args.base_rows) // args.increment_rows)
     ingest_done = threading.Event()
+    ingest_errors: List[BaseException] = []
 
     def ingest():
-        cum = args.base_rows
-        for b in range(args.increments):
-            drifted = 0 <= args.drift_at_increment <= b
-            rows = arrival_batch(b, args.increment_rows, args.n, args.seed, drifted)
-            write_shards(shard_dir, rows, append=True)
-            cum += args.increment_rows
-            with arrivals_lock:
-                arrivals.append({"cum_rows": cum, "t_arrival": time.perf_counter()})
-            if args.interval_ms:
-                time.sleep(args.interval_ms / 1e3)
-        ingest_done.set()
+        try:
+            cum = args.base_rows + already * args.increment_rows
+            for b in range(already, args.increments):
+                drifted = 0 <= args.drift_at_increment <= b
+                rows = arrival_batch(
+                    b, args.increment_rows, args.n, args.seed, drifted
+                )
+                write_shards(shard_dir, rows, append=True)
+                cum += args.increment_rows
+                journal.append("ingested", batch=b, cum_rows=cum)
+                with arrivals_lock:
+                    arrivals.append(
+                        {"cum_rows": cum, "t_arrival": time.perf_counter()}
+                    )
+                if args.interval_ms:
+                    time.sleep(args.interval_ms / 1e3)
+        except BaseException as e:  # surfaced by the controller loop
+            ingest_errors.append(e)
+        finally:
+            ingest_done.set()
 
     ingest_thread = threading.Thread(target=ingest, daemon=True)
     ingest_thread.start()
 
     # -- controller: refresh -> drift gate -> update -> stage -> activate --
-    updates: List[Dict] = []
-    staleness: List[float] = []
-    fitted_rows = args.base_rows
-    total_rows = args.base_rows + args.increments * args.increment_rows
-    old_handles: List[ServingHandle] = []
     try:
         while fitted_rows < total_rows:
+            if ingest_errors:
+                raise ingest_errors[0]
             grew = raw_src.refresh()
             if grew:
                 # fold the freshly visible rows into the drift window
                 for lo in range(src.num_rows - grew, src.num_rows, args.chunk_rows):
-                    monitor.observe(src.read(lo, min(lo + args.chunk_rows, src.num_rows)))
+                    monitor.observe(
+                        src.read(lo, min(lo + args.chunk_rows, src.num_rows))
+                    )
             pending = src.num_rows - fitted_rows
             drifted, sig = monitor.should_refit()
             run = pending > 0 and (
@@ -277,38 +496,31 @@ def main(argv=None) -> Dict:
                 time.sleep(0.002)
                 continue
 
-            updating.set()
-            t_up = time.perf_counter()
-            result = online_update(model, state, src, scaler=scaler)
-            model, state = result.model, result.state
-            staged = registry.register("vi", model, activate=False)
-            new_handle = stage_handle(
-                registry, "vi", staged.version, probes, batcher_config
-            )
-            registry.activate("vi", staged.version)
-            with handle_lock:
-                old = handle_box["h"]
-                handle_box["h"] = new_handle
-            old_handles.append(old)  # stopped after the loop; drains in-flight
-            t_active = time.perf_counter()
-            updating.clear()
-            fitted_rows = src.num_rows
-            with arrivals_lock:
-                for a in arrivals:
-                    if "t_active" not in a and a["cum_rows"] <= fitted_rows:
-                        a["t_active"] = t_active
-                        staleness.append(t_active - a["t_arrival"])
-            monitor.rebase()
-            rec = dict(result.stats)
-            rec.update(
-                version=staged.version,
-                rows=fitted_rows,
-                drift=sig,
-                time_to_active=t_active - t_up,
-            )
+            try:
+                rec = update_cycle()
+            except Exception as e:
+                failures.append(
+                    {"update": update_seq - 1, "error": f"{type(e).__name__}: {e}"}
+                )
+                health["consecutive_failures"] += 1
+                health["state"] = "degraded"
+                serving = handle_box["h"]
+                print(
+                    f"update failed ({type(e).__name__}: {e}); serving stays "
+                    f"on last-good v{serving.version} "
+                    f"[{health['consecutive_failures']} consecutive]"
+                )
+                if health["consecutive_failures"] > args.max_failures:
+                    raise
+                time.sleep(0.002)
+                continue
+            health["consecutive_failures"] = 0
+            health["state"] = "ok"
+            rec["drift"] = sig
             updates.append(rec)
+            monitor.rebase()
             print(
-                f"update v{staged.version}: +{rec['new_rows']} rows -> "
+                f"update v{rec['version']}: +{rec['new_rows']} rows -> "
                 f"{fitted_rows}, folded {rec['folded_degrees']} / replayed "
                 f"{rec['replayed_degrees']} degrees, "
                 f"{rec['recompiles']} recompiles, active in "
@@ -316,14 +528,22 @@ def main(argv=None) -> Dict:
                 + (f" [drift: {sig['triggered']}]" if sig["triggered"] else "")
             )
         ingest_thread.join()
+        journal.append("done", rows=fitted_rows)
     finally:
         stop_serving.set()
         for t in serve_threads:
             t.join()
         for h in old_handles + [handle_box["h"]]:
-            h.batcher.stop()
+            if h is not None:
+                h.batcher.stop()
+        journal.close()
     if serve_errors:
         raise serve_errors[0]
+
+    # -- final model: persisted for the chaos harness's bit comparison ----
+    if os.path.exists(final_dir):
+        shutil.rmtree(final_dir)
+    vi_api.save(model, final_dir)
 
     # -- report ------------------------------------------------------------
     lats = np.asarray([x for per in serve_lat for x in per])
@@ -345,6 +565,7 @@ def main(argv=None) -> Dict:
         "serve": {
             "requests": int(lats.size),
             "mismatches": mismatches,
+            "faults": int(sum(serve_fault)),
             "during_update_requests": overlap_requests,
             "lat_p50_ms": float(np.percentile(lats, 50)) if lats.size else 0.0,
             "lat_p99_ms": float(np.percentile(lats, 99)) if lats.size else 0.0,
@@ -353,6 +574,11 @@ def main(argv=None) -> Dict:
             "update_busy_s": update_busy,
             "served_during_updates": overlap_requests,
         },
+        "health": health["state"],
+        "update_failures": failures,
+        "resume": resume_info,
+        "workdir": workdir,
+        "final_model": final_dir,
     }
     print(
         f"{len(updates)} updates to m={total_rows} "
@@ -366,6 +592,11 @@ def main(argv=None) -> Dict:
         f"{overlap_requests} completed during in-flight updates, "
         f"{mismatches} bitwise mismatches"
     )
+    if failures:
+        print(
+            f"{len(failures)} failed update attempts survived in degraded "
+            f"mode (final health: {health['state']})"
+        )
     if mismatches:
         print("ERROR: served responses diverged from their version's expected output")
     if args.out:

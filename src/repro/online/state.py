@@ -214,15 +214,25 @@ class FitState:
             probe_last=get("probe_last"),
         )
 
-    def save(self, path: str) -> str:
-        """Persist atomically (committed checkpoint manifest) at ``path``."""
+    def save(self, path: str, step: int = 0) -> str:
+        """Persist atomically (committed checkpoint manifest) at ``path``.
+
+        ``step`` versions successive snapshots inside one directory so a
+        corrupted head (detected by the manifest-v2 leaf checksums) falls
+        back to the previous committed state on :meth:`load` — pair with
+        :func:`repro.checkpoint.store.cleanup` to bound retention."""
         from .. import api
 
         arrays, meta = self.to_state_dict()
-        return api.save_state_dict(path, arrays, meta, FIT_STATE_FORMAT)
+        return api.save_state_dict(path, arrays, meta, FIT_STATE_FORMAT, step=step)
 
     @classmethod
     def load(cls, path: str) -> "FitState":
+        """Load the newest *verifiable* persisted state at ``path``: every
+        Gram snapshot leaf is checksum-verified first, and a corrupt head
+        checkpoint falls back to the newest older committed one (an
+        :class:`~repro.resilience.integrity.IntegrityError` naming the bad
+        file propagates only when nothing under ``path`` verifies)."""
         from .. import api
 
         arrays, metadata = api.load_state_dict(path, FIT_STATE_FORMAT)

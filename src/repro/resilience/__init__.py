@@ -1,0 +1,64 @@
+"""Failure-survival layer for the continuous OAVI stack.
+
+Scale guarantees (linear in m, near-instant IHB refits) are worthless if the
+first torn shard write, flipped checkpoint bit, poison request, or controller
+SIGKILL takes the service down or — worse — lets it keep serving silently
+wrong polynomials.  This package is the robustness substrate the streaming /
+online / serving layers are threaded through:
+
+* :mod:`~repro.resilience.integrity` — CRC32 content checksums for every
+  checkpoint leaf (manifest v2), every shard file, and the persisted
+  ``FitState`` Gram snapshots; corruption raises :class:`IntegrityError`
+  naming the offending file instead of producing confidently-wrong
+  generators (the spurious-vanishing failure mode).
+* :mod:`~repro.resilience.journal` — an fsync'd append-only controller
+  journal with per-record CRCs; a SIGKILL'd ``launch/continuous_vi`` resumes
+  exactly where it died (last-good state + re-fold of un-journaled rows,
+  bit-identical under the ``gram_accumulate`` carry-in contract).
+* :mod:`~repro.resilience.chaos` — a seeded, deterministic
+  :class:`FaultPlan` (flip-leaf-bit, raise-on-Nth-engine-call, hang,
+  fail-activation, SIGKILL-at-phase) injected through ``chaos.fire`` hooks
+  in the store / source / engine / registry / controller, driving the
+  ``make chaos-smoke`` harness.
+"""
+
+from .chaos import (
+    Fault,
+    FaultPlan,
+    InjectedFault,
+    PoisonRequestError,
+    TransientEngineError,
+    fire,
+    install,
+    installed,
+    uninstall,
+)
+from .integrity import (
+    IntegrityError,
+    checksum_bytes,
+    checksum_file,
+    flip_bit,
+    truncate_file,
+    verify_file,
+)
+from .journal import Journal, JournalError
+
+__all__ = [
+    "Fault",
+    "FaultPlan",
+    "InjectedFault",
+    "IntegrityError",
+    "Journal",
+    "JournalError",
+    "PoisonRequestError",
+    "TransientEngineError",
+    "checksum_bytes",
+    "checksum_file",
+    "fire",
+    "flip_bit",
+    "truncate_file",
+    "install",
+    "installed",
+    "uninstall",
+    "verify_file",
+]

@@ -31,6 +31,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 
 from ..checkpoint import store
+from ..resilience.integrity import IntegrityError
 
 log = logging.getLogger("repro.runtime")
 
@@ -73,20 +74,33 @@ class TrainLoop:
         self.metrics_history: list = []
         self.straggler_events: list = []
         self.restarts = 0
+        self.integrity_fallbacks = 0
         self._ewma: Optional[float] = None
 
     # -- checkpoint-restart ------------------------------------------------
 
     def try_resume(self, shardings=None) -> bool:
-        latest = store.latest_step(self.config.ckpt_dir)
-        if latest is None:
-            return False
-        self.state, meta = store.restore(
-            self.config.ckpt_dir, latest, self.state, shardings
-        )
-        self.step = latest
-        log.info("resumed from step %d", latest)
-        return True
+        """Resume from the newest *verifiable* committed checkpoint.
+
+        A head checkpoint corrupted after commit (bit rot, torn page) is
+        detected by the manifest-v2 leaf checksums and skipped: resume lands
+        on the previous committed step instead of either crashing or —
+        before checksums existed — silently training on damaged weights.
+        ``integrity_fallbacks`` counts how many steps were skipped."""
+        steps = store.committed_steps(self.config.ckpt_dir)
+        for latest in reversed(steps):
+            try:
+                self.state, meta = store.restore(
+                    self.config.ckpt_dir, latest, self.state, shardings
+                )
+            except IntegrityError as e:
+                self.integrity_fallbacks += 1
+                log.warning("checkpoint step %d is corrupt (%s); trying older", latest, e)
+                continue
+            self.step = latest
+            log.info("resumed from step %d", latest)
+            return True
+        return False
 
     def _checkpoint(self):
         self.saver.save(self.config.ckpt_dir, self.step, self.state)

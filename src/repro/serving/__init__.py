@@ -18,16 +18,18 @@ package turns the fused transform of :mod:`repro.api` into a service:
 request trace.
 """
 
-from .batcher import BatcherConfig, MicroBatcher
+from .batcher import BatcherConfig, DeadlineExceeded, MicroBatcher, ShutdownError
 from .engine import EngineConfig, TransformEngine, UnsupportedModelError
 from .registry import ModelRegistry, RegistryEntry, load_servable
 
 __all__ = [
     "BatcherConfig",
+    "DeadlineExceeded",
     "EngineConfig",
     "MicroBatcher",
     "ModelRegistry",
     "RegistryEntry",
+    "ShutdownError",
     "TransformEngine",
     "UnsupportedModelError",
     "load_servable",

@@ -14,10 +14,28 @@ of one per request).
 
 Because the engine's evaluation is row-independent and the engine pads to
 its row buckets anyway, a coalesced call is bit-identical to per-request
-calls — batching is purely a throughput optimization.
+calls — batching is purely a throughput optimization.  That same
+row-independence is what makes **failure isolation** sound: when a coalesced
+call fails, the batch is bisected and each half re-dispatched, so a poison
+request (one whose *content* deterministically fails the device call) ends
+up failing alone while every innocent rider succeeds with bit-identical
+output.  Transient engine failures
+(:class:`~repro.resilience.chaos.TransientEngineError`) are retried with
+exponential backoff and deterministic, seeded jitter before isolation kicks
+in.  Per-request deadlines bound how long a request may sit behind a
+retrying batch: an expired request fails with :class:`DeadlineExceeded`
+instead of holding its caller forever.  None of this touches the happy
+path — with no faults, the dispatch sequence (and therefore every output
+bit) is identical to the pre-resilience batcher.
 
 ``predict`` requests ride the same queue: they share the batched feature
 transform and apply the (cheap, host-side) classifier head per request.
+
+Shutdown is loss-free: ``stop()`` drains queued requests by default, and
+anything still undrained (``drain=False``, or racing submitters) fails with
+:class:`ShutdownError` — no future is ever silently dropped.  ``submit``
+after ``stop()`` raises :class:`ShutdownError` instead of enqueueing into a
+dead queue.
 """
 
 from __future__ import annotations
@@ -31,7 +49,16 @@ from typing import Callable, Deque, List, Optional, Sequence
 
 import numpy as np
 
+from ..resilience.chaos import TransientEngineError
 from .engine import TransformEngine
+
+
+class ShutdownError(RuntimeError):
+    """The batcher is (or went) stopped; the request was not served."""
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's deadline passed before it could be dispatched."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +66,13 @@ class BatcherConfig:
     max_batch_rows: int = 8192  # flush when this many rows are queued
     max_delay_ms: float = 2.0  # ... or this long after the first request
     max_queue: int = 4096  # pending-request backpressure bound
+    # -- degrade-don't-die ---------------------------------------------------
+    max_retries: int = 2  # transient-failure retries per batch
+    backoff_ms: float = 1.0  # base of the exponential retry backoff
+    backoff_jitter: float = 0.5  # jitter fraction on top (deterministic, seeded)
+    retry_seed: int = 0  # seeds the backoff jitter: replays are exact
+    isolate_failures: bool = True  # bisect failed batches to isolate poison
+    default_deadline_ms: Optional[float] = None  # per-request default (None: none)
 
     def __post_init__(self):
         if self.max_batch_rows < 1:
@@ -49,6 +83,10 @@ class BatcherConfig:
             # 0 would deadlock: submit waits for space the worker can never
             # create (it only notifies _not_full after popping a request)
             raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_ms < 0:
+            raise ValueError(f"backoff_ms must be >= 0, got {self.backoff_ms}")
 
 
 @dataclasses.dataclass
@@ -57,6 +95,7 @@ class _Request:
     kind: str  # 'transform' | 'predict'
     future: Future
     t_submit: float
+    deadline: Optional[float] = None  # absolute perf_counter time
 
 
 class MicroBatcher:
@@ -89,12 +128,18 @@ class MicroBatcher:
         self._thread: Optional[threading.Thread] = None
         self._running = False
         self._stopped = False
+        self._batch_seq = 0  # keys the deterministic retry jitter
         self.stats = {
             "requests": 0,
             "batches": 0,
             "rows": 0,
             "coalesced_max": 0,
             "wait_ms_total": 0.0,
+            "retries": 0,
+            "bisections": 0,
+            "isolated_failures": 0,
+            "deadline_expired": 0,
+            "shutdown_failed": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -108,7 +153,11 @@ class MicroBatcher:
         self._thread.start()
         return self
 
-    def stop(self):
+    def stop(self, drain: bool = True):
+        """Stop the worker.  ``drain=True`` (default) serves queued requests
+        synchronously first; any future still pending afterwards — or every
+        queued future under ``drain=False`` — fails with
+        :class:`ShutdownError` rather than being lost forever."""
         with self._lock:
             self._running = False
             self._stopped = True
@@ -117,7 +166,17 @@ class MicroBatcher:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        self.run_once()  # drain stragglers synchronously
+        if drain:
+            self.run_once()  # serve stragglers synchronously
+        with self._lock:
+            leftovers = list(self._queue)
+            self._queue.clear()
+        for r in leftovers:
+            self.stats["shutdown_failed"] += 1
+            if r.future.set_running_or_notify_cancel():
+                r.future.set_exception(
+                    ShutdownError("MicroBatcher stopped before serving this request")
+                )
 
     def __enter__(self) -> "MicroBatcher":
         return self.start()
@@ -127,9 +186,14 @@ class MicroBatcher:
 
     # -- client API --------------------------------------------------------
 
-    def submit(self, Z, kind: str = "transform") -> Future:
+    def submit(self, Z, kind: str = "transform", *, deadline_ms: Optional[float] = None) -> Future:
         """Enqueue one request; the future resolves to (q, F) features for
-        ``kind='transform'`` or head outputs for ``kind='predict'``."""
+        ``kind='transform'`` or head outputs for ``kind='predict'``.
+
+        ``deadline_ms`` (default ``config.default_deadline_ms``) bounds the
+        time from submit to dispatch: a request still queued past its
+        deadline fails with :class:`DeadlineExceeded` instead of waiting out
+        a retry storm."""
         if kind not in ("transform", "predict"):
             raise ValueError(f"unknown request kind {kind!r}")
         if kind == "predict" and self.head is None:
@@ -140,8 +204,12 @@ class MicroBatcher:
             # reject malformed requests HERE: once coalesced, a bad request
             # would fail the whole batch and poison innocent callers' futures
             raise ValueError(f"expected (q, {n}) request rows, got {Z.shape}")
+        t_submit = time.perf_counter()
+        if deadline_ms is None:
+            deadline_ms = self.config.default_deadline_ms
+        deadline = None if deadline_ms is None else t_submit + deadline_ms / 1e3
         fut: Future = Future()
-        req = _Request(Z=Z, kind=kind, future=fut, t_submit=time.perf_counter())
+        req = _Request(Z=Z, kind=kind, future=fut, t_submit=t_submit, deadline=deadline)
         with self._lock:
             while (
                 not self._stopped
@@ -154,21 +222,21 @@ class MicroBatcher:
                 # enqueueing would leave the caller blocked on a future that
                 # never resolves (including submitters woken from the
                 # backpressure wait above by stop())
-                raise RuntimeError("MicroBatcher is stopped; start() it again")
+                raise ShutdownError("MicroBatcher is stopped; start() it again")
             self._queue.append(req)
             self.stats["requests"] += 1
             self._not_empty.notify()
         return fut
 
-    def transform(self, Z) -> np.ndarray:
+    def transform(self, Z, *, deadline_ms: Optional[float] = None) -> np.ndarray:
         """Synchronous convenience: submit + wait."""
-        fut = self.submit(Z, "transform")
+        fut = self.submit(Z, "transform", deadline_ms=deadline_ms)
         if self._thread is None:
             self.run_once()
         return fut.result()
 
-    def predict(self, Z) -> np.ndarray:
-        fut = self.submit(Z, "predict")
+    def predict(self, Z, *, deadline_ms: Optional[float] = None) -> np.ndarray:
+        fut = self.submit(Z, "predict", deadline_ms=deadline_ms)
         if self._thread is None:
             self.run_once()
         return fut.result()
@@ -211,23 +279,22 @@ class MicroBatcher:
             self._not_full.notify_all()
         return batch
 
-    def _process(self, batch: Sequence[_Request]):
-        if not batch:
-            return
-        t0 = time.perf_counter()
-        try:
-            Z = (
-                np.concatenate([r.Z for r in batch], axis=0)
-                if len(batch) > 1
-                else batch[0].Z
-            )
-            feats = self.engine.transform(Z)
-        except Exception as e:  # propagate to every caller in the batch
-            for r in batch:
-                if not r.future.set_running_or_notify_cancel():
-                    continue
-                r.future.set_exception(e)
-            return
+    def _backoff_s(self, attempt: int) -> float:
+        """Exponential backoff with deterministic jitter: replaying the same
+        fault schedule reproduces the same retry timing, so chaos runs are
+        seeds, not dice."""
+        base = self.config.backoff_ms * (2.0 ** attempt) / 1e3
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.config.retry_seed, self._batch_seq, attempt])
+        )
+        return base * (1.0 + self.config.backoff_jitter * float(rng.uniform()))
+
+    def _fail(self, batch: Sequence[_Request], err: BaseException):
+        for r in batch:
+            if r.future.set_running_or_notify_cancel():
+                r.future.set_exception(err)
+
+    def _scatter(self, batch: Sequence[_Request], Z: np.ndarray, feats: np.ndarray, t0: float):
         self.stats["batches"] += 1
         self.stats["rows"] += int(Z.shape[0])
         self.stats["coalesced_max"] = max(self.stats["coalesced_max"], len(batch))
@@ -250,6 +317,67 @@ class MicroBatcher:
                     r.future.set_result(block)
             except Exception as e:
                 r.future.set_exception(e)
+
+    def _execute(self, batch: Sequence[_Request]):
+        """Dispatch one coalesced batch: transient failures retry with
+        backoff; a persistent failure bisects the batch so the offending
+        request(s) fail alone.  Single-request batches fail directly — the
+        recursion's base case, depth <= ceil(log2(len(batch)))."""
+        t0 = time.perf_counter()
+        Z = (
+            np.concatenate([r.Z for r in batch], axis=0)
+            if len(batch) > 1
+            else batch[0].Z
+        )
+        attempt = 0
+        while True:
+            try:
+                feats = self.engine.transform(Z)
+                break
+            except TransientEngineError as e:
+                if attempt >= self.config.max_retries:
+                    # the engine, not a request, is sick: isolation cannot
+                    # help, and hammering it further only extends the outage
+                    self._fail(batch, e)
+                    return
+                self.stats["retries"] += 1
+                time.sleep(self._backoff_s(attempt))
+                attempt += 1
+            except Exception as e:
+                if self.config.isolate_failures and len(batch) > 1:
+                    # bisect: row-independence means re-dispatching halves is
+                    # bit-identical for every non-poison request in them
+                    self.stats["bisections"] += 1
+                    mid = len(batch) // 2
+                    self._execute(batch[:mid])
+                    self._execute(batch[mid:])
+                else:
+                    if len(batch) == 1:
+                        self.stats["isolated_failures"] += 1
+                    self._fail(batch, e)
+                return
+        self._scatter(batch, Z, feats, t0)
+
+    def _process(self, batch: Sequence[_Request]):
+        if not batch:
+            return
+        now = time.perf_counter()
+        live: List[_Request] = []
+        for r in batch:
+            if r.deadline is not None and now > r.deadline:
+                self.stats["deadline_expired"] += 1
+                if r.future.set_running_or_notify_cancel():
+                    r.future.set_exception(
+                        DeadlineExceeded(
+                            f"request waited {(now - r.t_submit) * 1e3:.1f}ms, "
+                            "past its deadline, before dispatch"
+                        )
+                    )
+                continue
+            live.append(r)
+        if live:
+            self._batch_seq += 1
+            self._execute(live)
 
     def run_once(self) -> int:
         """Synchronously drain the queue in coalesced batches (no worker

@@ -38,6 +38,7 @@ from ..core.distributed import (
     shard_map_compat,
 )
 from ..core.oavi import pow2_bucket
+from ..resilience import chaos
 
 
 class UnsupportedModelError(TypeError):
@@ -218,6 +219,10 @@ class TransformEngine:
             raise ValueError(
                 f"expected (q, {self.consts.n}) queries, got {Z.shape}"
             )
+        # chaos hook: transient/poison/hang faults fire HERE, the device-call
+        # boundary — the batcher's retry and bisection paths see exactly what
+        # a failing accelerator call would look like (no-op without a plan)
+        chaos.fire("engine.transform", Z=Z)
         q = Z.shape[0]
         with self._lock:
             self.stats["requests"] += 1

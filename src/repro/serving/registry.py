@@ -23,6 +23,7 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from ..checkpoint import store as ckpt_store
+from ..resilience import chaos
 from .engine import EngineConfig, TransformEngine, UnsupportedModelError
 
 
@@ -200,7 +201,12 @@ class ModelRegistry:
             return entry
 
     def activate(self, name: str, version: int) -> RegistryEntry:
-        """Hot-swap: atomically point ``name`` at ``version``."""
+        """Hot-swap: atomically point ``name`` at ``version``.
+
+        The chaos hook fires *before* the pointer moves: an injected
+        activation failure leaves the previous version serving — the
+        degrade-don't-die contract the continuous controller relies on."""
+        chaos.fire("registry.activate", name=name, version=version)
         with self._lock:
             versions = self._entries.get(name, {})
             if version not in versions:

@@ -18,9 +18,11 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Callable, Dict, Iterator, Optional, Protocol, Tuple, runtime_checkable
+from typing import Callable, Dict, Iterator, Optional, Protocol, Set, Tuple, runtime_checkable
 
 import numpy as np
+
+from ..resilience.integrity import IntegrityError, verify_file
 
 SHARD_FORMAT = "repro.shards.v1"
 SHARD_META = "meta.json"
@@ -28,8 +30,23 @@ SHARD_META = "meta.json"
 
 def _npy_rows(fname: str) -> int:
     """Row count of a ``.npy`` file from its header alone (mmap: no data
-    is actually read)."""
-    arr = np.load(fname, mmap_mode="r")
+    is actually read).  A zero-length or header-mangled file — the residue
+    of a torn write — raises :class:`IntegrityError` naming it instead of
+    whatever parse error numpy hits first."""
+    if os.path.getsize(fname) == 0:
+        raise IntegrityError(
+            f"{fname}: zero-length shard file (torn write?)", path=fname
+        )
+    try:
+        arr = np.load(fname, mmap_mode="r")
+    except Exception as e:
+        # np.load surfaces header damage as ValueError/OSError/EOFError but
+        # also as SyntaxError/TokenError out of its header ast parse — any
+        # failure to read an existing non-empty .npy file is corruption
+        raise IntegrityError(
+            f"{fname}: unreadable shard file ({e}) — torn or corrupt write",
+            path=fname,
+        ) from e
     return int(arr.shape[0]) if arr.ndim else 0
 
 
@@ -114,11 +131,23 @@ class ShardDirSource:
     metadata promises actually exists with the advertised row count — a
     partial write (shards without a committed meta, or a meta naming missing
     shards) fails loudly instead of serving truncated data.
+
+    **Content integrity**: ``meta.json`` written by current ``write_shards``
+    carries a CRC32 + byte length per shard; with ``verify_checksums=True``
+    (the default) each shard file is verified against them once, right
+    before its first rows are served — a flipped bit or truncation raises
+    :class:`~repro.resilience.integrity.IntegrityError` naming the file.
+    Lazy (first-read) verification keeps opening a huge directory O(1);
+    :meth:`verify_all` forces the full pass (operator audit / chaos
+    harness).  Shards whose recorded checksum is ``None`` (pre-checksum
+    directories) are tolerated unverified.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, verify_checksums: bool = True):
         self.path = path
+        self.verify_checksums = verify_checksums
         self._mmaps: Dict[int, np.ndarray] = {}
+        self._verified: Set[int] = set()
         self._load_meta(validate=True)
 
     def _load_meta(self, validate: bool) -> None:
@@ -134,6 +163,8 @@ class ShardDirSource:
         self.num_features = int(meta["num_features"])
         self.shard_rows = int(meta["shard_rows"])
         self.num_shards = int(meta["num_shards"])
+        self.checksums = list(meta.get("checksums") or [])
+        self.shard_bytes = list(meta.get("shard_bytes") or [])
         if validate:
             self._validate_meta()
 
@@ -187,14 +218,40 @@ class ShardDirSource:
                 f"{old_rows} -> {self.num_rows}; shard dirs may only grow"
             )
         # the old trailing shard may have been rewritten with more rows
-        # (append into a partial shard): drop its cached mmap
+        # (append into a partial shard): drop its cached mmap and its
+        # verified mark — the rewritten file has a new checksum
         if self.num_rows > old_rows and old_shards >= 1:
             self._mmaps.pop(old_shards - 1, None)
+            self._verified.discard(old_shards - 1)
         return self.num_rows - old_rows
+
+    def _verify_shard(self, idx: int) -> None:
+        """Checksum-verify shard ``idx`` once, before its rows are served.
+        No-op when disabled, already verified, or unrecorded (None entry)."""
+        if not self.verify_checksums or idx in self._verified:
+            return
+        expected = self.checksums[idx] if idx < len(self.checksums) else None
+        if expected is not None:
+            nbytes = self.shard_bytes[idx] if idx < len(self.shard_bytes) else None
+            verify_file(
+                os.path.join(self.path, f"shard_{idx:05d}.npy"), expected, nbytes
+            )
+        self._verified.add(idx)
+
+    def verify_all(self) -> int:
+        """Checksum-verify every shard now (full data read); returns the
+        number of shards with recorded checksums that were checked."""
+        checked = 0
+        for idx in range(self.num_shards):
+            had = idx < len(self.checksums) and self.checksums[idx] is not None
+            self._verify_shard(idx)
+            checked += int(had)
+        return checked
 
     def _shard(self, idx: int) -> np.ndarray:
         mm = self._mmaps.get(idx)
         if mm is None:
+            self._verify_shard(idx)
             fname = os.path.join(self.path, f"shard_{idx:05d}.npy")
             mm = np.load(fname, mmap_mode="r")
             self._mmaps[idx] = mm

@@ -1,0 +1,694 @@
+"""Resilience subsystem tests: integrity, journal, chaos, degraded serving,
+crash recovery.
+
+The property-style tests draw fault positions from a seeded RNG loop (and
+run everywhere); the hypothesis variants widen the search when hypothesis is
+installed.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import api
+from repro.resilience import (
+    Fault,
+    FaultPlan,
+    InjectedFault,
+    IntegrityError,
+    Journal,
+    JournalError,
+    PoisonRequestError,
+    TransientEngineError,
+    chaos,
+    checksum_bytes,
+    checksum_file,
+    flip_bit,
+    truncate_file,
+    verify_file,
+)
+from repro.serving import (
+    BatcherConfig,
+    DeadlineExceeded,
+    MicroBatcher,
+    ModelRegistry,
+    ShutdownError,
+    TransformEngine,
+)
+
+# ---------------------------------------------------------------------------
+# integrity primitives
+# ---------------------------------------------------------------------------
+
+
+def test_checksum_detects_every_random_bitflip(tmp_path):
+    """Property (seeded): CRC32 is a linear code — any single flipped bit
+    changes the checksum, wherever it lands."""
+    rng = np.random.default_rng(0)
+    p = str(tmp_path / "payload.bin")
+    with open(p, "wb") as f:
+        f.write(rng.bytes(4096))
+    crc, nbytes = checksum_file(p)
+    assert crc.startswith("crc32:") and nbytes == 4096
+    verify_file(p, crc, nbytes)  # pristine file passes
+    for _ in range(40):
+        off, bit = int(rng.integers(0, 4096)), int(rng.integers(0, 8))
+        flip_bit(p, off, bit)
+        with pytest.raises(IntegrityError, match="checksum mismatch") as ei:
+            verify_file(p, crc, nbytes)
+        assert "payload.bin" in str(ei.value)  # names the bad file
+        flip_bit(p, off, bit)  # restore
+        verify_file(p, crc, nbytes)
+
+
+@given(off=st.integers(0, 4095), bit=st.integers(0, 7))
+@settings(max_examples=50, deadline=None)
+def test_checksum_detects_bitflip_hypothesis(tmp_path, off, bit):
+    rng = np.random.default_rng(1)
+    p = str(tmp_path / "h.bin")
+    with open(p, "wb") as f:
+        f.write(rng.bytes(4096))
+    crc, nbytes = checksum_file(p)
+    flip_bit(p, off, bit)
+    with pytest.raises(IntegrityError):
+        verify_file(p, crc, nbytes)
+
+
+def test_truncation_reported_as_truncation_not_checksum(tmp_path):
+    p = str(tmp_path / "t.bin")
+    with open(p, "wb") as f:
+        f.write(b"x" * 1000)
+    crc, nbytes = checksum_file(p)
+    truncate_file(p, 400)
+    with pytest.raises(IntegrityError, match="truncated or grown"):
+        verify_file(p, crc, nbytes)
+    os.remove(p)
+    with pytest.raises(IntegrityError, match="missing"):
+        verify_file(p, crc, nbytes)
+
+
+def test_checksum_bytes_is_stable():
+    # the serialized form is part of the on-disk format: keep it frozen
+    assert checksum_bytes(b"") == "crc32:00000000"
+    assert checksum_bytes(b"repro") == checksum_bytes(b"repro")
+    assert checksum_bytes(b"repro") != checksum_bytes(b"repro\x00")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store: manifest v2 checksums + fallback
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(64, 8)).astype(np.float32),
+            "b": rng.normal(size=(8,)).astype(np.float32)}
+
+
+def test_store_leaf_corruption_detected_and_named(tmp_path):
+    from repro.checkpoint import store
+
+    d = str(tmp_path / "ckpt")
+    store.save(d, 0, _tree())
+    steps = store.committed_steps(d)
+    sd = os.path.join(d, f"step_{steps[-1]:08d}")
+    leaves = [n for n in sorted(os.listdir(sd)) if n.endswith(".npy")]
+    victim = max((os.path.join(sd, n) for n in leaves), key=os.path.getsize)
+    store.verify(d, steps[-1])  # pristine passes
+    rng = np.random.default_rng(2)
+    for _ in range(10):  # property: random positions, never silent
+        off = int(rng.integers(0, os.path.getsize(victim)))
+        bit = int(rng.integers(0, 8))
+        flip_bit(victim, off, bit)
+        with pytest.raises(IntegrityError) as ei:
+            store.verify(d, steps[-1])
+        assert os.path.basename(victim) in str(ei.value)
+        with pytest.raises(IntegrityError):
+            store.restore(d, steps[-1], _tree())
+        flip_bit(victim, off, bit)  # restore
+        store.verify(d, steps[-1])
+
+
+def test_store_load_latest_falls_back_to_verifiable_step(tmp_path):
+    from repro.checkpoint import store
+
+    d = str(tmp_path / "ckpt")
+    store.save(d, 0, _tree(0), metadata={"v": 0})
+    store.save(d, 1, _tree(1), metadata={"v": 1})
+    sd = os.path.join(d, "step_00000001")
+    victim = max(
+        (os.path.join(sd, n) for n in os.listdir(sd) if n.endswith(".npy")),
+        key=os.path.getsize,
+    )
+    flip_bit(victim, 100, 2)
+    assert store.latest_verifiable_step(d) == 0
+    tree, meta, step = store.load_latest(d, _tree())
+    assert step == 0 and meta["v"] == 0
+    assert np.array_equal(tree["w"], _tree(0)["w"])
+    # corrupting BOTH steps: never silent — the head error propagates
+    sd0 = os.path.join(d, "step_00000000")
+    victim0 = max(
+        (os.path.join(sd0, n) for n in os.listdir(sd0) if n.endswith(".npy")),
+        key=os.path.getsize,
+    )
+    flip_bit(victim0, 50, 1)
+    with pytest.raises(IntegrityError):
+        store.load_latest(d, _tree())
+
+
+def test_store_manifest_v1_still_loads(tmp_path):
+    """Pre-checksum (v1) manifests load presence-only — back compat."""
+    from repro.checkpoint import store
+
+    d = str(tmp_path / "ckpt")
+    store.save(d, 0, _tree())
+    sd = os.path.join(d, "step_00000000")
+    mf = os.path.join(sd, "manifest.json")
+    with open(mf) as f:
+        manifest = json.load(f)
+    manifest.pop("manifest_version", None)
+    for entry in manifest["leaves"]:
+        entry.pop("checksum", None)
+        entry.pop("bytes", None)
+    with open(mf, "w") as f:
+        json.dump(manifest, f)
+    store.verify(d, 0)  # presence-only: no checksums to check
+    tree, _ = store.restore(d, 0, _tree())
+    assert np.array_equal(tree["w"], _tree(0)["w"])
+
+
+def test_async_saver_write_failure_surfaces(tmp_path):
+    """Satellite: a failed background checkpoint write must NOT be silent —
+    wait() (and the next save()) re-raise it, naming the failure."""
+    from repro.checkpoint import store
+
+    target = str(tmp_path / "not_a_dir")
+    with open(target, "w") as f:
+        f.write("a file where the checkpoint dir should go")
+    saver = store.AsyncSaver()
+    saver.save(target, 0, _tree())
+    with pytest.raises(RuntimeError, match="does NOT exist"):
+        saver.wait()
+    # a good save afterwards works (error was consumed, saver is reusable)
+    good = str(tmp_path / "ok")
+    saver.save(good, 0, _tree())
+    saver.wait()
+    assert store.latest_step(good) == 0
+
+
+def test_trainloop_resume_skips_corrupt_latest(tmp_path):
+    """Satellite: TrainLoop.try_resume lands on the previous committed step
+    when the newest one is corrupt, and counts the fallback."""
+    from repro.checkpoint import store
+    from repro.runtime.fault_tolerance import TrainLoop, TrainLoopConfig
+
+    d = str(tmp_path / "ckpt")
+    store.save(d, 10, {"x": np.full((32,), 10.0)})
+    store.save(d, 20, {"x": np.full((32,), 20.0)})
+    sd = os.path.join(d, "step_00000020")
+    victim = [os.path.join(sd, n) for n in os.listdir(sd) if n.endswith(".npy")][0]
+    flip_bit(victim, 64, 5)
+    loop = TrainLoop(
+        TrainLoopConfig(ckpt_dir=d),
+        step_fn=lambda s, b: (s, {}),
+        batch_fn=lambda i: None,
+        state={"x": np.zeros((32,))},
+    )
+    assert loop.try_resume()
+    assert loop.step == 10
+    assert loop.integrity_fallbacks == 1
+    assert np.array_equal(loop.state["x"], np.full((32,), 10.0))
+
+
+# ---------------------------------------------------------------------------
+# shard integrity + torn-write matrix
+# ---------------------------------------------------------------------------
+
+
+def _write_dir(tmp_path, name="shards", rows=256, shard_rows=64, n=4, seed=3):
+    from repro.data.synthetic import write_shards
+
+    d = str(tmp_path / name)
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (rows, n)).astype(np.float32)
+    write_shards(d, X, shard_rows=shard_rows)
+    return d, X
+
+
+def test_shard_bitflip_detected_on_first_read(tmp_path):
+    from repro.streaming.source import ShardDirSource
+
+    d, X = _write_dir(tmp_path)
+    rng = np.random.default_rng(4)
+    for _ in range(8):  # property: random shard, random position
+        idx = int(rng.integers(0, 4))
+        victim = os.path.join(d, f"shard_{idx:05d}.npy")
+        off = int(rng.integers(0, os.path.getsize(victim)))
+        bit = int(rng.integers(0, 8))
+        flip_bit(victim, off, bit)
+        try:
+            src = ShardDirSource(d)
+        except IntegrityError as e:
+            # flip hit the npy header: caught at open, still named
+            assert f"shard_{idx:05d}.npy" in str(e)
+        else:
+            with pytest.raises(IntegrityError) as ei:
+                src.read(idx * 64, idx * 64 + 1)
+            assert f"shard_{idx:05d}.npy" in str(ei.value)
+            # a clean shard still serves (lazy per-shard verification)
+            other = (idx + 1) % 4
+            got = src.read(other * 64, other * 64 + 4)
+            assert np.array_equal(got, X[other * 64 : other * 64 + 4])
+        flip_bit(victim, off, bit)  # restore for the next round
+    assert ShardDirSource(d).verify_all() == 4  # pristine again
+
+
+def test_shard_verification_can_be_disabled_and_is_lazy(tmp_path):
+    from repro.streaming.source import ShardDirSource
+
+    d, X = _write_dir(tmp_path)
+    victim = os.path.join(d, "shard_00002.npy")
+    flip_bit(victim, 300, 1)
+    # rows of OTHER shards are served without paying for shard 2
+    src = ShardDirSource(d)
+    assert np.array_equal(src.read(0, 64), X[:64])
+    # opting out serves even the corrupt shard (operator's explicit choice)
+    raw = ShardDirSource(d, verify_checksums=False)
+    assert raw.read(128, 192).shape == (64, 4)
+
+
+def test_shard_truncation_detected(tmp_path):
+    from repro.streaming.source import ShardDirSource
+
+    d, _ = _write_dir(tmp_path)
+    victim = os.path.join(d, "shard_00001.npy")
+    truncate_file(victim, os.path.getsize(victim) - 17)
+    with pytest.raises((IntegrityError, ValueError)) as ei:
+        ShardDirSource(d).read(64, 128)
+    assert "shard_00001.npy" in str(ei.value)
+
+
+def test_torn_write_matrix(tmp_path):
+    """Satellite: the three torn-write shapes a crash can leave behind."""
+    from repro.streaming.source import ShardDirSource
+
+    # (1) shard files newer than meta (crash between shard write and meta
+    # commit): committed rows serve, orphans are invisible until the
+    # re-append completes them
+    d, X = _write_dir(tmp_path, "stale_meta")
+    rng = np.random.default_rng(7)
+    orphan = rng.uniform(0, 1, (64, 4)).astype(np.float32)
+    np.save(os.path.join(d, "shard_00004.npy"), orphan)
+    src = ShardDirSource(d)
+    assert src.num_rows == 256  # meta is the commit point
+    assert src.refresh() == 0
+    assert np.array_equal(src.read(192, 256), X[192:])
+
+    # (2) meta newer than shards (impossible under the committed write
+    # order; means the directory was mangled): loud failure naming the gap
+    d2, _ = _write_dir(tmp_path, "meta_ahead")
+    meta_path = os.path.join(d2, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["num_rows"] = 320
+    meta["num_shards"] = 5
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="missing"):
+        ShardDirSource(d2)
+
+    # (3) zero-length shard file (torn at the filesystem level)
+    d3, _ = _write_dir(tmp_path, "zero_len")
+    truncate_file(os.path.join(d3, "shard_00003.npy"), 0)
+    with pytest.raises((IntegrityError, ValueError)) as ei:
+        ShardDirSource(d3).read(192, 256)
+    assert "shard_00003" in str(ei.value)
+
+
+def test_fit_state_checkpoint_fallback(tmp_path):
+    """A corrupted newest FitState step falls back to the previous one —
+    recovery costs freshness (rows to re-fold), not correctness."""
+    from repro.core.oavi import OAVIConfig
+    from repro.online import FitState, fit as online_fit, update as online_update
+
+    rng = np.random.default_rng(9)
+    X1 = rng.uniform(0, 1, (512, 3)).astype(np.float32)
+    X2 = rng.uniform(0, 1, (256, 3)).astype(np.float32)
+    model, state = online_fit(X1, OAVIConfig(psi=0.01), chunk_rows=256)
+    d = str(tmp_path / "state")
+    state.save(d, step=0)
+    res = online_update(model, state, np.concatenate([X1, X2]), chunk_rows=256)
+    res.state.save(d, step=1)
+    assert FitState.load(d).num_rows == 768  # head step loads
+    sd = os.path.join(d, "step_00000001")
+    victim = max(
+        (os.path.join(sd, n) for n in os.listdir(sd) if n.endswith(".npy")),
+        key=os.path.getsize,
+    )
+    flip_bit(victim, -1, 6)
+    loaded = FitState.load(d)
+    assert loaded.num_rows == 512  # fell back to the pre-corruption step
+
+
+# ---------------------------------------------------------------------------
+# journal
+# ---------------------------------------------------------------------------
+
+
+def test_journal_roundtrip_and_seq_resume(tmp_path):
+    p = str(tmp_path / "j.jsonl")
+    with Journal(p) as j:
+        j.append("update_start", update=0, rows=100)
+        j.append("state_saved", update=0, step=1)
+    j2 = Journal(p)  # re-open: seq continues past committed records
+    rec = j2.append("activated", update=0, version=2)
+    assert rec["seq"] == 2
+    kinds = [r["kind"] for r in j2.replay()]
+    assert kinds == ["update_start", "state_saved", "activated"]
+    assert j2.last("state_saved")["step"] == 1
+    assert j2.last("nonexistent") is None
+    j2.close()
+
+
+def test_journal_torn_tail_dropped(tmp_path):
+    p = str(tmp_path / "j.jsonl")
+    j = Journal(p)
+    for i in range(3):
+        j.append("tick", i=i)
+    j.close()
+    # (a) half-written line, no newline — crash mid-append
+    with open(p, "a") as f:
+        f.write('{"seq": 3, "kind": "tick", "i"')
+    assert [r["i"] for r in Journal(p).replay()] == [0, 1, 2]
+    # (b) complete final line with a bad CRC — crash mid-fsync
+    with open(p, "w") as f:
+        pass
+    j = Journal(p)
+    for i in range(3):
+        j.append("tick", i=i)
+    j.close()
+    with open(p, "rb") as f:
+        lines = f.read().splitlines(keepends=True)
+    bad = lines[-1].replace(b'"crc": "crc32:', b'"crc": "crc32:f', 1)
+    with open(p, "wb") as f:
+        f.writelines(lines[:-1] + [bad])
+    assert [r["i"] for r in Journal(p).replay()] == [0, 1]
+    # appends after a torn tail keep the committed lineage intact
+    j = Journal(p)
+    j.append("tick", i=99)
+    assert [r["i"] for r in j.replay()] == [0, 1, 99]
+    j.close()
+
+
+def test_journal_midhistory_corruption_raises(tmp_path):
+    p = str(tmp_path / "j.jsonl")
+    j = Journal(p)
+    for i in range(4):
+        j.append("tick", i=i)
+    j.close()
+    with open(p, "rb") as f:
+        lines = f.read().splitlines(keepends=True)
+    lines[1] = lines[1].replace(b'"i": 1', b'"i": 7')  # committed record lies
+    with open(p, "wb") as f:
+        f.writelines(lines)
+    with pytest.raises(JournalError, match="mid-history"):
+        Journal(p).replay()
+
+
+def test_journal_concurrent_appends_never_interleave(tmp_path):
+    import threading
+
+    p = str(tmp_path / "j.jsonl")
+    j = Journal(p)
+
+    def writer(tid):
+        for i in range(20):
+            j.append("w", tid=tid, i=i)
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    j.close()
+    records = Journal(p).replay()
+    assert len(records) == 80
+    assert [r["seq"] for r in records] == list(range(80))
+
+
+# ---------------------------------------------------------------------------
+# chaos plans
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_roundtrip_and_exact_occurrence(tmp_path):
+    plan = FaultPlan([Fault(site="s", at=3, action="raise", times=2)])
+    p = str(tmp_path / "plan.json")
+    plan.save(p)
+    plan2 = FaultPlan.load(p)
+    for run in range(2):  # determinism: identical schedule on every run
+        fresh = FaultPlan.from_json(plan2.to_json())
+        fired = []
+        for i in range(1, 7):
+            try:
+                fresh.fire("s")
+                fired.append(False)
+            except InjectedFault:
+                fired.append(True)
+        assert fired == [False, False, True, True, False, False]
+
+
+def test_fire_is_noop_without_installed_plan():
+    chaos.uninstall()
+    chaos.fire("engine.transform", Z=np.zeros((2, 2)))  # must not raise
+    assert chaos.installed() is None
+
+
+def test_poison_fault_is_content_bound():
+    plan = FaultPlan([Fault(site="engine.transform", action="poison")])
+    clean = np.zeros((4, 3), np.float32)
+    dirty = clean.copy()
+    dirty[2, 1] = chaos.POISON_SENTINEL
+    plan.fire("engine.transform", Z=clean)  # order does not matter
+    plan.fire("engine.transform", Z=clean)
+    with pytest.raises(PoisonRequestError):
+        plan.fire("engine.transform", Z=dirty)
+    plan.fire("engine.transform", Z=clean)  # still clean after the hit
+
+
+def test_transient_and_hang_actions(tmp_path):
+    plan = FaultPlan(
+        [
+            Fault(site="a", at=1, action="raise_transient"),
+            Fault(site="b", at=1, action="hang", hang_ms=5.0),
+        ]
+    )
+    with pytest.raises(TransientEngineError):
+        plan.fire("a")
+    import time
+
+    t0 = time.perf_counter()
+    plan.fire("b")
+    assert time.perf_counter() - t0 >= 0.004
+    assert [f["action"] for f in plan.fired] == ["raise_transient", "hang"]
+
+
+# ---------------------------------------------------------------------------
+# batcher: degrade-don't-die
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def rmodel():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (600, 3)).astype(np.float32)
+    X[:, 2] = np.clip(X[:, 0] * X[:, 1] + rng.normal(0, 0.01, 600), 0, 1)
+    return api.fit(X, method="oavi:fast", psi=0.01, backend="local", cap_terms=64)
+
+
+@pytest.fixture(scope="module")
+def rengine(rmodel):
+    from repro.serving import EngineConfig
+
+    eng = TransformEngine([rmodel], config=EngineConfig(min_bucket=32, max_bucket=512))
+    eng.warmup()
+    return eng
+
+
+def _q(rows, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, 1, (rows, 3)).astype(np.float32)
+
+
+def test_batcher_happy_path_bit_identical_coalesced(rengine):
+    reqs = [_q(4, 1), _q(9, 2), _q(2, 3)]
+    expected = [np.asarray(rengine.transform(r)) for r in reqs]
+    bat = MicroBatcher(rengine, config=BatcherConfig(max_delay_ms=50.0))
+    futs = [bat.submit(r) for r in reqs]
+    bat.run_once()
+    for f, e in zip(futs, expected):
+        assert np.array_equal(f.result(), e)
+    assert bat.stats["batches"] == 1  # actually coalesced
+    assert bat.stats["retries"] == bat.stats["bisections"] == 0
+
+
+def test_batcher_transient_failure_retries_bit_identical(rengine):
+    reqs = [_q(4, 4), _q(6, 5)]
+    expected = [np.asarray(rengine.transform(r)) for r in reqs]
+    chaos.install(
+        FaultPlan([Fault(site="engine.transform", at=1, action="raise_transient")])
+    )
+    try:
+        bat = MicroBatcher(
+            rengine, config=BatcherConfig(max_delay_ms=50.0, backoff_ms=0.1)
+        )
+        futs = [bat.submit(r) for r in reqs]
+        bat.run_once()
+    finally:
+        chaos.uninstall()
+    for f, e in zip(futs, expected):
+        assert np.array_equal(f.result(), e)
+    assert bat.stats["retries"] == 1
+
+
+def test_batcher_retry_exhaustion_fails_whole_batch(rengine):
+    chaos.install(
+        FaultPlan(
+            [Fault(site="engine.transform", at=1, action="raise_transient", times=6)]
+        )
+    )
+    try:
+        bat = MicroBatcher(
+            rengine,
+            config=BatcherConfig(max_delay_ms=50.0, max_retries=2, backoff_ms=0.1),
+        )
+        fut = bat.submit(_q(4, 6))
+        bat.run_once()
+        with pytest.raises(TransientEngineError):
+            fut.result()
+        # a second batch burns the remaining faults (occurrences 4..6)...
+        fut2 = bat.submit(_q(4, 7))
+        bat.run_once()
+        with pytest.raises(TransientEngineError):
+            fut2.result()
+        # ...then the engine heals and serving resumes
+        fut3 = bat.submit(_q(4, 8))
+        bat.run_once()
+        assert fut3.result().shape[0] == 4
+    finally:
+        chaos.uninstall()
+
+
+def test_batcher_poison_request_fails_alone(rengine):
+    good = [_q(4, 9), _q(7, 10), _q(3, 11)]
+    expected = [np.asarray(rengine.transform(g)) for g in good]
+    poison = _q(5, 12)
+    poison[0, 0] = chaos.POISON_SENTINEL
+    chaos.install(FaultPlan([Fault(site="engine.transform", action="poison")]))
+    try:
+        bat = MicroBatcher(rengine, config=BatcherConfig(max_delay_ms=50.0))
+        futs = [bat.submit(g) for g in good]
+        bad = bat.submit(poison)
+        bat.run_once()
+    finally:
+        chaos.uninstall()
+    with pytest.raises(PoisonRequestError):
+        bad.result()
+    for f, e in zip(futs, expected):
+        assert np.array_equal(f.result(), e)  # innocent riders: bit-identical
+    assert bat.stats["bisections"] >= 1
+    assert bat.stats["isolated_failures"] == 1
+
+
+def test_batcher_poison_isolation_can_be_disabled(rengine):
+    poison = _q(3, 13)
+    poison[1, 1] = chaos.POISON_SENTINEL
+    chaos.install(FaultPlan([Fault(site="engine.transform", action="poison")]))
+    try:
+        bat = MicroBatcher(
+            rengine, config=BatcherConfig(max_delay_ms=50.0, isolate_failures=False)
+        )
+        good_fut = bat.submit(_q(4, 14))
+        bad_fut = bat.submit(poison)
+        bat.run_once()
+    finally:
+        chaos.uninstall()
+    # without isolation the whole coalesced batch fails together
+    with pytest.raises(PoisonRequestError):
+        bad_fut.result()
+    with pytest.raises(PoisonRequestError):
+        good_fut.result()
+
+
+def test_batcher_deadline_expires_queued_request(rengine):
+    import time
+
+    bat = MicroBatcher(rengine, config=BatcherConfig(max_delay_ms=0.0))
+    fut = bat.submit(_q(4, 15), deadline_ms=1.0)
+    time.sleep(0.01)
+    bat.run_once()
+    with pytest.raises(DeadlineExceeded):
+        fut.result()
+    assert bat.stats["deadline_expired"] == 1
+    # an un-deadlined request right behind it is unaffected
+    fut2 = bat.submit(_q(4, 16))
+    bat.run_once()
+    assert fut2.result().shape[0] == 4
+
+
+def test_batcher_stop_fails_pending_with_shutdown_error(rengine):
+    """Satellite: stop() must never strand a future — undrained requests
+    fail with ShutdownError, and submit-after-stop refuses loudly."""
+    bat = MicroBatcher(rengine, config=BatcherConfig(max_delay_ms=0.0))
+    futs = [bat.submit(_q(2, seed=20 + i)) for i in range(3)]
+    bat.stop(drain=False)
+    for f in futs:
+        with pytest.raises(ShutdownError):
+            f.result(timeout=5)
+    assert bat.stats["shutdown_failed"] == 3
+    with pytest.raises(ShutdownError, match="stopped"):
+        bat.submit(_q(2))
+    assert isinstance(ShutdownError("x"), RuntimeError)  # legacy catch sites
+
+
+def test_registry_activation_failure_keeps_serving_old_version(rmodel):
+    reg = ModelRegistry(warmup=False)
+    reg.register("m", rmodel, activate=True)
+    staged = reg.register("m", rmodel, activate=False)
+    chaos.install(FaultPlan([Fault(site="registry.activate", at=1, action="raise")]))
+    try:
+        with pytest.raises(InjectedFault):
+            reg.activate("m", staged.version)
+    finally:
+        chaos.uninstall()
+    assert reg.active_version("m") == 1  # pointer never moved
+    reg.activate("m", staged.version)  # transient fault: retry succeeds
+    assert reg.active_version("m") == staged.version
+
+
+# ---------------------------------------------------------------------------
+# crash recovery end to end (subprocess SIGKILL at a journaled phase)
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_kill_resume_bit_identical(tmp_path):
+    """SIGKILL the controller at a random journaled phase transition; the
+    resumed run must produce a final model bit-identical to an uninterrupted
+    run, serve with zero mismatches, and re-fold with zero warm recompiles."""
+    from repro.launch import chaos_vi
+
+    ref_dir = str(tmp_path / "reference")
+    proc = chaos_vi._run_controller(ref_dir)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    reference = chaos_vi._final_leaves(ref_dir)
+
+    rng = np.random.default_rng(int(os.environ.get("CHAOS_SEED", "0")))
+    phases = ["update_start", "state_saved", "staged", "activated"]
+    phase = phases[int(rng.integers(0, len(phases)))]
+    out = chaos_vi.scenario_kill_resume(str(tmp_path), reference, [(phase, 1)])
+    assert out["ok"] and out["kills"][0]["caught_up_rows"] == 4096
