@@ -19,6 +19,10 @@
 #                         (BENCH_online.json)
 #   make bench-resilience integrity overhead + crash-recovery benchmark
 #                         (BENCH_resilience.json)
+#   make bench-obs        observability overhead + sketch-fidelity benchmark
+#                         (BENCH_obs.json)
+#   make obs-smoke        continuous loop with obs export (results/obs/trace.json,
+#                         metrics.jsonl) + post-hoc obs_report render
 #   make chaos-smoke      fault-injection harness (repro.launch.chaos_vi --fast):
 #                         kill/resume, corrupt state, degraded activation,
 #                         transient faults, poison isolation, torn shards
@@ -34,7 +38,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-api lint ci bench bench-smoke bench-transform bench-fit \
         bench-serve bench-multiclass bench-streaming bench-online \
-        bench-resilience chaos-smoke serve-smoke continuous-smoke clean dev-deps
+        bench-resilience bench-obs chaos-smoke serve-smoke continuous-smoke \
+        obs-smoke clean dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -48,8 +53,8 @@ lint:
 ci: lint test chaos-smoke bench-smoke
 
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched,streaming_oavi,online_oavi,resilience_chaos
-	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve multiclass streaming online resilience
+	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched,streaming_oavi,online_oavi,resilience_chaos,obs_overhead
+	$(PYTHON) -m benchmarks.check_artifacts fit transform scaling serve multiclass streaming online resilience obs
 
 bench-transform:
 	$(PYTHON) -m benchmarks.run --only transform_fused
@@ -71,6 +76,15 @@ bench-online:
 
 bench-resilience:
 	$(PYTHON) -m benchmarks.run --only resilience_chaos
+
+bench-obs:
+	$(PYTHON) -m benchmarks.run --only obs_overhead
+
+obs-smoke:
+	$(PYTHON) -m repro.launch.continuous_vi --base-rows 2048 --increments 2 \
+		--increment-rows 1024 --shard-rows 1024 --chunk-rows 512 \
+		--min-update-rows 1024 --obs-dir results/obs
+	$(PYTHON) -m repro.launch.obs_report --obs-dir results/obs
 
 chaos-smoke:
 	$(PYTHON) -m repro.launch.chaos_vi --fast

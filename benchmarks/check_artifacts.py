@@ -16,7 +16,7 @@ import sys
 SCHEMA = "bench.v1"
 DEFAULT_NAMES = [
     "fit", "transform", "scaling", "serve", "multiclass", "streaming", "online",
-    "resilience",
+    "resilience", "obs",
 ]
 
 

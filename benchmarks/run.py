@@ -18,6 +18,7 @@ from . import (
     bench_fit,
     bench_ihb,
     bench_multiclass,
+    bench_obs,
     bench_online,
     bench_ordering,
     bench_performance,
@@ -46,6 +47,7 @@ BENCHES = {
     "streaming_oavi": bench_streaming.run,
     "online_oavi": bench_online.run,
     "resilience_chaos": bench_resilience.run,
+    "obs_overhead": bench_obs.run,
     "roofline": roofline.run,
 }
 

@@ -47,6 +47,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from .. import obs
 from ..resilience import chaos
 from ..resilience.integrity import IntegrityError, checksum_bytes, verify_file
 
@@ -82,6 +83,11 @@ def _decode_leaf(arr: np.ndarray, stored_as: Optional[str]) -> np.ndarray:
 
 def save(directory: str, step: int, tree, metadata: Optional[Dict] = None) -> str:
     """Synchronous atomic save.  Returns the committed checkpoint path."""
+    with obs.span("checkpoint/save", step=step):
+        return _save(directory, step, tree, metadata)
+
+
+def _save(directory: str, step: int, tree, metadata: Optional[Dict] = None) -> str:
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -132,6 +138,8 @@ def save(directory: str, step: int, tree, metadata: Optional[Dict] = None) -> st
         shutil.rmtree(final)
     os.rename(tmp, final)
     chaos.fire("store.committed", path=final)
+    obs.event("checkpoint/committed", step=step, leaves=len(leaves))
+    obs.registry().counter("checkpoint.saves").inc()
     return final
 
 
@@ -272,6 +280,11 @@ def restore(
     path = os.path.join(directory, f"step_{step:08d}")
     if not os.path.exists(os.path.join(path, _MARKER)):
         raise FileNotFoundError(f"no committed checkpoint at {path}")
+    with obs.span("checkpoint/restore", step=step):
+        return _restore_committed(path, like, shardings, verify_integrity, directory, step)
+
+
+def _restore_committed(path, like, shardings, verify_integrity, directory, step):
     if verify_integrity:
         verify(directory, step)
     with open(os.path.join(path, _MANIFEST)) as f:

@@ -54,7 +54,6 @@ data-sharded ``shard_map`` psum path — see
 from __future__ import annotations
 
 import itertools
-import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -64,6 +63,7 @@ import numpy as np
 from . import ihb as ihb_mod
 from . import terms as terms_mod
 from .oavi import (
+    FitScope,
     Generator,
     OAVIConfig,
     OAVIModel,
@@ -73,7 +73,6 @@ from .oavi import (
     class_batchable,
     collect_degree,
     degree_step_entry,
-    finalize_fit_stats,
     init_fit_stats,
     pow2_bucket,
 )
@@ -133,7 +132,6 @@ def fit_classes(
             "config is not class-batchable (requires engine='fast', "
             "inverse_engine='inverse', wihb=False); use sequential fits"
         )
-    t_start = time.perf_counter()
     dtype = config.jax_dtype()
     Xs = [np.asarray(X) for X in Xs]
     if len(Xs) == 0:
@@ -152,178 +150,179 @@ def fit_classes(
         raise ValueError("all classes must be (m_c, n) with one shared n")
     ms = [X.shape[0] for X in Xs]
 
-    # per-class Pearson ordering (each class permutes its own features)
-    perms: List[Optional[np.ndarray]] = []
-    Xp: List[np.ndarray] = []
-    for X in Xs:
-        perm = None
-        if config.ordering in ("pearson", "reverse_pearson"):
-            perm = pearson_order(X, reverse=(config.ordering == "reverse_pearson"))
-            X = X[:, perm]
-        perms.append(perm)
-        Xp.append(X)
-
-    shards = 1
-    if mesh is not None:
-        from . import distributed as distributed_mod
-
-        shards = distributed_mod.num_data_shards(mesh, data_axes)
-    mc = m_cap if m_cap is not None else pow2_bucket(max(ms))
-    mc = _round_up(max(mc, max(ms)), shards)
-
-    # stacked rows + per-class row masks (mask IS the constant column, so
-    # padded rows are zero in every column of A)
-    np_dt = _np_dtype(config.dtype)
-    Xstack = np.zeros((k, mc, n), np_dt)
-    mask = np.zeros((k, mc), np_dt)
-    for c, X in enumerate(Xp):
-        Xstack[c, : ms[c]] = X
-        mask[c, : ms[c]] = 1.0
-    Xd = jnp.asarray(Xstack)
-    Lcap = pow2_bucket(config.cap_terms)
-    A = jnp.zeros((k, mc, Lcap), dtype).at[:, :, 0].set(jnp.asarray(mask))
-    # normalized Gram convention: AtA[0,0] = ||mask_c||^2 / m_c = 1 per class
-    state = ihb_mod.batch_state(
-        ihb_mod.init_state(
-            Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
-        ),
-        k,
-    )
-    if mesh is not None:
-        from jax.sharding import NamedSharding, PartitionSpec as P
-
-        from . import distributed as distributed_mod
-
-        bspec = NamedSharding(mesh, distributed_mod.class_data_spec(data_axes))
-        rep = NamedSharding(mesh, P())
-        Xd = jax.device_put(Xd, bspec)
-        A = jax.device_put(A, bspec)
-        state = jax.device_put(state, rep)
-    else:
-        bspec = rep = None
-
-    books = [terms_mod.TermBook(n=n) for _ in range(k)]
-    generators: List[List[Generator]] = [[] for _ in range(k)]
-    ells = [1] * k
-    active = [True] * k
-
-    entry = _batched_entry(config, mesh, data_axes)
-    m_total = jnp.asarray([float(m) for m in ms], dtype)
-
     group = next(_GROUP_IDS)
     batch = {
         "group": group,
         "size": k,
-        "m_cap": int(mc),
+        "m_cap": 0,  # filled once the shared row bucket is known
         "recompiles": 0,
         "regrowths": 0,
         "degree_times": [],
+        "m": int(sum(ms)),
+        "n": n,
     }
-    per_class = [init_fit_stats(ms[c], n) for c in range(k)]
+    scope = FitScope(batch, backend="class_batch")
+    with scope:
+        # per-class Pearson ordering (each class permutes its own features)
+        perms: List[Optional[np.ndarray]] = []
+        Xp: List[np.ndarray] = []
+        for X in Xs:
+            perm = None
+            if config.ordering in ("pearson", "reverse_pearson"):
+                perm = pearson_order(X, reverse=(config.ordering == "reverse_pearson"))
+                X = X[:, perm]
+            perms.append(perm)
+            Xp.append(X)
 
-    d = 0
-    while any(active):
-        d += 1
-        if d > config.max_degree:
+        shards = 1
+        if mesh is not None:
+            from . import distributed as distributed_mod
+
+            shards = distributed_mod.num_data_shards(mesh, data_axes)
+        mc = m_cap if m_cap is not None else pow2_bucket(max(ms))
+        mc = _round_up(max(mc, max(ms)), shards)
+        batch["m_cap"] = int(mc)
+
+        # stacked rows + per-class row masks (mask IS the constant column, so
+        # padded rows are zero in every column of A)
+        np_dt = _np_dtype(config.dtype)
+        Xstack = np.zeros((k, mc, n), np_dt)
+        mask = np.zeros((k, mc), np_dt)
+        for c, X in enumerate(Xp):
+            Xstack[c, : ms[c]] = X
+            mask[c, : ms[c]] = 1.0
+        Xd = jnp.asarray(Xstack)
+        Lcap = pow2_bucket(config.cap_terms)
+        A = jnp.zeros((k, mc, Lcap), dtype).at[:, :, 0].set(jnp.asarray(mask))
+        # normalized Gram convention: AtA[0,0] = ||mask_c||^2 / m_c = 1 per class
+        state = ihb_mod.batch_state(
+            ihb_mod.init_state(
+                Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
+            ),
+            k,
+        )
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from . import distributed as distributed_mod
+
+            bspec = NamedSharding(mesh, distributed_mod.class_data_spec(data_axes))
+            rep = NamedSharding(mesh, P())
+            Xd = jax.device_put(Xd, bspec)
+            A = jax.device_put(A, bspec)
+            state = jax.device_put(state, rep)
+        else:
+            bspec = rep = None
+
+        books = [terms_mod.TermBook(n=n) for _ in range(k)]
+        generators: List[List[Generator]] = [[] for _ in range(k)]
+        ells = [1] * k
+        active = [True] * k
+
+        entry = _batched_entry(config, mesh, data_axes)
+        m_total = jnp.asarray([float(m) for m in ms], dtype)
+
+        per_class = [init_fit_stats(ms[c], n) for c in range(k)]
+
+        d = 0
+        while any(active):
+            d += 1
+            if d > config.max_degree:
+                for c in range(k):
+                    if active[c]:
+                        per_class[c]["termination"] = f"max_degree={config.max_degree}"
+                break
+            borders: List[List] = []
             for c in range(k):
-                if active[c]:
-                    per_class[c]["termination"] = f"max_degree={config.max_degree}"
-            break
-        borders: List[List] = []
-        for c in range(k):
-            b = books[c].border(d) if active[c] else []
-            if active[c] and not b:
-                active[c] = False
-                per_class[c]["termination"] = "empty_border"
-            borders.append(b)
-        if not any(active):
-            break
-        Ks = [len(b) for b in borders]
-        for c in range(k):
-            if borders[c]:
-                per_class[c]["border_sizes"].append(Ks[c])
-                per_class[c]["degrees"].append(d)
+                b = books[c].border(d) if active[c] else []
+                if active[c] and not b:
+                    active[c] = False
+                    per_class[c]["termination"] = "empty_border"
+                borders.append(b)
+            if not any(active):
+                break
+            Ks = [len(b) for b in borders]
+            for c in range(k):
+                if borders[c]:
+                    per_class[c]["border_sizes"].append(Ks[c])
+                    per_class[c]["degrees"].append(d)
 
-        # shared capacity: regrow when the largest class overflows
-        while max(ells[c] + Ks[c] for c in range(k)) > Lcap:
-            Lcap *= 2
-            batch["regrowths"] += 1
-            A = jax.lax.dynamic_update_slice(
-                jnp.zeros((k, mc, Lcap), dtype), A, (0, 0, 0)
-            )
-            state = ihb_mod.grow_state(state, Lcap)
-            if mesh is not None:
-                A = jax.device_put(A, bspec)
-                state = jax.device_put(state, rep)
+            # shared capacity: regrow when the largest class overflows
+            while max(ells[c] + Ks[c] for c in range(k)) > Lcap:
+                Lcap *= 2
+                scope.regrowth(Lcap)
+                A = jax.lax.dynamic_update_slice(
+                    jnp.zeros((k, mc, Lcap), dtype), A, (0, 0, 0)
+                )
+                state = ihb_mod.grow_state(state, Lcap)
+                if mesh is not None:
+                    A = jax.device_put(A, bspec)
+                    state = jax.device_put(state, rep)
 
-        Kcap = max(config.cap_border, pow2_bucket(max(Ks)))
-        parents = np.zeros((k, Kcap), np.int32)
-        vars_ = np.zeros((k, Kcap), np.int32)
-        valid = np.zeros((k, Kcap), bool)  # done classes: all-False -> no-op
-        for c in range(k):
-            if borders[c]:
-                parents[c], vars_[c], valid[c] = border_index_arrays(
-                    books[c], borders[c], Kcap
+            Kcap = max(config.cap_border, pow2_bucket(max(Ks)))
+            parents = np.zeros((k, Kcap), np.int32)
+            vars_ = np.zeros((k, Kcap), np.int32)
+            valid = np.zeros((k, Kcap), bool)  # done classes: all-False -> no-op
+            for c in range(k):
+                if borders[c]:
+                    parents[c], vars_[c], valid[c] = border_index_arrays(
+                        books[c], borders[c], Kcap
+                    )
+
+            scope.note_signature(entry.seen, (k, mc, n, Lcap, Kcap, str(dtype)))
+
+            with scope.degree(d, K=int(max(Ks)), k=k):
+                A, st = entry.fn(
+                    A,
+                    Xd,
+                    state,
+                    jnp.asarray(ells, jnp.int32),
+                    jnp.asarray(parents),
+                    jnp.asarray(vars_),
+                    jnp.asarray(valid),
+                    m_total,
+                )
+                state = st.ihb
+                accepted, mses, coeffs, iters = jax.device_get(
+                    (st.accepted, st.mses, st.coeffs, st.iters)
                 )
 
-        sig = (k, mc, n, Lcap, Kcap, str(dtype))
-        if sig not in entry.seen:
-            entry.seen.add(sig)
-            batch["recompiles"] += 1
+            for c in range(k):
+                if not borders[c]:
+                    continue
+                per_class[c]["solver_iters"].append(int(iters[c, : Ks[c]].sum()))
+                ells[c] = collect_degree(
+                    books[c], borders[c], accepted[c], mses[c], coeffs[c], generators[c]
+                )
 
-        t_deg = time.perf_counter()
-        A, st = entry.fn(
-            A,
-            Xd,
-            state,
-            jnp.asarray(ells, jnp.int32),
-            jnp.asarray(parents),
-            jnp.asarray(vars_),
-            jnp.asarray(valid),
-            m_total,
-        )
-        state = st.ihb
-        accepted, mses, coeffs, iters = jax.device_get(
-            (st.accepted, st.mses, st.coeffs, st.iters)
-        )
-        batch["degree_times"].append(round(time.perf_counter() - t_deg, 6))
-
+        models: List[OAVIModel] = []
         for c in range(k):
-            if not borders[c]:
-                continue
-            per_class[c]["solver_iters"].append(int(iters[c, : Ks[c]].sum()))
-            ells[c] = collect_degree(
-                books[c], borders[c], accepted[c], mses[c], coeffs[c], generators[c]
+            stats = per_class[c]
+            # shared per-batch quantities: one compile/regrowth schedule and one
+            # wall clock serve all k classes (aggregate once per group)
+            stats["recompiles"] = batch["recompiles"]
+            stats["regrowths"] = batch["regrowths"]
+            stats["degree_times"] = list(batch["degree_times"])
+            stats["class_batch"] = {
+                "group": batch["group"],
+                "size": k,
+                "index": c,
+                "m_cap": batch["m_cap"],
+                "recompiles": batch["recompiles"],
+                "regrowths": batch["regrowths"],
+            }
+            scope.finalize(books[c], generators[c], Lcap, config, stats=stats)
+            models.append(
+                OAVIModel(
+                    n=n,
+                    psi=config.psi,
+                    book=books[c],
+                    generators=generators[c],
+                    feature_perm=perms[c],
+                    stats=stats,
+                    dtype=config.dtype,
+                )
             )
-
-    models: List[OAVIModel] = []
-    for c in range(k):
-        stats = per_class[c]
-        # shared per-batch quantities: one compile/regrowth schedule and one
-        # wall clock serve all k classes (aggregate once per group)
-        stats["recompiles"] = batch["recompiles"]
-        stats["regrowths"] = batch["regrowths"]
-        stats["degree_times"] = list(batch["degree_times"])
-        stats["class_batch"] = {
-            "group": batch["group"],
-            "size": k,
-            "index": c,
-            "m_cap": batch["m_cap"],
-            "recompiles": batch["recompiles"],
-            "regrowths": batch["regrowths"],
-        }
-        finalize_fit_stats(stats, books[c], generators[c], Lcap, config, t_start)
-        models.append(
-            OAVIModel(
-                n=n,
-                psi=config.psi,
-                book=books[c],
-                generators=generators[c],
-                feature_perm=perms[c],
-                stats=stats,
-                dtype=config.dtype,
-            )
-        )
     return models
 
 

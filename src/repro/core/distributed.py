@@ -31,7 +31,6 @@ with data columns) and contribute nothing to any Gram quantity.
 
 from __future__ import annotations
 
-import time
 from typing import List, Sequence, Tuple
 
 import jax
@@ -53,6 +52,7 @@ else:
 from . import ihb as ihb_mod
 from . import terms as terms_mod
 from .oavi import (
+    FitScope,
     Generator,
     OAVIConfig,
     OAVIModel,
@@ -60,10 +60,8 @@ from .oavi import (
     border_index_arrays,
     collect_degree,
     degree_step_entry,
-    finalize_fit_stats,
     init_fit_stats,
     pow2_bucket,
-    sample_memory_stats,
 )
 from .ordering import pearson_order
 
@@ -165,107 +163,102 @@ def fit(
 ) -> OAVIModel:
     """Distributed OAVI: same semantics as :func:`repro.core.oavi.fit`, with
     the sample axis sharded over ``data_axes`` of ``mesh``."""
-    t_start = time.perf_counter()
     dtype = config.jax_dtype()
     X = np.asarray(X)
     m, n = X.shape
-
-    perm = None
-    if config.ordering in ("pearson", "reverse_pearson"):
-        perm = pearson_order(X, reverse=(config.ordering == "reverse_pearson"))
-        X = X[:, perm]
-
-    Xd, mask, m_true = shard_samples(X, mesh, data_axes, dtype)
-    m_pad = Xd.shape[0]
-    book = terms_mod.TermBook(n=n)
-    generators: List[Generator] = []
-
-    Lcap = pow2_bucket(config.cap_terms)
-    dspec = data_spec(data_axes)
-    a_shard = NamedSharding(mesh, dspec)
-    rep = NamedSharding(mesh, P())
-    # constant column = sample mask (zero on padded rows)
-    A = jnp.zeros((m_pad, Lcap), dtype).at[:, 0:1].set(mask)
-    A = jax.device_put(A, a_shard)
-    # normalized convention: AtA[0,0] = ||mask||^2 / m = 1
-    state = ihb_mod.init_state(
-        Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
-    )
-    state = jax.device_put(state, rep)
-    ell = 1
-
-    axes = tuple(data_axes)
-    entry = degree_step_entry(
-        config,
-        backend_key=(mesh, axes),
-        jitted_builder=lambda: make_sharded_degree_step(config, mesh, axes),
-    )
-    m_total = jnp.asarray(float(m_true), dtype)
-
     stats = init_fit_stats(
-        m_true,
+        m,
         n,
-        m_padded=m_pad,
         mesh={a: int(mesh.shape[a]) for a in mesh.axis_names},
         data_axes=list(data_axes),
     )
 
-    d = 0
-    while True:
-        d += 1
-        if d > config.max_degree:
-            stats["termination"] = f"max_degree={config.max_degree}"
-            break
-        border = book.border(d)
-        if not border:
-            stats["termination"] = "empty_border"
-            break
-        K = len(border)
-        stats["border_sizes"].append(K)
-        stats["degrees"].append(d)
+    with FitScope(stats, backend="sharded") as scope:
+        perm = None
+        if config.ordering in ("pearson", "reverse_pearson"):
+            perm = pearson_order(X, reverse=(config.ordering == "reverse_pearson"))
+            X = X[:, perm]
 
-        # capacity management: device-side regrowth into the next pow2 bucket
-        while ell + K > Lcap:
-            Lcap *= 2
-            stats["regrowths"] += 1
-            A = jax.device_put(
-                jax.lax.dynamic_update_slice(
-                    jnp.zeros((m_pad, Lcap), dtype), A, (0, 0)
-                ),
-                a_shard,
-            )
-            state = jax.device_put(ihb_mod.grow_state(state, Lcap), rep)
+        Xd, mask, m_true = shard_samples(X, mesh, data_axes, dtype)
+        m_pad = Xd.shape[0]
+        stats["m_padded"] = m_pad
+        book = terms_mod.TermBook(n=n)
+        generators: List[Generator] = []
 
-        Kcap = max(config.cap_border, pow2_bucket(K))
-        parents, vars_, valid = border_index_arrays(book, border, Kcap)
-
-        sig = (m_pad, n, Lcap, Kcap, str(dtype))
-        if sig not in entry.seen:
-            entry.seen.add(sig)
-            stats["recompiles"] += 1
-
-        t_deg = time.perf_counter()
-        A, st = entry.fn(
-            A,
-            Xd,
-            state,
-            jnp.asarray(ell, jnp.int32),
-            jnp.asarray(parents),
-            jnp.asarray(vars_),
-            jnp.asarray(valid),
-            m_total,
+        Lcap = pow2_bucket(config.cap_terms)
+        dspec = data_spec(data_axes)
+        a_shard = NamedSharding(mesh, dspec)
+        rep = NamedSharding(mesh, P())
+        # constant column = sample mask (zero on padded rows)
+        A = jnp.zeros((m_pad, Lcap), dtype).at[:, 0:1].set(mask)
+        A = jax.device_put(A, a_shard)
+        # normalized convention: AtA[0,0] = ||mask||^2 / m = 1
+        state = ihb_mod.init_state(
+            Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
         )
-        state = st.ihb
-        accepted = np.asarray(st.accepted)
-        mses = np.asarray(st.mses)
-        coeffs = np.asarray(st.coeffs)
-        stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
-        stats["solver_iters"].append(int(np.asarray(st.iters)[:K].sum()))
-        sample_memory_stats(stats)
+        state = jax.device_put(state, rep)
+        ell = 1
 
-        ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+        axes = tuple(data_axes)
+        entry = degree_step_entry(
+            config,
+            backend_key=(mesh, axes),
+            jitted_builder=lambda: make_sharded_degree_step(config, mesh, axes),
+        )
+        m_total = jnp.asarray(float(m_true), dtype)
 
-    finalize_fit_stats(stats, book, generators, Lcap, config, t_start)
+        d = 0
+        while True:
+            d += 1
+            if d > config.max_degree:
+                stats["termination"] = f"max_degree={config.max_degree}"
+                break
+            border = book.border(d)
+            if not border:
+                stats["termination"] = "empty_border"
+                break
+            K = len(border)
+            stats["border_sizes"].append(K)
+            stats["degrees"].append(d)
+
+            # capacity management: device-side regrowth into the next pow2 bucket
+            while ell + K > Lcap:
+                Lcap *= 2
+                scope.regrowth(Lcap)
+                A = jax.device_put(
+                    jax.lax.dynamic_update_slice(
+                        jnp.zeros((m_pad, Lcap), dtype), A, (0, 0)
+                    ),
+                    a_shard,
+                )
+                state = jax.device_put(ihb_mod.grow_state(state, Lcap), rep)
+
+            Kcap = max(config.cap_border, pow2_bucket(K))
+            parents, vars_, valid = border_index_arrays(book, border, Kcap)
+
+            scope.note_signature(entry.seen, (m_pad, n, Lcap, Kcap, str(dtype)))
+
+            with scope.degree(d, K=K):
+                A, st = entry.fn(
+                    A,
+                    Xd,
+                    state,
+                    jnp.asarray(ell, jnp.int32),
+                    jnp.asarray(parents),
+                    jnp.asarray(vars_),
+                    jnp.asarray(valid),
+                    m_total,
+                )
+                state = st.ihb
+                accepted = np.asarray(st.accepted)
+                mses = np.asarray(st.mses)
+                coeffs = np.asarray(st.coeffs)
+                iters = np.asarray(st.iters)
+            stats["solver_iters"].append(int(iters[:K].sum()))
+
+            ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+
+        scope.finalize(book, generators, Lcap, config)
     return OAVIModel(
         n=n,
         psi=config.psi,

@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..kernels import ops as kernel_ops
 from . import ihb as ihb_mod
 from . import terms as terms_mod
@@ -714,23 +715,150 @@ def init_fit_stats(m: int, n: int, **extra) -> Dict:
     return stats
 
 
-def finalize_fit_stats(
-    stats: Dict,
-    book: terms_mod.TermBook,
-    generators: List[Generator],
-    Lcap: int,
-    config: OAVIConfig,
-    t_start: float,
-) -> Dict:
-    """Fill the summary fields every fit loop reports."""
-    sample_memory_stats(stats)
-    stats["time_total"] = time.perf_counter() - t_start
-    stats["num_G"] = len(generators)
-    stats["num_O"] = len(book)
-    stats["G_plus_O"] = len(generators) + len(book)
-    stats["Lcap_final"] = int(Lcap)
-    stats["thm43_bound"] = terms_mod.theorem_4_3_size_bound(config.psi, book.n)
-    return stats
+class _DegreeScope:
+    """One degree step's timing window (see :class:`FitScope.degree`)."""
+
+    __slots__ = ("_scope", "_span", "_t0")
+
+    def __init__(self, scope: "FitScope", span) -> None:
+        self._scope = scope
+        self._span = span
+
+    def __enter__(self) -> "_DegreeScope":
+        self._span.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        t1 = time.perf_counter()
+        self._span.__exit__(exc_type, exc, tb)
+        scope = self._scope
+        dur = t1 - self._t0
+        if scope._t_first_degree is None:
+            scope._t_first_degree = self._t0
+        scope._t_last_degree_end = t1
+        scope._time_degrees += dur
+        scope.stats["degree_times"].append(round(dur, 6))
+        sample_memory_stats(scope.stats)
+
+
+class FitScope:
+    """Instrumentation shared by every fit loop (local, sharded,
+    class-batched, streaming, online).
+
+    Owns the *timing contract* for fit ``stats`` — defined here once so the
+    loops can no longer disagree on what ``time_total`` covers (asserted by
+    ``tests/test_obs.py``)::
+
+        time_total == time_setup + time_degrees + time_finalize
+                      + time_unattributed          # exact, by construction
+
+    * ``time_total``    wall time from scope entry to :meth:`finalize`.
+    * ``time_setup``    entry -> first degree step: feature ordering, initial
+      buffers, the first border (for the streaming fit this includes the
+      Pearson moment pass when ordering is enabled).
+    * ``time_degrees``  unrounded sum of the per-degree segments.  Each
+      segment runs from the degree step's dispatch to the host sync of its
+      outputs, so it *includes* any jit compile the step triggered —
+      ``sum(stats["degree_times"])`` equals it up to the 6-decimal rounding
+      of the public list.
+    * ``time_finalize`` last degree's end -> :meth:`finalize` (final host
+      bookkeeping and model assembly).
+    * ``time_unattributed`` the residual: host combinatorics between degree
+      steps (border construction, accept/reject collection).
+
+    Timing itself is always on (two clock reads per degree); the global obs
+    recorder sees the same segments as spans/events only when
+    :func:`repro.obs.enabled` — and enabling it never changes what the fit
+    computes (bit-identity asserted by ``benchmarks/bench_obs.py``).
+    """
+
+    def __init__(self, stats: Dict, backend: str = "local", name: str = "fit") -> None:
+        self.stats = stats
+        self.backend = backend
+        attrs = {k: stats[k] for k in ("m", "n") if stats.get(k) is not None}
+        self._span = obs.span(name, backend=backend, **attrs)
+        self._t_start = time.perf_counter()
+        self._t_first_degree: Optional[float] = None
+        self._t_last_degree_end: Optional[float] = None
+        self._time_degrees = 0.0
+        self._timing: Optional[Dict] = None
+
+    def __enter__(self) -> "FitScope":
+        self._span.__enter__()
+        self._t_start = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self._span.__exit__(exc_type, exc, tb)
+
+    def degree(self, d: int, **attrs) -> _DegreeScope:
+        """Context manager timing one degree step.  On exit it appends the
+        (rounded) segment to ``stats["degree_times"]``, accumulates the
+        unrounded sum for the timing contract, and samples memory."""
+        return _DegreeScope(
+            self, obs.span("fit/degree", d=d, backend=self.backend, **attrs)
+        )
+
+    def note_signature(self, seen: set, sig, kind: str = "fit/compile") -> bool:
+        """Count a compile against this fit iff ``sig`` is new to the jitted
+        step's host-side trace-cache mirror; emits the compile event the
+        degree-step cache owes the trace."""
+        if sig in seen:
+            return False
+        seen.add(sig)
+        self.stats["recompiles"] += 1
+        obs.registry().counter("fit.recompiles", backend=self.backend).inc()
+        obs.event(kind, backend=self.backend, signature=str(sig))
+        return True
+
+    def regrowth(self, Lcap: int) -> None:
+        self.stats["regrowths"] += 1
+        obs.registry().counter("fit.regrowths", backend=self.backend).inc()
+        obs.event("fit/regrowth", backend=self.backend, Lcap=int(Lcap))
+
+    def timing_fields(self) -> Dict:
+        """The timing-contract fields, computed once (shared by every class
+        of a batched fit so their stats agree to the bit)."""
+        if self._timing is None:
+            t_end = time.perf_counter()
+            total = t_end - self._t_start
+            if self._t_first_degree is None:
+                setup, degrees, fin = total, 0.0, 0.0
+            else:
+                setup = self._t_first_degree - self._t_start
+                degrees = self._time_degrees
+                fin = t_end - self._t_last_degree_end
+            self._timing = {
+                "time_total": total,
+                "time_setup": setup,
+                "time_degrees": degrees,
+                "time_finalize": fin,
+                "time_unattributed": total - setup - degrees - fin,
+            }
+        return self._timing
+
+    def finalize(
+        self,
+        book: terms_mod.TermBook,
+        generators: List[Generator],
+        Lcap: int,
+        config: OAVIConfig,
+        stats: Optional[Dict] = None,
+    ) -> Dict:
+        """Fill the summary + timing fields every fit loop reports."""
+        stats = self.stats if stats is None else stats
+        sample_memory_stats(stats)
+        stats.update(self.timing_fields())
+        stats["num_G"] = len(generators)
+        stats["num_O"] = len(book)
+        stats["G_plus_O"] = len(generators) + len(book)
+        stats["Lcap_final"] = int(Lcap)
+        stats["thm43_bound"] = terms_mod.theorem_4_3_size_bound(config.psi, book.n)
+        obs.registry().histogram("fit.seconds", backend=self.backend).observe(
+            stats["time_total"]
+        )
+        return stats
 
 
 def border_index_arrays(book: terms_mod.TermBook, border, Kcap: int):
@@ -771,85 +899,81 @@ def fit(
     _degree_step_factory=None,
 ) -> OAVIModel:
     """Run OAVI on ``X`` (m, n) in [0,1]^n.  Returns the fitted model."""
-    t_start = time.perf_counter()
     dtype = config.jax_dtype()
     X = np.asarray(X)
     m, n = X.shape
-
-    perm = None
-    if config.ordering in ("pearson", "reverse_pearson"):
-        perm = pearson_order(X, reverse=(config.ordering == "reverse_pearson"))
-        X = X[:, perm]
-
-    Xd = jnp.asarray(X, dtype)
-    book = terms_mod.TermBook(n=n)
-    generators: List[Generator] = []
-
-    Lcap = pow2_bucket(config.cap_terms)
-    A = jnp.zeros((m, Lcap), dtype).at[:, 0].set(1.0)
-    # normalized Gram convention: AtA[0,0] = ||1||^2 / m = 1
-    state = ihb_mod.init_state(
-        Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
-    )
-    ell = 1
-
-    entry = degree_step_entry(config, factory=_degree_step_factory)
-    m_total = jnp.asarray(float(m), dtype)
-
     stats = init_fit_stats(m, n)
 
-    d = 0
-    while True:
-        d += 1
-        if d > config.max_degree:
-            stats["termination"] = f"max_degree={config.max_degree}"
-            break
-        border = book.border(d)
-        if not border:
-            stats["termination"] = "empty_border"
-            break
-        K = len(border)
-        stats["border_sizes"].append(K)
-        stats["degrees"].append(d)
+    with FitScope(stats, backend="local") as scope:
+        perm = None
+        if config.ordering in ("pearson", "reverse_pearson"):
+            perm = pearson_order(X, reverse=(config.ordering == "reverse_pearson"))
+            X = X[:, perm]
 
-        # capacity management: device-side regrowth into the next pow2 bucket
-        while ell + K > Lcap:
-            Lcap *= 2
-            stats["regrowths"] += 1
-            A = jax.lax.dynamic_update_slice(jnp.zeros((m, Lcap), dtype), A, (0, 0))
-            state = ihb_mod.grow_state(state, Lcap)
+        Xd = jnp.asarray(X, dtype)
+        book = terms_mod.TermBook(n=n)
+        generators: List[Generator] = []
 
-        Kcap = max(config.cap_border, pow2_bucket(K))
-        parents, vars_, valid = border_index_arrays(book, border, Kcap)
-
-        sig = (m, n, Lcap, Kcap, str(dtype))
-        if sig not in entry.seen:
-            entry.seen.add(sig)
-            stats["recompiles"] += 1
-
-        t_deg = time.perf_counter()
-        A, st = entry.fn(
-            A,
-            Xd,
-            state,
-            jnp.asarray(ell, jnp.int32),
-            jnp.asarray(parents),
-            jnp.asarray(vars_),
-            jnp.asarray(valid),
-            m_total,
+        Lcap = pow2_bucket(config.cap_terms)
+        A = jnp.zeros((m, Lcap), dtype).at[:, 0].set(1.0)
+        # normalized Gram convention: AtA[0,0] = ||1||^2 / m = 1
+        state = ihb_mod.init_state(
+            Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
         )
-        state = st.ihb
-        accepted = np.asarray(st.accepted)
-        mses = np.asarray(st.mses)
-        coeffs = np.asarray(st.coeffs)
-        iters = np.asarray(st.iters)
-        stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
-        stats["solver_iters"].append(int(iters[:K].sum()))
-        sample_memory_stats(stats)
+        ell = 1
 
-        ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+        entry = degree_step_entry(config, factory=_degree_step_factory)
+        m_total = jnp.asarray(float(m), dtype)
 
-    finalize_fit_stats(stats, book, generators, Lcap, config, t_start)
+        d = 0
+        while True:
+            d += 1
+            if d > config.max_degree:
+                stats["termination"] = f"max_degree={config.max_degree}"
+                break
+            border = book.border(d)
+            if not border:
+                stats["termination"] = "empty_border"
+                break
+            K = len(border)
+            stats["border_sizes"].append(K)
+            stats["degrees"].append(d)
+
+            # capacity management: device-side regrowth into the next pow2 bucket
+            while ell + K > Lcap:
+                Lcap *= 2
+                scope.regrowth(Lcap)
+                A = jax.lax.dynamic_update_slice(
+                    jnp.zeros((m, Lcap), dtype), A, (0, 0)
+                )
+                state = ihb_mod.grow_state(state, Lcap)
+
+            Kcap = max(config.cap_border, pow2_bucket(K))
+            parents, vars_, valid = border_index_arrays(book, border, Kcap)
+
+            scope.note_signature(entry.seen, (m, n, Lcap, Kcap, str(dtype)))
+
+            with scope.degree(d, K=K):
+                A, st = entry.fn(
+                    A,
+                    Xd,
+                    state,
+                    jnp.asarray(ell, jnp.int32),
+                    jnp.asarray(parents),
+                    jnp.asarray(vars_),
+                    jnp.asarray(valid),
+                    m_total,
+                )
+                state = st.ihb
+                accepted = np.asarray(st.accepted)
+                mses = np.asarray(st.mses)
+                coeffs = np.asarray(st.coeffs)
+                iters = np.asarray(st.iters)
+            stats["solver_iters"].append(int(iters[:K].sum()))
+
+            ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+
+        scope.finalize(book, generators, Lcap, config)
     return OAVIModel(
         n=n,
         psi=config.psi,

@@ -75,6 +75,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from .. import obs
+
 
 # ---------------------------------------------------------------------------
 # Data: deterministic arrival batches over the planted-polynomial stream
@@ -197,6 +199,12 @@ def main(argv=None) -> Dict:
                     help="FitState checkpoint steps retained under workdir/state")
     ap.add_argument("--no-resume", action="store_true",
                     help="ignore an existing journal/state and restart from scratch")
+    ap.add_argument("--journal-max-records", type=int, default=0,
+                    help="compact the journal after an activation once it "
+                    "exceeds this many records (0: never compact)")
+    ap.add_argument("--obs-dir", type=str, default=None,
+                    help="export obs artifacts here on exit: trace.json "
+                    "(Chrome/Perfetto) and metrics.jsonl")
     args = ap.parse_args(argv)
 
     if args.increment_rows % args.shard_rows or args.base_rows % args.shard_rows:
@@ -328,6 +336,15 @@ def main(argv=None) -> Dict:
                 rows=result.state.num_rows,
             )
             chaos.fire("controller.activated", update=idx)
+            obs.registry().gauge("serve.active_version").set(staged.version)
+            obs.event("serve/activate", version=staged.version, update=idx)
+            if (
+                args.journal_max_records
+                and len(journal.replay()) > args.journal_max_records
+            ):
+                dropped = journal.compact()
+                if dropped:
+                    print(f"journal compacted: dropped {dropped} records")
         except Exception as e:
             journal.append(
                 "update_failed", update=idx, error=f"{type(e).__name__}: {e}"
@@ -395,6 +412,7 @@ def main(argv=None) -> Dict:
         handle_box["h"] = stage_handle(
             registry, "vi", entry.version, probes, batcher_config
         )
+        obs.registry().gauge("serve.active_version").set(entry.version)
         print(
             f"base fit: m={args.base_rows} |G|+|O|={model.stats['G_plus_O']} "
             f"in {t_base_fit:.2f}s ({model.stats['recompiles']} compiles)"
@@ -546,7 +564,8 @@ def main(argv=None) -> Dict:
     vi_api.save(model, final_dir)
 
     # -- report ------------------------------------------------------------
-    lats = np.asarray([x for per in serve_lat for x in per])
+    # same sketch-backed summary as every other obs report (adds p999)
+    lat = obs.percentile_summary(x for per in serve_lat for x in per)
     overlap_requests = int(sum(serve_overlap))
     mismatches = int(sum(serve_mismatch))
     update_busy = float(sum(u["time_to_active"] for u in updates))
@@ -563,12 +582,13 @@ def main(argv=None) -> Dict:
         "staleness_mean_s": float(np.mean(staleness)) if staleness else 0.0,
         "staleness_max_s": float(np.max(staleness)) if staleness else 0.0,
         "serve": {
-            "requests": int(lats.size),
+            "requests": int(lat["count"]) if lat else 0,
             "mismatches": mismatches,
             "faults": int(sum(serve_fault)),
             "during_update_requests": overlap_requests,
-            "lat_p50_ms": float(np.percentile(lats, 50)) if lats.size else 0.0,
-            "lat_p99_ms": float(np.percentile(lats, 99)) if lats.size else 0.0,
+            "lat_p50_ms": lat["p50"] if lat else 0.0,
+            "lat_p99_ms": lat["p99"] if lat else 0.0,
+            "lat_p999_ms": lat["p999"] if lat else 0.0,
         },
         "overlap": {
             "update_busy_s": update_busy,
@@ -599,6 +619,17 @@ def main(argv=None) -> Dict:
         )
     if mismatches:
         print("ERROR: served responses diverged from their version's expected output")
+    if args.obs_dir:
+        os.makedirs(args.obs_dir, exist_ok=True)
+        trace_path = os.path.join(args.obs_dir, "trace.json")
+        metrics_path = os.path.join(args.obs_dir, "metrics.jsonl")
+        obs.export_trace(trace_path)
+        obs.export_metrics(metrics_path)
+        report["obs"] = {"trace": trace_path, "metrics": metrics_path}
+        print(
+            f"obs: trace -> {trace_path} (load in ui.perfetto.dev), "
+            f"metrics -> {metrics_path}"
+        )
     if args.out:
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1)

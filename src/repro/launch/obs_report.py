@@ -1,0 +1,111 @@
+"""Render exported obs artifacts as a human-readable report.
+
+Reads the files a driver run leaves behind (``continuous_vi --obs-dir``,
+``bench_obs``, or anything calling :func:`repro.obs.export_metrics` /
+:func:`repro.obs.export_trace`) and prints:
+
+* the metric table — every counter/gauge/histogram series with its labels,
+  histograms as ``n/mean/p50/p99/p999/max`` (the same renderer the in-process
+  ``obs.report_lines`` uses, so live and post-hoc reports read identically);
+* a trace summary — per-span event counts and total/mean durations, plus
+  instant-event counts, aggregated from the Chrome-trace JSON.
+
+``--follow`` re-reads and re-renders every ``--interval`` seconds — a poor
+man's dashboard for watching a continuous loop from another terminal.  The
+trace itself is best viewed in ui.perfetto.dev; this summary is for when all
+you have is a shell.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.obs_report --obs-dir runs/obs
+    PYTHONPATH=src python -m repro.launch.obs_report --obs-dir runs/obs --follow
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from .. import obs
+
+
+def load_metric_rows(path: str) -> Optional[List[Dict]]:
+    """Rows of a ``metrics.jsonl`` export (None when the file is absent)."""
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def trace_summary_lines(path: str) -> List[str]:
+    """Aggregate a Chrome-trace JSON into per-name span/event totals."""
+    if not os.path.exists(path):
+        return [f"(no trace at {path})"]
+    with open(path) as f:
+        doc = json.load(f)
+    events = obs.validate_chrome_trace(doc)
+    spans: Dict[str, List[float]] = {}
+    instants: Dict[str, int] = {}
+    for e in events:
+        if e["ph"] == "X":
+            tot = spans.setdefault(e["name"], [0.0, 0])
+            tot[0] += e.get("dur", 0.0)
+            tot[1] += 1
+        elif e["ph"] == "i":
+            instants[e["name"]] = instants.get(e["name"], 0) + 1
+    lines = [f"trace: {len(events)} events"]
+    for name, (dur_us, n) in sorted(spans.items(), key=lambda kv: -kv[1][0]):
+        lines.append(
+            f"  span  {name:<28} n={n:<7} total={dur_us / 1e6:.3f}s "
+            f"mean={dur_us / n / 1e3:.3f}ms"
+        )
+    for name, n in sorted(instants.items()):
+        lines.append(f"  event {name:<28} n={n}")
+    return lines
+
+
+def report(obs_dir: str) -> List[str]:
+    """The full report for one obs export directory."""
+    rows = load_metric_rows(os.path.join(obs_dir, "metrics.jsonl"))
+    lines: List[str] = []
+    if rows is None:
+        lines.append(f"(no metrics at {os.path.join(obs_dir, 'metrics.jsonl')})")
+    else:
+        # reuse the in-process renderer on the exported rows: the snapshot
+        # schema is exactly what export_metrics wrote; drop its trace footer
+        # (the real trace summary below aggregates the exported trace.json)
+        snap = {"metrics": rows, "trace": {}}
+        lines.extend(obs.report_lines(snap)[:-1] if rows else ["(no metrics recorded)"])
+    lines.append("")
+    lines.extend(trace_summary_lines(os.path.join(obs_dir, "trace.json")))
+    return lines
+
+
+def main(argv=None) -> List[str]:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--obs-dir", type=str, default="results/obs",
+                    help="directory holding metrics.jsonl and trace.json")
+    ap.add_argument("--follow", action="store_true",
+                    help="re-render every --interval seconds until interrupted")
+    ap.add_argument("--interval", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    lines = report(args.obs_dir)
+    print("\n".join(lines))
+    if args.follow:
+        try:
+            while True:
+                time.sleep(max(args.interval, 0.1))
+                lines = report(args.obs_dir)
+                print(f"\n--- {time.strftime('%H:%M:%S')} ---")
+                print("\n".join(lines))
+        except KeyboardInterrupt:
+            pass
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from .. import obs
+
 
 def build_mesh(data_axes, mesh_shape: Optional[List[int]] = None):
     import jax
@@ -115,17 +117,20 @@ def replay(
     if errors:
         raise errors[0]
     rows = sum(p.shape[0] for p in payloads)
-    lat = np.asarray(latencies)
+    # shared sketch-based summary (same rounding rule as every obs report,
+    # and p999 for free) instead of a hand-rolled np.percentile block
+    lat = obs.percentile_summary(latencies)
     return {
         "requests": len(payloads),
         "rows": rows,
         "wall_s": wall,
         "rows_per_s": rows / max(wall, 1e-9),
         "requests_per_s": len(payloads) / max(wall, 1e-9),
-        "lat_p50_ms": float(np.percentile(lat, 50)),
-        "lat_p90_ms": float(np.percentile(lat, 90)),
-        "lat_p99_ms": float(np.percentile(lat, 99)),
-        "lat_max_ms": float(lat.max()),
+        "lat_p50_ms": lat["p50"],
+        "lat_p90_ms": lat["p90"],
+        "lat_p99_ms": lat["p99"],
+        "lat_p999_ms": lat["p999"],
+        "lat_max_ms": lat["max"],
     }
 
 

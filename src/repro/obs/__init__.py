@@ -1,0 +1,65 @@
+"""repro.obs — tracing, metrics, and profiling for the OAVI stack.
+
+Quick tour::
+
+    from repro import obs
+
+    with obs.span("fit/degree", d=3):
+        ...                                # timed, nested, thread-safe
+    obs.event("fit/recompile", degree=3)   # instant marker
+
+    h = obs.registry().histogram("serve.latency_seconds", engine="vi")
+    h.observe(0.004)
+    h.summary()["p999"]
+
+    obs.export_trace("results/trace.json")     # open in ui.perfetto.dev
+    obs.export_metrics("results/metrics.jsonl")
+    print("\n".join(obs.report_lines()))
+
+Spans and events are gated by ``OBS_ENABLED`` (default on) and are true
+no-ops when disabled; metric objects are always live because the repo's
+public ``stats`` dicts are views over them.  See ``core.py`` for the full
+contract and the ``OBS_*`` env toggles.
+"""
+
+from .core import (  # noqa: F401
+    configure,
+    current_stack,
+    disable,
+    disabled,
+    enable,
+    enabled,
+    event,
+    export_metrics,
+    export_trace,
+    registry,
+    report_lines,
+    reset,
+    snapshot,
+    span,
+    trace_document,
+    trace_events,
+)
+from .metrics import (  # noqa: F401
+    BUCKETS_PER_OCTAVE,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    bucket_relative_error,
+    percentile_summary,
+)
+from .trace import (  # noqa: F401
+    chrome_trace,
+    export_chrome_trace,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "configure", "current_stack", "disable", "disabled", "enable", "enabled",
+    "event", "export_metrics", "export_trace", "registry", "report_lines",
+    "reset", "snapshot", "span", "trace_document", "trace_events",
+    "BUCKETS_PER_OCTAVE", "Counter", "Gauge", "Histogram", "Registry",
+    "bucket_relative_error", "percentile_summary",
+    "chrome_trace", "export_chrome_trace", "validate_chrome_trace",
+]

@@ -1,0 +1,185 @@
+"""Chrome-trace event recording and export.
+
+Span/instant events accumulate in a bounded ring buffer and export as the
+Chrome trace-event JSON format (``{"traceEvents": [...]}``) that loads
+directly in ``ui.perfetto.dev`` or ``chrome://tracing``.
+
+Event vocabulary (the subset of the spec we emit):
+
+- ``ph: "X"`` — complete event: a span with ``ts``/``dur`` in microseconds.
+- ``ph: "i"`` — instant event (compile, recompile, regrowth, activation...).
+- ``ph: "M"`` — metadata (process/thread names), emitted at export time.
+
+``pid`` is the real process id; ``tid`` is a stable small integer per Python
+thread so nested spans from one thread stack correctly in the timeline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from collections import deque
+from typing import Dict, List, Optional
+
+__all__ = [
+    "TraceBuffer",
+    "chrome_trace",
+    "export_chrome_trace",
+    "validate_chrome_trace",
+]
+
+_REQUIRED_KEYS = {"name", "ph", "ts", "pid", "tid"}
+_KNOWN_PHASES = {"X", "i", "B", "E", "M", "C"}
+
+
+class TraceBuffer:
+    """Thread-safe bounded buffer of Chrome-trace events."""
+
+    def __init__(self, maxlen: int = 100_000) -> None:
+        self._lock = threading.Lock()
+        # hot path is lock-free: deque.append with maxlen is itself
+        # thread-safe and lossless under the GIL; ``_added`` is a telemetry
+        # counter (racy increments may undercount drops, never events).
+        # Records are plain tuples — building the Chrome-trace dict (7 keys
+        # hashed, cache-cold between device calls) costs several times the
+        # tuple append, so it is deferred to :meth:`events` at export time:
+        #   ("X", name, ts_us, dur_us, tid, args)   complete (span)
+        #   ("i", name, ts_us, tid, args)           instant
+        self._events: deque = deque(maxlen=maxlen)
+        self._tids: Dict[int, int] = {}
+        self._pid = os.getpid()
+        self._added = 0
+
+    def _tid(self) -> int:
+        ident = threading.get_ident()
+        tid = self._tids.get(ident)
+        if tid is None:
+            with self._lock:
+                tid = self._tids.setdefault(ident, len(self._tids) + 1)
+        return tid
+
+    def add_complete(self, name: str, ts_us: float, dur_us: float,
+                     args: Optional[dict] = None) -> None:
+        self._added += 1
+        self._events.append(("X", name, ts_us, dur_us, self._tid(), args))
+
+    def add_instant(self, name: str, ts_us: float,
+                    args: Optional[dict] = None) -> None:
+        self._added += 1
+        self._events.append(("i", name, ts_us, self._tid(), args))
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    @property
+    def dropped(self) -> int:
+        return max(0, self._added - len(self._events))
+
+    def events(self) -> List[dict]:
+        """Materialize the buffered records as Chrome-trace event dicts."""
+        while True:
+            try:
+                raw = list(self._events)
+                break
+            except RuntimeError:
+                continue  # deque mutated mid-copy by a concurrent append
+        pid = self._pid
+        out = []
+        for rec in raw:
+            if rec[0] == "X":
+                _, name, ts, dur, tid, args = rec
+                out.append({
+                    "name": name, "ph": "X", "ts": ts, "dur": dur,
+                    "pid": pid, "tid": tid, "args": args or {},
+                })
+            else:
+                _, name, ts, tid, args = rec
+                out.append({
+                    "name": name, "ph": "i", "ts": ts, "pid": pid,
+                    "tid": tid, "s": "t",  # thread-scoped instant
+                    "args": args or {},
+                })
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self._added = 0
+
+
+def chrome_trace(events: List[dict], process_name: str = "repro") -> dict:
+    """Wrap raw events in the Chrome trace-event container format."""
+    pid = os.getpid()
+    rounded = []
+    for e in events:  # rounding deferred off the recording hot path
+        e = dict(e)
+        e["ts"] = round(e["ts"], 3)
+        if "dur" in e:
+            e["dur"] = round(e["dur"], 3)
+        rounded.append(e)
+    events = rounded
+    meta = [{
+        "name": "process_name",
+        "ph": "M",
+        "ts": 0,
+        "pid": pid,
+        "tid": 0,
+        "args": {"name": process_name},
+    }]
+    tids = sorted({e["tid"] for e in events})
+    for tid in tids:
+        meta.append({
+            "name": "thread_name",
+            "ph": "M",
+            "ts": 0,
+            "pid": pid,
+            "tid": tid,
+            "args": {"name": f"thread-{tid}"},
+        })
+    return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+
+
+def export_chrome_trace(events: List[dict], path: str,
+                        process_name: str = "repro") -> str:
+    """Write events as a Chrome-trace JSON file; returns the path."""
+    doc = chrome_trace(events, process_name=process_name)
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f)
+    os.replace(tmp, path)
+    return path
+
+
+def validate_chrome_trace(doc: dict) -> List[dict]:
+    """Validate a trace document against the Chrome trace-event schema.
+
+    Raises ``ValueError`` on the first malformed event; returns the list of
+    non-metadata events on success.  Used by tests and ``bench_obs`` so an
+    unloadable trace.json fails loudly instead of silently in the viewer.
+    """
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError("trace document must be a dict with 'traceEvents'")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("'traceEvents' must be a list")
+    payload = []
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(f"event {i} is not an object")
+        missing = _REQUIRED_KEYS - set(ev)
+        if missing:
+            raise ValueError(f"event {i} missing keys {sorted(missing)}: {ev}")
+        if ev["ph"] not in _KNOWN_PHASES:
+            raise ValueError(f"event {i} has unknown phase {ev['ph']!r}")
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            raise ValueError(f"event {i} has bad ts: {ev['ts']!r}")
+        if not isinstance(ev["pid"], int) or not isinstance(ev["tid"], int):
+            raise ValueError(f"event {i} pid/tid must be ints: {ev}")
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"complete event {i} has bad dur: {dur!r}")
+        if ev["ph"] != "M":
+            payload.append(ev)
+    return payload

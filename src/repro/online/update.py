@@ -43,19 +43,19 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import ihb as ihb_mod
 from ..core import terms as terms_mod
 from ..core.oavi import (
+    FitScope,
     Generator,
     OAVIConfig,
     OAVIModel,
     _np_dtype,
     border_index_arrays,
     collect_degree,
-    finalize_fit_stats,
     init_fit_stats,
     pow2_bucket,
-    sample_memory_stats,
 )
 from ..core.ordering import pearson_order_from_moments
 from ..kernels import ops as kernel_ops
@@ -156,20 +156,12 @@ def _drive(
     rows past the snapshot).  Local path only — an update is O(new rows) of
     data work, which a serving-side host handles without a mesh; sharded
     *full* fits stay with :func:`repro.streaming.fit`."""
-    t_start = time.perf_counter()
     dtype = config.jax_dtype()
     np_dtype = _np_dtype(config.dtype)
     m, n = source.num_rows, source.num_features
     aligned_new = (m // kernel_ops.GRAM_BLOCK) * kernel_ops.GRAM_BLOCK
     base_rows = state_in.num_rows if state_in is not None else 0
 
-    book = terms_mod.TermBook(n=n)
-    generators: List[Generator] = []
-    Lcap = pow2_bucket(config.cap_terms)
-    ihb_state = ihb_mod.init_state(
-        Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
-    )
-    ell = 1
     stats = init_fit_stats(
         m,
         n,
@@ -181,131 +173,135 @@ def _drive(
             "replayed_degrees": [],
         },
     )
-    entry = _streaming_stats_entry(config, None, ("data",))
-    m_total = jnp.asarray(float(m), dtype)
-    records_out: List[DegreeRecord] = []
-
-    d = 0
-    while True:
-        d += 1
-        if d > config.max_degree:
-            stats["termination"] = f"max_degree={config.max_degree}"
-            break
-        border = book.border(d)
-        if not border:
-            stats["termination"] = "empty_border"
-            break
-        K = len(border)
-        stats["border_sizes"].append(K)
-        stats["degrees"].append(d)
-
-        while ell + K > Lcap:
-            Lcap *= 2
-            stats["regrowths"] += 1
-            ihb_state = ihb_mod.grow_state(ihb_state, Lcap)
-
-        Kcap = max(config.cap_border, pow2_bucket(K))
-        parents, vars_, valid = border_index_arrays(book, border, Kcap)
-
-        acc_fn, acc_seen, acc_new = _chunk_accumulator(
-            book, config, Lcap, chunk_rows, None, ("data",)
+    with FitScope(stats, backend="online") as scope:
+        book = terms_mod.TermBook(n=n)
+        generators: List[Generator] = []
+        Lcap = pow2_bucket(config.cap_terms)
+        ihb_state = ihb_mod.init_state(
+            Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
         )
-        acc_sig = (Kcap, chunk_rows, n, str(dtype))
-        if acc_new or acc_sig not in acc_seen:
-            acc_seen.add(acc_sig)
-            stats["recompiles"] += 1
-        sig = (Lcap, Kcap, str(dtype))
-        if sig not in entry.seen:
-            entry.seen.add(sig)
-            stats["recompiles"] += 1
+        ell = 1
+        entry = _streaming_stats_entry(config, None, ("data",))
+        m_total = jnp.asarray(float(m), dtype)
+        records_out: List[DegreeRecord] = []
 
-        t_deg = time.perf_counter()
-        parents_d = jnp.asarray(parents)
-        vars_d = jnp.asarray(vars_)
-        rec = (
-            state_in.record_matches(d, book, K, Lcap, Kcap)
-            if state_in is not None
-            else None
-        )
-        if rec is not None:
-            # resume the fold where the snapshot ends — a GRAM_BLOCK
-            # boundary, so the remaining blocks land exactly where a
-            # one-shot pass would put them
-            accQL = jnp.asarray(rec.accQL)
-            accC = jnp.asarray(rec.accC)
-            start_row = state_in.aligned_rows
-            stats["online"]["folded_degrees"] += 1
-        else:
-            accQL = jnp.zeros((Lcap, Kcap), jnp.float32)
-            accC = jnp.zeros((Kcap, Kcap), jnp.float32)
-            start_row = 0
-            stats["online"]["replayed_degrees"].append(d)
+        d = 0
+        while True:
+            d += 1
+            if d > config.max_degree:
+                stats["termination"] = f"max_degree={config.max_degree}"
+                break
+            border = book.border(d)
+            if not border:
+                stats["termination"] = "empty_border"
+                break
+            K = len(border)
+            stats["border_sizes"].append(K)
+            stats["degrees"].append(d)
 
-        accQL, accC, nc = accumulate_source_range(
-            acc_fn,
-            source,
-            start_row,
-            aligned_new,
-            chunk_rows,
-            (accQL, accC),
-            parents_d,
-            vars_d,
-            perm=perm,
-            np_dtype=np_dtype,
-            prefetch=prefetch,
-        )
-        # snapshot BEFORE the unaligned tail: the record must cover exactly
-        # [0, aligned_new) so the next update can resume on a block boundary
-        # (np.asarray forces + copies to host before acc_fn donates the
-        # device buffers again)
-        records_out.append(
-            DegreeRecord(
-                degree=d,
-                ell=ell,
-                K=K,
-                Lcap=Lcap,
-                Kcap=Kcap,
-                accQL=np.asarray(accQL),
-                accC=np.asarray(accC),
+            while ell + K > Lcap:
+                Lcap *= 2
+                scope.regrowth(Lcap)
+                ihb_state = ihb_mod.grow_state(ihb_state, Lcap)
+
+            Kcap = max(config.cap_border, pow2_bucket(K))
+            parents, vars_, valid = border_index_arrays(book, border, Kcap)
+
+            acc_fn, acc_seen, acc_new = _chunk_accumulator(
+                book, config, Lcap, chunk_rows, None, ("data",)
             )
-        )
-        if aligned_new < m:
-            accQL, accC, nc2 = accumulate_source_range(
-                acc_fn,
-                source,
-                aligned_new,
-                m,
-                chunk_rows,
-                (accQL, accC),
-                parents_d,
-                vars_d,
-                perm=perm,
-                np_dtype=np_dtype,
-                prefetch=prefetch,
-            )
-            nc += nc2
-        stats["streaming"]["num_chunks"] += nc
-        stats["streaming"]["passes"] += 1
+            acc_sig = (Kcap, chunk_rows, n, str(dtype))
+            scope.note_signature(acc_seen, acc_sig, kind="fit/compile_accumulator")
+            scope.note_signature(entry.seen, (Lcap, Kcap, str(dtype)))
 
-        st = entry.fn(
-            accQL,
-            accC,
-            ihb_state,
-            jnp.asarray(ell, jnp.int32),
-            jnp.asarray(valid),
-            m_total,
-        )
-        ihb_state = st.ihb
-        accepted = np.asarray(st.accepted)
-        mses = np.asarray(st.mses)
-        coeffs = np.asarray(st.coeffs)
-        stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
-        stats["solver_iters"].append(int(np.asarray(st.iters)[:K].sum()))
-        sample_memory_stats(stats)
+            with scope.degree(d, K=K):
+                parents_d = jnp.asarray(parents)
+                vars_d = jnp.asarray(vars_)
+                rec = (
+                    state_in.record_matches(d, book, K, Lcap, Kcap)
+                    if state_in is not None
+                    else None
+                )
+                if rec is not None:
+                    # resume the fold where the snapshot ends — a GRAM_BLOCK
+                    # boundary, so the remaining blocks land exactly where a
+                    # one-shot pass would put them
+                    accQL = jnp.asarray(rec.accQL)
+                    accC = jnp.asarray(rec.accC)
+                    start_row = state_in.aligned_rows
+                    stats["online"]["folded_degrees"] += 1
+                    obs.event("online/fold", degree=d, start_row=start_row)
+                else:
+                    accQL = jnp.zeros((Lcap, Kcap), jnp.float32)
+                    accC = jnp.zeros((Kcap, Kcap), jnp.float32)
+                    start_row = 0
+                    stats["online"]["replayed_degrees"].append(d)
+                    obs.event("online/replay", degree=d)
 
-        ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+                accQL, accC, nc = accumulate_source_range(
+                    acc_fn,
+                    source,
+                    start_row,
+                    aligned_new,
+                    chunk_rows,
+                    (accQL, accC),
+                    parents_d,
+                    vars_d,
+                    perm=perm,
+                    np_dtype=np_dtype,
+                    prefetch=prefetch,
+                )
+                # snapshot BEFORE the unaligned tail: the record must cover
+                # exactly [0, aligned_new) so the next update can resume on a
+                # block boundary (np.asarray forces + copies to host before
+                # acc_fn donates the device buffers again)
+                records_out.append(
+                    DegreeRecord(
+                        degree=d,
+                        ell=ell,
+                        K=K,
+                        Lcap=Lcap,
+                        Kcap=Kcap,
+                        accQL=np.asarray(accQL),
+                        accC=np.asarray(accC),
+                    )
+                )
+                if aligned_new < m:
+                    accQL, accC, nc2 = accumulate_source_range(
+                        acc_fn,
+                        source,
+                        aligned_new,
+                        m,
+                        chunk_rows,
+                        (accQL, accC),
+                        parents_d,
+                        vars_d,
+                        perm=perm,
+                        np_dtype=np_dtype,
+                        prefetch=prefetch,
+                    )
+                    nc += nc2
+                stats["streaming"]["num_chunks"] += nc
+                stats["streaming"]["passes"] += 1
 
-    finalize_fit_stats(stats, book, generators, Lcap, config, t_start)
+                st = entry.fn(
+                    accQL,
+                    accC,
+                    ihb_state,
+                    jnp.asarray(ell, jnp.int32),
+                    jnp.asarray(valid),
+                    m_total,
+                )
+                ihb_state = st.ihb
+                accepted = np.asarray(st.accepted)
+                mses = np.asarray(st.mses)
+                coeffs = np.asarray(st.coeffs)
+                iters = np.asarray(st.iters)
+            stats["solver_iters"].append(int(iters[:K].sum()))
+
+            ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+
+        scope.finalize(book, generators, Lcap, config)
     scaler_lo, scaler_hi = _scaler_stats(scaler)
     model = OAVIModel(
         n=n,
@@ -446,17 +442,23 @@ def update(
         state_eff = None
         refit_reason = "feature_order_changed"
 
-    new_model, new_state = _drive(
-        source,
-        config,
-        chunk_rows,
-        state_eff,
-        perm,
-        moments,
-        moment_rows,
-        scaler,
-        prefetch,
-    )
+    with obs.span(
+        "online/update",
+        base_rows=state.num_rows,
+        new_rows=m_new - state.num_rows,
+        refit_reason=refit_reason,
+    ):
+        new_model, new_state = _drive(
+            source,
+            config,
+            chunk_rows,
+            state_eff,
+            perm,
+            moments,
+            moment_rows,
+            scaler,
+            prefetch,
+        )
     if scaler is None:
         # carry the drift reference forward unless the caller replaces it
         new_state.scaler_lo = state.scaler_lo

@@ -32,8 +32,9 @@ from __future__ import annotations
 import json
 import os
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
+from .. import obs
 from .integrity import IntegrityError, checksum_bytes
 
 
@@ -81,7 +82,73 @@ class Journal:
             self._fh.flush()
             os.fsync(self._fh.fileno())
             self._seq += 1
+            obs.registry().counter("journal.appends", kind=kind).inc()
             return rec
+
+    def compact(
+        self,
+        anchor_kind: str = "activated",
+        keep_kinds: Sequence[str] = ("base_fitted",),
+    ) -> int:
+        """Drop committed history older than the newest ``anchor_kind`` record.
+
+        Keeps the newest ``anchor_kind`` record and everything after it, plus
+        (for each kind in ``keep_kinds``) the newest earlier record of that
+        kind — by default the last ``base_fitted``, which the continuous
+        controller's resume gate reads via :meth:`last`.  Records keep their
+        original ``seq`` and CRC (both cover only the record body, which is
+        unchanged), so replay semantics and :meth:`last` lookups are
+        indistinguishable from the uncompacted journal for every surviving
+        kind.
+
+        The rewrite is crash-safe: surviving records are CRC-re-verified and
+        written to ``<path>.tmp``, fsync'd, then renamed over the journal
+        (plus a directory fsync) — a crash mid-compact leaves either the old
+        or the new journal, never a torn mix.  Returns the number of records
+        dropped (0 when there is no anchor or nothing precedes it).
+        """
+        with self._lock:
+            records, _ = self._scan()
+            cut = 0
+            for i, rec in enumerate(records):
+                if rec["kind"] == anchor_kind:
+                    cut = i
+            prefix: List[Dict] = []
+            for kind in keep_kinds:
+                newest = None
+                for rec in records[:cut]:
+                    if rec["kind"] == kind:
+                        newest = rec
+                if newest is not None:
+                    prefix.append(newest)
+            prefix.sort(key=lambda r: r["seq"])
+            kept = prefix + records[cut:]
+            dropped = len(records) - len(kept)
+            if dropped <= 0:
+                return 0
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                for rec in kept:
+                    if rec.get("crc") != _record_crc(rec):
+                        raise JournalError(
+                            f"{self.path}: record seq={rec.get('seq')} failed CRC "
+                            "re-verification during compaction; aborting rewrite",
+                            path=self.path,
+                        )
+                    f.write(json.dumps(rec, sort_keys=True) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None  # reopened lazily by the next append
+            os.replace(tmp, self.path)
+            dirfd = os.open(os.path.dirname(self.path) or ".", os.O_RDONLY)
+            try:
+                os.fsync(dirfd)
+            finally:
+                os.close(dirfd)
+            obs.event("journal/compact", dropped=dropped, kept=len(kept))
+            return dropped
 
     def close(self) -> None:
         with self._lock:

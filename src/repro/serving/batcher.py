@@ -49,6 +49,7 @@ from typing import Callable, Deque, List, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
 from ..resilience.chaos import TransientEngineError
 from .engine import TransformEngine
 
@@ -129,17 +130,35 @@ class MicroBatcher:
         self._running = False
         self._stopped = False
         self._batch_seq = 0  # keys the deterministic retry jitter
-        self.stats = {
-            "requests": 0,
-            "batches": 0,
-            "rows": 0,
-            "coalesced_max": 0,
-            "wait_ms_total": 0.0,
-            "retries": 0,
-            "bisections": 0,
-            "isolated_failures": 0,
-            "deadline_expired": 0,
-            "shutdown_failed": 0,
+        # obs metric primitives (always live — ``stats`` is a view over them)
+        self._requests = obs.Counter()
+        self._batches = obs.Counter()
+        self._rows = obs.Counter()
+        self._coalesced_max = obs.Gauge()
+        self._retries = obs.Counter()
+        self._bisections = obs.Counter()
+        self._isolated_failures = obs.Counter()
+        self._deadline_expired = obs.Counter()
+        self._shutdown_failed = obs.Counter()
+        # queue-wait sketch replaces the single running wait_ms_total scalar;
+        # the view keeps the historical key as ``sum`` of the sketch
+        self.wait_ms = obs.Histogram()
+
+    @property
+    def stats(self) -> dict:
+        """Point-in-time metric view (same keys as the historical dict)."""
+        return {
+            "requests": self._requests.value,
+            "batches": self._batches.value,
+            "rows": self._rows.value,
+            "coalesced_max": int(self._coalesced_max.value),
+            "wait_ms_total": self.wait_ms.sum,
+            "retries": self._retries.value,
+            "bisections": self._bisections.value,
+            "isolated_failures": self._isolated_failures.value,
+            "deadline_expired": self._deadline_expired.value,
+            "shutdown_failed": self._shutdown_failed.value,
+            "wait_ms": self.wait_ms.summary(),
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -172,7 +191,7 @@ class MicroBatcher:
             leftovers = list(self._queue)
             self._queue.clear()
         for r in leftovers:
-            self.stats["shutdown_failed"] += 1
+            self._shutdown_failed.inc()
             if r.future.set_running_or_notify_cancel():
                 r.future.set_exception(
                     ShutdownError("MicroBatcher stopped before serving this request")
@@ -224,7 +243,7 @@ class MicroBatcher:
                 # backpressure wait above by stop())
                 raise ShutdownError("MicroBatcher is stopped; start() it again")
             self._queue.append(req)
-            self.stats["requests"] += 1
+            self._requests.inc()
             self._not_empty.notify()
         return fut
 
@@ -295,10 +314,10 @@ class MicroBatcher:
                 r.future.set_exception(err)
 
     def _scatter(self, batch: Sequence[_Request], Z: np.ndarray, feats: np.ndarray, t0: float):
-        self.stats["batches"] += 1
-        self.stats["rows"] += int(Z.shape[0])
-        self.stats["coalesced_max"] = max(self.stats["coalesced_max"], len(batch))
-        self.stats["wait_ms_total"] += (t0 - batch[0].t_submit) * 1e3
+        self._batches.inc()
+        self._rows.inc(int(Z.shape[0]))
+        self._coalesced_max.set_max(len(batch))
+        self.wait_ms.observe((t0 - batch[0].t_submit) * 1e3)
         start = 0
         for r in batch:
             stop = start + r.Z.shape[0]
@@ -329,34 +348,38 @@ class MicroBatcher:
             if len(batch) > 1
             else batch[0].Z
         )
-        attempt = 0
-        while True:
-            try:
-                feats = self.engine.transform(Z)
-                break
-            except TransientEngineError as e:
-                if attempt >= self.config.max_retries:
-                    # the engine, not a request, is sick: isolation cannot
-                    # help, and hammering it further only extends the outage
-                    self._fail(batch, e)
+        with obs.span("batcher/execute", requests=len(batch), rows=int(Z.shape[0])):
+            attempt = 0
+            while True:
+                try:
+                    feats = self.engine.transform(Z)
+                    break
+                except TransientEngineError as e:
+                    if attempt >= self.config.max_retries:
+                        # the engine, not a request, is sick: isolation cannot
+                        # help, and hammering it further only extends the outage
+                        self._fail(batch, e)
+                        return
+                    self._retries.inc()
+                    obs.event("batcher/retry", attempt=attempt, rows=int(Z.shape[0]))
+                    time.sleep(self._backoff_s(attempt))
+                    attempt += 1
+                except Exception as e:
+                    if self.config.isolate_failures and len(batch) > 1:
+                        # bisect: row-independence means re-dispatching halves is
+                        # bit-identical for every non-poison request in them
+                        self._bisections.inc()
+                        obs.event("batcher/bisect", requests=len(batch))
+                        mid = len(batch) // 2
+                        self._execute(batch[:mid])
+                        self._execute(batch[mid:])
+                    else:
+                        if len(batch) == 1:
+                            self._isolated_failures.inc()
+                            obs.event("batcher/isolated_failure")
+                        self._fail(batch, e)
                     return
-                self.stats["retries"] += 1
-                time.sleep(self._backoff_s(attempt))
-                attempt += 1
-            except Exception as e:
-                if self.config.isolate_failures and len(batch) > 1:
-                    # bisect: row-independence means re-dispatching halves is
-                    # bit-identical for every non-poison request in them
-                    self.stats["bisections"] += 1
-                    mid = len(batch) // 2
-                    self._execute(batch[:mid])
-                    self._execute(batch[mid:])
-                else:
-                    if len(batch) == 1:
-                        self.stats["isolated_failures"] += 1
-                    self._fail(batch, e)
-                return
-        self._scatter(batch, Z, feats, t0)
+            self._scatter(batch, Z, feats, t0)
 
     def _process(self, batch: Sequence[_Request]):
         if not batch:
@@ -365,7 +388,8 @@ class MicroBatcher:
         live: List[_Request] = []
         for r in batch:
             if r.deadline is not None and now > r.deadline:
-                self.stats["deadline_expired"] += 1
+                self._deadline_expired.inc()
+                obs.event("batcher/deadline_expired")
                 if r.future.set_running_or_notify_cancel():
                     r.future.set_exception(
                         DeadlineExceeded(

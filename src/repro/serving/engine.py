@@ -25,12 +25,14 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.distributed import (
     SHARD_MAP_KW,
     data_spec,
@@ -119,14 +121,35 @@ class TransformEngine:
         self._fn = self._build_fn()
         self._seen_buckets: set = set()
         self._lock = threading.Lock()
-        self.stats: Dict = {
-            "requests": 0,
-            "rows": 0,
-            "device_calls": 0,
-            "padded_rows": 0,
-            "recompiles": 0,
-            "warmup_compiles": 0,
-            "buckets": {},  # bucket -> device calls
+        self.backend = "local" if mesh is None else "sharded"
+        # obs metric primitives (always live — ``stats`` is a view over them;
+        # the span/trace layer is what OBS_ENABLED gates)
+        self._requests = obs.Counter()
+        self._rows = obs.Counter()
+        self._device_calls = obs.Counter()
+        self._padded_rows = obs.Counter()
+        self._recompiles = obs.Counter()
+        self._warmup_compiles = obs.Counter()
+        self._bucket_calls: Dict[int, obs.Counter] = {}
+        # per-engine request latency sketch (p50/p99/p999 via stats view);
+        # also folded into the process-global serve SLO histogram by label
+        self.latency = obs.Histogram()
+        self._slo = obs.registry().histogram(
+            "serve.transform_seconds", backend=self.backend
+        )
+
+    @property
+    def stats(self) -> Dict:
+        """Point-in-time counter view (same keys as the historical dict)."""
+        return {
+            "requests": self._requests.value,
+            "rows": self._rows.value,
+            "device_calls": self._device_calls.value,
+            "padded_rows": self._padded_rows.value,
+            "recompiles": self._recompiles.value,
+            "warmup_compiles": self._warmup_compiles.value,
+            "buckets": {b: c.value for b, c in sorted(self._bucket_calls.items())},
+            "latency": self.latency.summary(),
         }
 
     # -- plan / shape machinery -------------------------------------------
@@ -190,10 +213,10 @@ class TransformEngine:
                     continue
                 self._seen_buckets.add(b)
             Zb = np.zeros((b, self.consts.n), self.plan.dtype)
-            jax.block_until_ready(self._fn(jnp.asarray(Zb)))
+            with obs.span("serve/warmup_compile", bucket=b, backend=self.backend):
+                jax.block_until_ready(self._fn(jnp.asarray(Zb)))
             compiled += 1
-        with self._lock:
-            self.stats["warmup_compiles"] += compiled
+        self._warmup_compiles.inc(compiled)
         return compiled
 
     def _dispatch(self, Zp: np.ndarray) -> np.ndarray:
@@ -202,9 +225,13 @@ class TransformEngine:
         with self._lock:
             if b not in self._seen_buckets:
                 self._seen_buckets.add(b)
-                self.stats["recompiles"] += 1
-            self.stats["device_calls"] += 1
-            self.stats["buckets"][b] = self.stats["buckets"].get(b, 0) + 1
+                self._recompiles.inc()
+                obs.event("serve/recompile", bucket=b, backend=self.backend)
+            bucket = self._bucket_calls.get(b)
+            if bucket is None:
+                bucket = self._bucket_calls.setdefault(b, obs.Counter())
+        self._device_calls.inc()
+        bucket.inc()
         return np.asarray(self._fn(jnp.asarray(Zp)))
 
     def transform(self, Z) -> np.ndarray:
@@ -224,28 +251,31 @@ class TransformEngine:
         # a failing accelerator call would look like (no-op without a plan)
         chaos.fire("engine.transform", Z=Z)
         q = Z.shape[0]
-        with self._lock:
-            self.stats["requests"] += 1
-            self.stats["rows"] += q
+        self._requests.inc()
+        self._rows.inc(q)
         out_dtype = self.plan.dtype
         if q == 0 or self.consts.num_features == 0:
             return np.zeros((q, self.consts.num_features), out_dtype)
-        Zd = Z.astype(self.plan.dtype, copy=False)
-        out = np.empty((q, self.consts.num_features), out_dtype)
-        start = 0
-        while start < q:
-            stop = min(start + self.max_bucket, q)
-            chunk = Zd[start:stop]
-            b = self.bucket_for(chunk.shape[0])
-            if chunk.shape[0] < b:
-                Zp = np.zeros((b, self.consts.n), self.plan.dtype)
-                Zp[: chunk.shape[0]] = chunk
-                with self._lock:
-                    self.stats["padded_rows"] += b - chunk.shape[0]
-            else:
-                Zp = chunk
-            out[start:stop] = self._dispatch(Zp)[: chunk.shape[0]]
-            start = stop
+        t0 = time.perf_counter()
+        with obs.span("serve/transform", rows=q, backend=self.backend):
+            Zd = Z.astype(self.plan.dtype, copy=False)
+            out = np.empty((q, self.consts.num_features), out_dtype)
+            start = 0
+            while start < q:
+                stop = min(start + self.max_bucket, q)
+                chunk = Zd[start:stop]
+                b = self.bucket_for(chunk.shape[0])
+                if chunk.shape[0] < b:
+                    Zp = np.zeros((b, self.consts.n), self.plan.dtype)
+                    Zp[: chunk.shape[0]] = chunk
+                    self._padded_rows.inc(b - chunk.shape[0])
+                else:
+                    Zp = chunk
+                out[start:stop] = self._dispatch(Zp)[: chunk.shape[0]]
+                start = stop
+        dur = time.perf_counter() - t0
+        self.latency.observe(dur)
+        self._slo.observe(dur)
         return out
 
     def __repr__(self) -> str:

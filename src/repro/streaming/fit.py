@@ -37,7 +37,6 @@ denied us.
 
 from __future__ import annotations
 
-import time
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from typing import Iterable, List, Optional, Sequence, Tuple
@@ -47,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import obs
 from ..kernels import ops as kernel_ops
 from ..core import ihb as ihb_mod
 from ..core import terms as terms_mod
@@ -57,6 +57,7 @@ from ..core.distributed import (
     shard_map_compat,
 )
 from ..core.oavi import (
+    FitScope,
     Generator,
     OAVIConfig,
     OAVIModel,
@@ -67,10 +68,8 @@ from ..core.oavi import (
     border_index_arrays,
     collect_degree,
     degree_step_entry,
-    finalize_fit_stats,
     init_fit_stats,
     pow2_bucket,
-    sample_memory_stats,
     wavefront_schedule,
 )
 from ..core.ordering import pearson_order_from_moments
@@ -279,9 +278,11 @@ def accumulate_source_range(
     accQL, accC = acc
     num_chunks = 0
     steps = range(start, stop, chunk_rows)
-    for rows_d, mask_d in prefetch_map(stage, steps, enabled=prefetch):
-        accQL, accC = acc_fn(accQL, accC, rows_d, mask_d, parents_d, vars_d)
-        num_chunks += 1
+    with obs.span("streaming/accumulate", start=start, stop=stop,
+                  chunk_rows=chunk_rows):
+        for rows_d, mask_d in prefetch_map(stage, steps, enabled=prefetch):
+            accQL, accC = acc_fn(accQL, accC, rows_d, mask_d, parents_d, vars_d)
+            num_chunks += 1
     return accQL, accC, num_chunks
 
 
@@ -352,170 +353,165 @@ def fit(
     ``i``'s jitted accumulator runs (:func:`prefetch_map`).  The fold order
     is unchanged, so the result is bit-identical with it on or off.
     """
-    t_start = time.perf_counter()
     source = as_source(source)
     chunk_rows = _check_chunk_rows(chunk_rows)
     dtype = config.jax_dtype()
     np_dtype = _np_dtype(config.dtype)
     m, n = source.num_rows, source.num_features
     axes = tuple(data_axes)
-
-    perm = None
-    if config.ordering in ("pearson", "reverse_pearson"):
-        perm = streaming_pearson_order(
-            source, chunk_rows, reverse=(config.ordering == "reverse_pearson")
-        )
-
-    book = terms_mod.TermBook(n=n)
-    generators: List[Generator] = []
-
-    Lcap = pow2_bucket(config.cap_terms)
-    state = ihb_mod.init_state(
-        Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
+    stats = init_fit_stats(
+        m, n, streaming={"chunk_rows": chunk_rows, "num_chunks": 0, "passes": 0}
     )
-    ell = 1
-
-    # sharded layout: the SAME contiguous per-shard row spans as the
-    # in-memory distributed fit, so per-shard partials (and their psum) are
-    # bit-identical to it
     if mesh is not None:
-        shards = num_data_shards(mesh, axes)
-        m_pad = ((m + shards - 1) // shards) * shards
-        span = m_pad // shards
-        dspec = data_spec(axes)
-        chunk_sharding = NamedSharding(mesh, dspec)
-        mask_sharding = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
-        acc_sharding = NamedSharding(
-            mesh, P(axes if len(axes) > 1 else axes[0], None, None)
+        stats["mesh"] = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+        stats["data_axes"] = list(axes)
+    backend = "streaming" if mesh is None else "streaming_sharded"
+
+    with FitScope(stats, backend=backend) as scope:
+        perm = None
+        if config.ordering in ("pearson", "reverse_pearson"):
+            perm = streaming_pearson_order(
+                source, chunk_rows, reverse=(config.ordering == "reverse_pearson")
+            )
+
+        book = terms_mod.TermBook(n=n)
+        generators: List[Generator] = []
+
+        Lcap = pow2_bucket(config.cap_terms)
+        state = ihb_mod.init_state(
+            Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
         )
-        rep_sharding = NamedSharding(mesh, P())
-        state = jax.device_put(state, rep_sharding)
-        stats = init_fit_stats(
-            m,
-            n,
-            m_padded=m_pad,
-            mesh={a: int(mesh.shape[a]) for a in mesh.axis_names},
-            data_axes=list(axes),
-            streaming={"chunk_rows": chunk_rows, "num_chunks": 0, "passes": 0},
-        )
-    else:
-        shards = 1
-        span = m
-        stats = init_fit_stats(
-            m,
-            n,
-            streaming={"chunk_rows": chunk_rows, "num_chunks": 0, "passes": 0},
-        )
+        ell = 1
 
-    entry = _streaming_stats_entry(config, mesh, axes)
-    m_total = jnp.asarray(float(m), dtype)
-    steps_per_pass = max((span + chunk_rows - 1) // chunk_rows, 1)
-
-    def load_step(i: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Host-side chunk assembly for global step ``i``: each shard's rows
-        ``[s*span + i*c, ...)`` of its span, zero-padded, plus the row mask."""
-        c = chunk_rows
-        rows = np.zeros((shards * c, n), np_dtype)
-        mask = np.zeros((shards * c,), np_dtype)
-        for s in range(shards):
-            lo = s * span + i * c
-            hi = min(lo + c, (s + 1) * span, m)
-            if lo >= hi:
-                continue
-            block = np.asarray(source.read(lo, hi))
-            if perm is not None:
-                block = block[:, perm]
-            rows[s * c : s * c + hi - lo] = block
-            mask[s * c : s * c + hi - lo] = 1.0
-        return rows, mask
-
-    d = 0
-    while True:
-        d += 1
-        if d > config.max_degree:
-            stats["termination"] = f"max_degree={config.max_degree}"
-            break
-        border = book.border(d)
-        if not border:
-            stats["termination"] = "empty_border"
-            break
-        K = len(border)
-        stats["border_sizes"].append(K)
-        stats["degrees"].append(d)
-
-        # capacity management: only the O(Lcap^2) state grows — there is no
-        # (m, Lcap) buffer to regrow, which is the whole point
-        while ell + K > Lcap:
-            Lcap *= 2
-            stats["regrowths"] += 1
-            state = ihb_mod.grow_state(state, Lcap)
-            if mesh is not None:
-                state = jax.device_put(state, rep_sharding)
-
-        Kcap = max(config.cap_border, pow2_bucket(K))
-        parents, vars_, valid = border_index_arrays(book, border, Kcap)
-
-        acc_fn, acc_seen, acc_new = _chunk_accumulator(
-            book, config, Lcap, chunk_rows, mesh, axes
-        )
-        acc_sig = (Kcap, chunk_rows, n, str(dtype))
-        if acc_new or acc_sig not in acc_seen:
-            acc_seen.add(acc_sig)
-            stats["recompiles"] += 1
-        sig = (Lcap, Kcap, str(dtype))
-        if sig not in entry.seen:
-            entry.seen.add(sig)
-            stats["recompiles"] += 1
-
-        t_deg = time.perf_counter()
-        parents_d = jnp.asarray(parents)
-        vars_d = jnp.asarray(vars_)
-        if mesh is None:
-            accQL = jnp.zeros((Lcap, Kcap), jnp.float32)
-            accC = jnp.zeros((Kcap, Kcap), jnp.float32)
+        # sharded layout: the SAME contiguous per-shard row spans as the
+        # in-memory distributed fit, so per-shard partials (and their psum)
+        # are bit-identical to it
+        if mesh is not None:
+            shards = num_data_shards(mesh, axes)
+            m_pad = ((m + shards - 1) // shards) * shards
+            span = m_pad // shards
+            dspec = data_spec(axes)
+            chunk_sharding = NamedSharding(mesh, dspec)
+            mask_sharding = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+            acc_sharding = NamedSharding(
+                mesh, P(axes if len(axes) > 1 else axes[0], None, None)
+            )
+            rep_sharding = NamedSharding(mesh, P())
+            state = jax.device_put(state, rep_sharding)
+            stats["m_padded"] = m_pad
         else:
-            accQL = jax.device_put(
-                jnp.zeros((shards, Lcap, Kcap), jnp.float32), acc_sharding
+            shards = 1
+            span = m
+
+        entry = _streaming_stats_entry(config, mesh, axes)
+        m_total = jnp.asarray(float(m), dtype)
+        steps_per_pass = max((span + chunk_rows - 1) // chunk_rows, 1)
+
+        def load_step(i: int) -> Tuple[np.ndarray, np.ndarray]:
+            """Host-side chunk assembly for global step ``i``: each shard's
+            rows ``[s*span + i*c, ...)`` of its span, zero-padded, plus the
+            row mask."""
+            c = chunk_rows
+            rows = np.zeros((shards * c, n), np_dtype)
+            mask = np.zeros((shards * c,), np_dtype)
+            for s in range(shards):
+                lo = s * span + i * c
+                hi = min(lo + c, (s + 1) * span, m)
+                if lo >= hi:
+                    continue
+                block = np.asarray(source.read(lo, hi))
+                if perm is not None:
+                    block = block[:, perm]
+                rows[s * c : s * c + hi - lo] = block
+                mask[s * c : s * c + hi - lo] = 1.0
+            return rows, mask
+
+        d = 0
+        while True:
+            d += 1
+            if d > config.max_degree:
+                stats["termination"] = f"max_degree={config.max_degree}"
+                break
+            border = book.border(d)
+            if not border:
+                stats["termination"] = "empty_border"
+                break
+            K = len(border)
+            stats["border_sizes"].append(K)
+            stats["degrees"].append(d)
+
+            # capacity management: only the O(Lcap^2) state grows — there is
+            # no (m, Lcap) buffer to regrow, which is the whole point
+            while ell + K > Lcap:
+                Lcap *= 2
+                scope.regrowth(Lcap)
+                state = ihb_mod.grow_state(state, Lcap)
+                if mesh is not None:
+                    state = jax.device_put(state, rep_sharding)
+
+            Kcap = max(config.cap_border, pow2_bucket(K))
+            parents, vars_, valid = border_index_arrays(book, border, Kcap)
+
+            acc_fn, acc_seen, acc_new = _chunk_accumulator(
+                book, config, Lcap, chunk_rows, mesh, axes
             )
-            accC = jax.device_put(
-                jnp.zeros((shards, Kcap, Kcap), jnp.float32), acc_sharding
-            )
+            # a fresh accumulator fn (acc_new) starts with an empty ``seen``,
+            # so its first signature always counts — same rule as before
+            acc_sig = (Kcap, chunk_rows, n, str(dtype))
+            scope.note_signature(acc_seen, acc_sig, kind="fit/compile_accumulator")
+            scope.note_signature(entry.seen, (Lcap, Kcap, str(dtype)))
 
-        def stage(i: int):
-            rows, mask = load_step(i)
-            if mesh is None:
-                return jnp.asarray(rows), jnp.asarray(mask)
-            return (
-                jax.device_put(rows, chunk_sharding),
-                jax.device_put(mask, mask_sharding),
-            )
+            with scope.degree(d, K=K):
+                parents_d = jnp.asarray(parents)
+                vars_d = jnp.asarray(vars_)
+                if mesh is None:
+                    accQL = jnp.zeros((Lcap, Kcap), jnp.float32)
+                    accC = jnp.zeros((Kcap, Kcap), jnp.float32)
+                else:
+                    accQL = jax.device_put(
+                        jnp.zeros((shards, Lcap, Kcap), jnp.float32), acc_sharding
+                    )
+                    accC = jax.device_put(
+                        jnp.zeros((shards, Kcap, Kcap), jnp.float32), acc_sharding
+                    )
 
-        for rows_d, mask_d in prefetch_map(
-            stage, range(steps_per_pass), enabled=prefetch
-        ):
-            accQL, accC = acc_fn(accQL, accC, rows_d, mask_d, parents_d, vars_d)
-        stats["streaming"]["num_chunks"] += steps_per_pass
-        stats["streaming"]["passes"] += 1
+                def stage(i: int):
+                    rows, mask = load_step(i)
+                    if mesh is None:
+                        return jnp.asarray(rows), jnp.asarray(mask)
+                    return (
+                        jax.device_put(rows, chunk_sharding),
+                        jax.device_put(mask, mask_sharding),
+                    )
 
-        st = entry.fn(
-            accQL,
-            accC,
-            state,
-            jnp.asarray(ell, jnp.int32),
-            jnp.asarray(valid),
-            m_total,
-        )
-        state = st.ihb
-        accepted = np.asarray(st.accepted)
-        mses = np.asarray(st.mses)
-        coeffs = np.asarray(st.coeffs)
-        stats["degree_times"].append(round(time.perf_counter() - t_deg, 6))
-        stats["solver_iters"].append(int(np.asarray(st.iters)[:K].sum()))
-        sample_memory_stats(stats)
+                with obs.span("streaming/accumulate", d=d, chunks=steps_per_pass):
+                    for rows_d, mask_d in prefetch_map(
+                        stage, range(steps_per_pass), enabled=prefetch
+                    ):
+                        accQL, accC = acc_fn(
+                            accQL, accC, rows_d, mask_d, parents_d, vars_d
+                        )
+                stats["streaming"]["num_chunks"] += steps_per_pass
+                stats["streaming"]["passes"] += 1
 
-        ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+                st = entry.fn(
+                    accQL,
+                    accC,
+                    state,
+                    jnp.asarray(ell, jnp.int32),
+                    jnp.asarray(valid),
+                    m_total,
+                )
+                state = st.ihb
+                accepted = np.asarray(st.accepted)
+                mses = np.asarray(st.mses)
+                coeffs = np.asarray(st.coeffs)
+                iters = np.asarray(st.iters)
+            stats["solver_iters"].append(int(iters[:K].sum()))
 
-    finalize_fit_stats(stats, book, generators, Lcap, config, t_start)
+            ell = collect_degree(book, border, accepted, mses, coeffs, generators)
+
+        scope.finalize(book, generators, Lcap, config)
     return OAVIModel(
         n=n,
         psi=config.psi,
