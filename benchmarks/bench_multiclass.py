@@ -10,10 +10,16 @@ Measures, at k in {4, 8, 16} classes on synthetic planted-variety data:
   matched capacity holds automatically), and the k=8 row must show the
   >= 2x speedup the class-batched path is for.
 * **lognormal-skewed class sizes** — the realistic regime: classes are
-  grouped into <= 2x-padding row buckets by :func:`repro.api.fit_classes`
-  (stragglers fall back to sequential); speedup plus padding overhead and
-  the batched/sequential split are reported.  Structure (terms, accepted
+  grouped into shared row buckets by :func:`repro.api.fit_classes`
+  (cross-bucket merges bounded ~2x padding; stragglers folded into their
+  cheapest warm bucket, never sequential); speedup plus padding overhead
+  and the group count are reported.  Structure (terms, accepted
   generators) is asserted identical to the sequential fits.
+* **bpcg oracle engine** (equal sizes) — the paper's BPCG+IHB config through
+  the masked fixed-schedule solver path: batched asserted bit-exact against
+  the sequential while_loop-ref fits, >= 2x at k=8, 0 warm recompiles
+  (the schedule-escalation trajectory is deterministic, so a warm refit
+  replays it from the cache).
 * **warm-refit recompiles** — a second batched multi-class fit must report
   0 recompiles (shared global degree-step cache).
 
@@ -32,6 +38,7 @@ import numpy as np
 from repro import api
 from repro.core import class_batch, oavi
 from repro.core.oavi import OAVIConfig
+from repro.core.oracles import OracleConfig
 from repro.core.transform import MinMaxScaler
 from repro.data.synthetic import lognormal_sizes, multiclass_planted
 
@@ -108,7 +115,47 @@ def run(rep: Reporter, quick: bool = True):
             else:
                 raise AssertionError(msg)
 
-        # ---- lognormal-skewed sizes (bucketed + straggler fallback) ------
+        # ---- bpcg oracle engine (fixed-schedule solvers under vmap) ------
+        cfg_bpcg = OAVIConfig(
+            psi=PSI,
+            engine="oracle",
+            solver=OracleConfig(name="bpcg"),
+            ihb=True,
+            cap_terms=64,
+        )
+        seq0 = [oavi.fit(Xc, cfg_bpcg) for Xc in Xcs]  # while_loop refs
+        bat0 = class_batch.fit_classes(Xcs, cfg_bpcg)  # scheduled solvers
+        _assert_bit_exact(seq0, bat0)
+
+        t_seq = timeit(lambda: [oavi.fit(Xc, cfg_bpcg) for Xc in Xcs], repeat=5)
+        t_bat = timeit(lambda: class_batch.fit_classes(Xcs, cfg_bpcg), repeat=5)
+        warm = class_batch.fit_classes(Xcs, cfg_bpcg)
+        speedup = t_seq / max(t_bat, 1e-9)
+        row = {
+            "section": "bpcg_oracle",
+            "k": k,
+            "rows_per_class": mean_rows,
+            "n": N_FEATURES,
+            "num_G_total": sum(m.num_G for m in bat0),
+            "t_sequential_s": round(t_seq, 4),
+            "t_batched_s": round(t_bat, 4),
+            "speedup": round(speedup, 2),
+            "bit_exact": True,
+            "schedule_len": warm[0].stats["solver_schedule_len"],
+            "escalations": warm[0].stats["solver_escalations"],
+            "recompiles_warm": warm[0].stats["recompiles"],
+        }
+        rows.append(row)
+        rep.add("multiclass_batched", **row)
+        assert warm[0].stats["recompiles"] == 0, "warm bpcg batched refit recompiled"
+        if k == 8 and speedup < 2.0:
+            msg = f"k=8 bpcg class-batched speedup {speedup:.2f}x < 2x"
+            if os.environ.get("BENCH_SOFT"):
+                print(f"WARNING: {msg} (BENCH_SOFT set; not failing)")
+            else:
+                raise AssertionError(msg)
+
+        # ---- lognormal-skewed sizes (bucketed, stragglers folded in) -----
         sizes = lognormal_sizes(k, mean_rows, seed=k)
         Xs, ys = multiclass_planted(sizes, n=N_FEATURES, seed=100 + k)
         Xs = MinMaxScaler(dtype="float32").fit_transform(Xs)

@@ -19,6 +19,12 @@ DEFAULT_NAMES = [
     "resilience", "obs",
 ]
 
+# benches whose rows must cover specific sections (e.g. the oracle-engine
+# class-batch speedup must actually be recorded, not silently dropped)
+REQUIRED_SECTIONS = {
+    "multiclass": ("equal_sizes", "bpcg_oracle", "lognormal_sizes"),
+}
+
 
 def check(name: str, out_dir: str = "results") -> str:
     """Returns an error string, or '' when the artifact is well-formed."""
@@ -39,6 +45,11 @@ def check(name: str, out_dir: str = "results") -> str:
         return f"{path}: empty or non-list rows"
     if not all(isinstance(r, dict) for r in rows):
         return f"{path}: non-dict row"
+    required = REQUIRED_SECTIONS.get(name, ())
+    got = {r.get("section") for r in rows}
+    missing = [s for s in required if s not in got]
+    if missing:
+        return f"{path}: missing required section(s) {missing} (got {sorted(got)})"
     return ""
 
 

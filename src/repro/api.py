@@ -516,19 +516,29 @@ def fit_classes(
     """Fit one model per class — Algorithm 2's generator-construction phase.
 
     With ``class_batch="auto"`` (default) and an eligible OAVI config
-    (:func:`repro.core.oavi.class_batchable`: the closed-form ``fast`` engine
-    — oracle solvers, WIHB and the Cholesky engine are not vmap-bit-stable),
-    classes are grouped into shared pow2 row buckets
-    (:func:`repro.core.class_batch.class_buckets`, bounding padding below
-    2x) and every group of >= 2 classes is fitted through ONE vmapped jitted
-    degree step (:func:`repro.core.class_batch.fit_classes`) — bit-exact
-    against the sequential path at matched capacity, one dispatch per degree
-    instead of k.  Straggler classes (alone in their size bucket), non-OAVI
-    methods and non-batchable configs fall back to per-class :func:`fit`.
+    (:func:`repro.core.oavi.class_batchable`: every engine with the Theorem
+    4.9 ``inverse`` — the ``fast`` closed form AND the oracle solvers/WIHB,
+    which run their masked fixed-schedule twins under ``vmap``; only the
+    Cholesky engine is excluded), classes are grouped into shared pow2 row
+    buckets (:func:`repro.core.class_batch.plan_class_groups`: greedy
+    buckets, cross-bucket merges while padding stays ~2x, and straggler
+    classes folded into their cheapest warm bucket rather than fitted
+    sequentially) and every group is fitted through ONE vmapped jitted degree
+    step (:func:`repro.core.class_batch.fit_classes`) — bit-exact against
+    the sequential path at matched capacity, one dispatch per degree instead
+    of k.  Non-OAVI methods and non-batchable configs fall back to per-class
+    :func:`fit`.  Each batched model's ``stats["class_batch_padding"]``
+    reports the padded-row bill its group paid.
 
     The sharded backend composes: when ``backend`` resolves to
     ``"sharded"``, batched groups run the vmap-inside-``shard_map`` step
     over ``mesh`` (class axis replicated, sample axis sharded).
+
+    With ``chunk_rows`` (out-of-core classes) and a local backend, batchable
+    configs route through :func:`repro.streaming.fit_classes`: each class
+    streams its own chunks, and the per-degree acceptance decisions run as
+    one vmapped statistics-only step — no row padding at all (streaming has
+    no shared row bucket).  Sharded streaming stays per-class.
 
     Returns the fitted models in class order.  Batched models' stats carry a
     ``"class_batch"`` group dict whose shared ``recompiles`` / ``regrowths``
@@ -544,8 +554,9 @@ def fit_classes(
     def seq_fit(X):
         if chunk_rows is not None and entry.name == "oavi":
             # out-of-core per-class fits: each class streams through the
-            # chunk accumulator (bit-exact vs its in-memory fit); the
-            # vmapped class batch does not compose with streaming yet
+            # chunk accumulator (bit-exact vs its in-memory fit); used when
+            # the vmapped streaming class batch doesn't apply (sharded
+            # streaming, non-batchable configs)
             return fit(
                 X,
                 method,
@@ -569,12 +580,7 @@ def fit_classes(
             **dict(method_kw),
         )
 
-    if (
-        class_batch == "off"
-        or entry.name != "oavi"
-        or len(Xs) < 2
-        or chunk_rows is not None
-    ):
+    if class_batch == "off" or entry.name != "oavi" or len(Xs) < 2:
         return [seq_fit(X) for X in Xs]
     cfg = (
         config
@@ -582,30 +588,57 @@ def fit_classes(
         else oavi_config_for(variant or "fast", psi, **dict(method_kw))
     )
     if not oavi_mod.class_batchable(cfg):
-        return [seq_fit(X) for X in Xs]  # oracle/chol/WIHB: sequential
+        return [seq_fit(X) for X in Xs]  # chol engine only: sequential
 
     backend_r, mesh_r = _resolve_backend(
         entry, backend, mesh, max(X.shape[0] for X in Xs)
     )
     if backend_r == "sharded" and mesh_r is None:
         mesh_r = _default_mesh(data_axes)
+
+    if chunk_rows is not None:
+        if backend_r == "sharded":
+            # sharded streaming stays per-class (the vmapped streaming stats
+            # step is local-only)
+            return [seq_fit(X) for X in Xs]
+        fitted = streaming_mod.fit_classes(Xs, cfg, chunk_rows=chunk_rows)
+        for model in fitted:
+            model.stats["api"] = {
+                "method": entry.spec(variant),
+                "backend": backend_r,
+                "streaming": True,
+                "class_batch": True,
+            }
+        return list(fitted)
+
     models: List[Optional[VanishingIdealModel]] = [None] * len(Xs)
-    buckets = class_batch_mod.class_buckets([X.shape[0] for X in Xs])
-    for _, idxs in sorted(buckets.items()):
-        if len(idxs) == 1:
-            models[idxs[0]] = seq_fit(Xs[idxs[0]])  # straggler fallback
-            continue
+    sizes = [X.shape[0] for X in Xs]
+    for cap, idxs in class_batch_mod.plan_class_groups(sizes):
         fitted = class_batch_mod.fit_classes(
             [Xs[i] for i in idxs],
             cfg,
             mesh=mesh_r if backend_r == "sharded" else None,
             data_axes=tuple(data_axes),
+            m_cap=cap,
         )
+        # the dispatched row bucket (>= cap: sharding may round up)
+        mc = int(fitted[0].stats["class_batch"]["m_cap"])
+        group_rows = sum(sizes[i] for i in idxs)
+        group_padded = mc * len(idxs) - group_rows
         for i, model in zip(idxs, fitted):
             model.stats["api"] = {
                 "method": entry.spec(variant),
                 "backend": backend_r,
                 "class_batch": True,
+            }
+            model.stats["class_batch_padding"] = {
+                "m_cap": mc,
+                "rows": int(sizes[i]),
+                "padded_rows": mc - int(sizes[i]),
+                "group_rows": int(group_rows),
+                "group_padded_rows": int(group_padded),
+                # fraction of the group's dispatched rows that are padding
+                "waste": group_padded / float(mc * len(idxs)),
             }
             models[i] = model
     return models

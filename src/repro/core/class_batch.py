@@ -33,18 +33,30 @@ sequential path uses (:func:`repro.core.oavi._make_degree_step`):
 
 Bit-exactness
 -------------
-For eligible configs (:func:`repro.core.oavi.class_batchable`: the closed-
-form ``fast`` engine with the Theorem 4.9 inverse) every primitive in the
-degree step is vmap-bit-stable — batched matmuls, matvecs, gathers and
-scatters produce the same bits as their per-slice counterparts — so the
-batched fit is **bit-exact** against the sequential fit *at matched
-capacity*: same ``Lcap``/``Kcap`` buckets and same row count.  Classes whose
+For eligible configs (:func:`repro.core.oavi.class_batchable`: every engine
+with the Theorem 4.9 inverse) every primitive in the degree step is
+vmap-bit-stable — batched matmuls, matvecs, gathers and scatters produce the
+same bits as their per-slice counterparts — so the batched fit is
+**bit-exact** against the sequential fit *at matched capacity*: same
+``Lcap``/``Kcap`` buckets and same row count.  Classes whose
 ``m_c == m_cap`` (no row padding — e.g. equal-size class buckets at a pow2
 size) therefore reproduce :func:`repro.core.oavi.fit` exactly; padded
 classes are bit-exact against the matched-``m_cap`` reference (a ``k=1`` run
 of this module) and structure-exact vs the unpadded sequential fit, with
 coefficients differing only by the fp summation-order drift of the longer
 (zero-extended) Gram reduction.
+
+Oracle / WIHB configs additionally swap the data-dependent ``while_loop``
+solvers for their masked fixed-schedule twins
+(:mod:`repro.core.oracles`, ``solve_*_scheduled``): all classes share one
+static iteration budget, converged lanes carry state as bitwise no-ops, and
+whenever any valid lane reports an unconverged solve the driver doubles the
+budget (pow2 buckets, mirroring capacity regrowth) and re-dispatches the
+same degree — safe because the batched step donates nothing.  Escalated to
+convergence, the fixed-schedule iterates compose exactly like the
+``while_loop`` refs, so the bit-exactness contract above carries over to
+oracle engines unchanged; the escalation trajectory is a deterministic
+function of the data, so warm refits replay it with zero recompiles.
 
 Distribution composes: with a mesh, the class axis (vmap) nests inside the
 data-sharded ``shard_map`` psum path — see
@@ -54,6 +66,7 @@ data-sharded ``shard_map`` psum path — see
 from __future__ import annotations
 
 import itertools
+from functools import partial
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -61,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ihb as ihb_mod
+from . import oracles as oracles_mod
 from . import terms as terms_mod
 from .oavi import (
     FitScope,
@@ -87,25 +101,54 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
-def _batched_entry(config: OAVIConfig, mesh, data_axes):
+@partial(jax.jit, static_argnames=("Lcap", "factors"))
+def _init_batch_arrays(mask, Lcap: int, factors):
+    """Initial batched fit arrays in ONE cached dispatch: A with the row-mask
+    constant column, plus the per-class IHB factors.  Built eagerly this is
+    half a dozen scatter/eye dispatches per fit — measurable host overhead in
+    the dispatch-bound regime the batched path exists for.  Same ops as the
+    eager form, so the values are bit-identical."""
+    k = mask.shape[0]
+    dtype = mask.dtype
+    A = jnp.zeros((k, mask.shape[1], Lcap), dtype).at[:, :, 0].set(mask)
+    # normalized Gram convention: AtA[0,0] = ||mask_c||^2 / m_c = 1 per class
+    state = ihb_mod.batch_state(
+        ihb_mod.init_state(Lcap, jnp.asarray(1.0, dtype), dtype, factors=factors),
+        k,
+    )
+    return A, state
+
+
+def _batched_entry(config: OAVIConfig, mesh, data_axes, schedule=None):
     """Cached jitted batched step: plain ``jit(vmap(step))`` locally, the
-    vmap-inside-shard_map composition when a mesh is given."""
+    vmap-inside-shard_map composition when a mesh is given.  ``schedule``
+    (oracle/WIHB configs) selects the fixed-schedule solver budget and is
+    part of the cache key — each escalation level is its own jitted step, so
+    a warm refit replaying the same escalations compiles nothing."""
     if mesh is None:
         return degree_step_entry(
             config,
-            backend_key="class_batch",
-            jitted_builder=lambda: jax.jit(jax.vmap(_make_degree_step(config))),
+            backend_key=("class_batch", schedule),
+            jitted_builder=lambda: jax.jit(
+                jax.vmap(_make_degree_step(config, schedule=schedule))
+            ),
         )
     from . import distributed as distributed_mod
 
     axes = tuple(data_axes)
     return degree_step_entry(
         config,
-        backend_key=("class_batch", mesh, axes),
+        backend_key=("class_batch", mesh, axes, schedule),
         jitted_builder=lambda: distributed_mod.make_class_batched_sharded_degree_step(
-            config, mesh, axes
+            config, mesh, axes, schedule=schedule
         ),
     )
+
+
+def needs_solver_schedule(config: OAVIConfig) -> bool:
+    """Whether batched fits of this config must run the fixed-schedule
+    solvers (any path that invokes a convex oracle under ``vmap``)."""
+    return config.engine == "oracle" or config.wihb
 
 
 def fit_classes(
@@ -129,8 +172,8 @@ def fit_classes(
     """
     if not class_batchable(config):
         raise ValueError(
-            "config is not class-batchable (requires engine='fast', "
-            "inverse_engine='inverse', wihb=False); use sequential fits"
+            "config is not class-batchable (inverse_engine='chol' batched "
+            "triangular solves are not vmap-bit-stable); use sequential fits"
         )
     dtype = config.jax_dtype()
     Xs = [np.asarray(X) for X in Xs]
@@ -193,13 +236,8 @@ def fit_classes(
             mask[c, : ms[c]] = 1.0
         Xd = jnp.asarray(Xstack)
         Lcap = pow2_bucket(config.cap_terms)
-        A = jnp.zeros((k, mc, Lcap), dtype).at[:, :, 0].set(jnp.asarray(mask))
-        # normalized Gram convention: AtA[0,0] = ||mask_c||^2 / m_c = 1 per class
-        state = ihb_mod.batch_state(
-            ihb_mod.init_state(
-                Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
-            ),
-            k,
+        A, state = _init_batch_arrays(
+            jnp.asarray(mask), Lcap, config.ihb_factors()
         )
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -219,7 +257,17 @@ def fit_classes(
         ells = [1] * k
         active = [True] * k
 
-        entry = _batched_entry(config, mesh, data_axes)
+        # Fixed-schedule solver budget (oracle/WIHB configs): starts at the
+        # config's pow2 bucket, doubles whenever any lane's solve was cut
+        # short, persists across degrees (like capacity, it only grows).
+        schedule = (
+            oracles_mod.schedule_budget(config.solver)
+            if needs_solver_schedule(config)
+            else None
+        )
+        batch["solver_schedule_len"] = schedule
+        batch["solver_escalations"] = 0
+
         m_total = jnp.asarray([float(m) for m in ms], dtype)
 
         per_class = [init_fit_stats(ms[c], n) for c in range(k)]
@@ -258,7 +306,6 @@ def fit_classes(
                 if mesh is not None:
                     A = jax.device_put(A, bspec)
                     state = jax.device_put(state, rep)
-
             Kcap = max(config.cap_border, pow2_bucket(max(Ks)))
             parents = np.zeros((k, Kcap), np.int32)
             vars_ = np.zeros((k, Kcap), np.int32)
@@ -269,23 +316,38 @@ def fit_classes(
                         books[c], borders[c], Kcap
                     )
 
-            scope.note_signature(entry.seen, (k, mc, n, Lcap, Kcap, str(dtype)))
+            ells_d = jnp.asarray(ells, jnp.int32)
+            parents_d = jnp.asarray(parents)
+            vars_d = jnp.asarray(vars_)
+            valid_d = jnp.asarray(valid)
 
             with scope.degree(d, K=int(max(Ks)), k=k):
-                A, st = entry.fn(
-                    A,
-                    Xd,
-                    state,
-                    jnp.asarray(ells, jnp.int32),
-                    jnp.asarray(parents),
-                    jnp.asarray(vars_),
-                    jnp.asarray(valid),
-                    m_total,
-                )
+                # Escalation loop: the batched step donates nothing, so on an
+                # unconverged budget we simply double the schedule and re-run
+                # the same degree from the same inputs (iteration chunks
+                # compose exactly — the longer run replays the shorter one's
+                # iterations bit-for-bit, then continues).
+                while True:
+                    entry = _batched_entry(config, mesh, data_axes, schedule)
+                    scope.note_signature(
+                        entry.seen, (k, mc, n, Lcap, Kcap, str(dtype), schedule)
+                    )
+                    A_next, st = entry.fn(
+                        A, Xd, state, ells_d, parents_d, vars_d, valid_d, m_total
+                    )
+                    # one host sync per degree: the escalation verdict rides
+                    # the same transfer as the accept/reject results
+                    accepted, mses, coeffs, iters, unconverged = jax.device_get(
+                        (st.accepted, st.mses, st.coeffs, st.iters, st.unconverged)
+                    )
+                    if schedule is None or not bool(np.any(unconverged)):
+                        break
+                    if schedule >= oracles_mod.max_schedule(config.solver):
+                        break
+                    schedule = oracles_mod.escalate_schedule(config.solver, schedule)
+                    batch["solver_escalations"] += 1
+                A = A_next
                 state = st.ihb
-                accepted, mses, coeffs, iters = jax.device_get(
-                    (st.accepted, st.mses, st.coeffs, st.iters)
-                )
 
             for c in range(k):
                 if not borders[c]:
@@ -295,6 +357,7 @@ def fit_classes(
                     books[c], borders[c], accepted[c], mses[c], coeffs[c], generators[c]
                 )
 
+        batch["solver_schedule_len"] = schedule
         models: List[OAVIModel] = []
         for c in range(k):
             stats = per_class[c]
@@ -303,6 +366,8 @@ def fit_classes(
             stats["recompiles"] = batch["recompiles"]
             stats["regrowths"] = batch["regrowths"]
             stats["degree_times"] = list(batch["degree_times"])
+            stats["solver_schedule_len"] = schedule
+            stats["solver_escalations"] = batch["solver_escalations"]
             stats["class_batch"] = {
                 "group": batch["group"],
                 "size": k,
@@ -341,3 +406,56 @@ def class_buckets(sizes: Sequence[int]) -> Dict[int, List[int]]:
         buckets[cap] = sorted(group)
         i += len(group)
     return buckets
+
+
+def plan_class_groups(
+    sizes: Sequence[int], pad_limit: float = 2.0
+) -> List[tuple]:
+    """Plan the shared row buckets of a multi-class fit as ``[(m_cap,
+    class_indices), ...]`` — :func:`class_buckets` plus two refinements that
+    trade padded rows for fewer dispatch groups:
+
+    1. **Cross-bucket merging** (largest cap first): a smaller bucket folds
+       into the preceding larger one while the merged group's total padded
+       rows stay within ``pad_limit`` of its real rows, so near-boundary
+       buckets don't each pay their own compile/dispatch pipeline.
+    2. **No stragglers**: any group left with a single class is folded —
+       unconditionally — into whichever surviving group grows its padded-row
+       bill the least.  A size-1 "batch" would otherwise fall back to a
+       sequential fit (a cold compile for exactly one class); eating some
+       padding on an already-warm bucket is strictly cheaper.
+
+    The resulting per-class padding is reported by the API layer in
+    ``stats["class_batch_padding"]``.
+    """
+    if len(sizes) == 0:
+        return []
+    buckets = class_buckets(sizes)
+    groups = [
+        [cap, list(idxs)] for cap, idxs in sorted(buckets.items(), reverse=True)
+    ]
+    merged = [groups[0]]
+    for cap, idxs in groups[1:]:
+        host = merged[-1]
+        count = len(host[1]) + len(idxs)
+        real = sum(sizes[i] for i in host[1]) + sum(sizes[i] for i in idxs)
+        if host[0] * count <= pad_limit * real:
+            host[1] = sorted(host[1] + idxs)
+        else:
+            merged.append([cap, list(idxs)])
+    while len(merged) > 1:
+        singles = [g for g in merged if len(g[1]) == 1]
+        if not singles:
+            break
+        g = singles[0]
+        merged.remove(g)
+        s = sizes[g[1][0]]
+
+        def extra(h):
+            new_cap = max(h[0], pow2_bucket(s))
+            return new_cap * (len(h[1]) + 1) - h[0] * len(h[1])
+
+        host = min(merged, key=extra)
+        host[0] = max(host[0], pow2_bucket(s))
+        host[1] = sorted(host[1] + g[1])
+    return [(int(cap), idxs) for cap, idxs in merged]

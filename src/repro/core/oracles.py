@@ -21,6 +21,28 @@ Early-termination rules follow Section 6.1 of the paper:
   * stop when no vanishing vector can exist (``f - gap > psi`` certifies
     ``f* > psi`` for CG variants),
   * hard iteration cap.
+
+Each solver comes in two executions of the *same* per-iteration body:
+
+  * ``solve_*`` — a data-dependent ``while_loop`` over the early-termination
+    predicate.  Cheapest for a single cold solve (stops the moment a
+    certificate fires) but the trip count is data-dependent, so it is not
+    vmap-bit-stable and cannot ride the class-batched / streaming paths.
+  * ``solve_*_scheduled`` — a fixed-schedule ``fori_loop`` over a static
+    iteration budget where the early-termination predicate becomes a per-lane
+    active mask: converged lanes carry their state as bitwise no-ops (the
+    same trick ``class_batch`` uses for finished classes).  Batched fit loops
+    escalate the budget (x2, pow2 buckets — mirroring capacity regrowth)
+    while any lane reports ``converged == False``; because iteration chunks
+    compose exactly, a scheduled solve escalated to convergence is
+    bit-identical to the while_loop ref.
+
+Both paths share ``cond``/``body``/``finish`` closures built by the per-solver
+``_*_parts`` helpers, so parity is structural rather than numerical luck.
+All vector reductions use :func:`vdot` (elementwise multiply + sum) instead of
+fused ``a @ b`` dots: the fused form lowers to a different reduction order
+under ``vmap``, which would break the bit-identity contract between a batched
+solve and its single-lane twin.
 """
 
 from __future__ import annotations
@@ -35,6 +57,11 @@ import jax.numpy as jnp
 NEG_INF = -jnp.inf
 
 
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1) (schedule buckets)."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class OracleConfig:
     name: str = "bpcg"  # 'agd' | 'cg' | 'pcg' | 'bpcg'
@@ -43,6 +70,44 @@ class OracleConfig:
     eps_frac: float = 0.01  # solver accuracy = eps_frac * psi
     # AGD: number of power iterations used to estimate the smoothness constant
     power_iters: int = 30
+    # Fixed-schedule path: initial per-solve iteration budget (pow2-bucketed
+    # by schedule_budget).  This only sets where device-side escalation
+    # starts, never the reachable accuracy — batched fit loops double it
+    # until every lane converges or max_iter is reached.  The default, 0, is
+    # a certificate-check-only start: the solver state is initialized from
+    # the warm start and the early-termination predicate is evaluated at
+    # entry without running a single iteration — for IHB-warm solves (the
+    # paper's flagship configs) the closed-form warm start already fires a
+    # certificate, so budget 0 costs one gradient/gap evaluation per lane,
+    # within epsilon of the early-exit while_loop ref.  Cold configs
+    # escalate geometrically (0 -> 1 -> 2 -> ...) to whatever they need, and
+    # the budget persists across degrees, so the escalation bill is paid
+    # once per fit, not once per degree.
+    schedule: int = 0
+
+
+def schedule_budget(cfg: OracleConfig) -> int:
+    """Initial fixed-schedule iteration budget: purely config-driven.
+
+    pow2-bucketed (0 allowed: certificate-check only) so refits under the
+    same config reuse the same compiled step.  Deliberately NOT
+    capacity-coupled: a masked fixed-schedule lane pays its full budget in
+    FLOPs whether or not it converged earlier, so over-provisioning the
+    start burns more than the escalation re-dispatch it would save —
+    warm-started solves finish in O(1) iterations at any base size, and
+    cold solves find their level in log2(need) doublings."""
+    s = max(int(cfg.schedule), 0)
+    return min(next_pow2(int(cfg.max_iter)), next_pow2(s) if s else 0)
+
+
+def max_schedule(cfg: OracleConfig) -> int:
+    """Budget at which every lane is guaranteed ``converged`` (the
+    ``k < max_iter`` clause falsifies the active mask)."""
+    return next_pow2(int(cfg.max_iter))
+
+
+def escalate_schedule(cfg: OracleConfig, schedule: int) -> int:
+    return min(max_schedule(cfg), max(int(schedule) * 2, 1))
 
 
 class SolveResult(NamedTuple):
@@ -50,10 +115,22 @@ class SolveResult(NamedTuple):
     f: jax.Array  # objective value (MSE of the candidate polynomial)
     gap: jax.Array  # FW gap (CG variants) or squared grad norm (AGD)
     iters: jax.Array  # iterations used
+    # True when the early-termination predicate held at exit: a certificate
+    # fired, the accuracy target was met, or max_iter was reached.  Always
+    # True for the while_loop refs; False from a fixed-schedule solver means
+    # the budget cut the iteration short and the caller should escalate.
+    converged: jax.Array = True
+
+
+def vdot(a, b):
+    """Vector dot as elementwise multiply + reduce — the vmap-bit-stable
+    lowering (a fused ``a @ b`` reduces in a different order when batched;
+    cf. ``repro.core.ihb.mse_from_solution``)."""
+    return jnp.sum(a * b)
 
 
 def quad_f(Q, q, btb, inv_m, y):
-    return (y @ (Q @ y) + 2.0 * (q @ y) + btb) * inv_m
+    return (vdot(y, Q @ y) + 2.0 * vdot(q, y) + btb) * inv_m
 
 
 def quad_grad(Q, q, inv_m, y):
@@ -63,10 +140,33 @@ def quad_grad(Q, q, inv_m, y):
 def _line_search_quad(Q, inv_m, grad, d, gamma_max):
     """Exact line search for the quadratic along ``d``; clipped to
     ``[0, gamma_max]``.  f(y + g d) - f(y) = g <grad, d> + g^2 d^T Q d / m."""
-    dQd = (d @ (Q @ d)) * inv_m
-    num = -(grad @ d)
+    dQd = vdot(d, Q @ d) * inv_m
+    num = -vdot(grad, d)
     gamma = jnp.where(dQd > 0, num / jnp.maximum(2.0 * dQd, 1e-30), gamma_max)
     return jnp.clip(gamma, 0.0, gamma_max)
+
+
+# --------------------------------------------------------------------------
+# Shared runners: one body, two trip-count disciplines
+# --------------------------------------------------------------------------
+
+
+def _run_while(state0, cond, body, finish) -> "SolveResult":
+    final = jax.lax.while_loop(cond, body, state0)
+    return finish(final)
+
+
+def _run_scheduled(state0, cond, body, finish, schedule: int) -> "SolveResult":
+    def step(_, st):
+        active = cond(st)
+        nxt = body(st)
+        return jax.tree_util.tree_map(
+            lambda new, old: jnp.where(active, new, old), nxt, st
+        )
+
+    final = jax.lax.fori_loop(0, int(schedule), step, state0)
+    res = finish(final)
+    return res._replace(converged=jnp.logical_not(cond(final)))
 
 
 # --------------------------------------------------------------------------
@@ -76,17 +176,50 @@ def _line_search_quad(Q, inv_m, grad, d, gamma_max):
 
 def _estimate_lmax(Q, mask, iters: int):
     """Power iteration on the masked Gram matrix."""
-    L = Q.shape[0]
     v0 = jnp.where(mask, 1.0, 0.0).astype(Q.dtype)
-    v0 = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-30)
+    v0 = v0 / jnp.maximum(jnp.sqrt(vdot(v0, v0)), 1e-30)
 
     def body(_, v):
         w = Q @ v
-        nrm = jnp.linalg.norm(w)
+        nrm = jnp.sqrt(vdot(w, w))
         return jnp.where(nrm > 0, w / jnp.maximum(nrm, 1e-30), v)
 
     v = jax.lax.fori_loop(0, iters, body, v0)
-    return jnp.maximum(v @ (Q @ v), 1e-30)
+    return jnp.maximum(vdot(v, Q @ v), 1e-30)
+
+
+def _agd_parts(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0):
+    dtype = Q.dtype
+    Lcap = Q.shape[0]
+    inv_m = (1.0 / m).astype(dtype)
+    maskf = mask.astype(dtype)
+    if y0 is None:
+        y0 = jnp.zeros((Lcap,), dtype)
+    y0 = y0 * maskf
+    lmax = _estimate_lmax(Q, mask, cfg.power_iters)
+    step = 1.0 / (2.0 * lmax * inv_m)  # 1/L_smooth with L = 2 lmax / m
+    eps = cfg.eps_frac * psi
+
+    def cond(state):
+        _, _, _, k, gnorm2 = state
+        return jnp.logical_and(k < cfg.max_iter, gnorm2 > eps * eps)
+
+    def body(state):
+        y, z, t, k, _ = state
+        g = quad_grad(Q, q, inv_m, z) * maskf
+        y_new = z - step * g
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_new = y_new + ((t - 1.0) / t_new) * (y_new - y)
+        return (y_new, z_new * maskf, t_new, k + 1, vdot(g, g))
+
+    def finish(state):
+        y, _, _, k, gnorm2 = state
+        f = quad_f(Q, q, btb, inv_m, y)
+        return SolveResult(y=y, f=f, gap=gnorm2, iters=k, converged=jnp.asarray(True))
+
+    g0 = quad_grad(Q, q, inv_m, y0) * maskf
+    state0 = (y0, y0, jnp.asarray(1.0, dtype), jnp.asarray(0, jnp.int32), vdot(g0, g0))
+    return state0, cond, body, finish
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -100,35 +233,15 @@ def solve_agd(
     cfg: OracleConfig,
     y0: Optional[jax.Array] = None,
 ) -> SolveResult:
-    dtype = Q.dtype
-    Lcap = Q.shape[0]
-    inv_m = (1.0 / m).astype(dtype)
-    maskf = mask.astype(dtype)
-    if y0 is None:
-        y0 = jnp.zeros((Lcap,), dtype)
-    y0 = y0 * maskf
-    lmax = _estimate_lmax(Q, mask, cfg.power_iters)
-    step = 1.0 / (2.0 * lmax * inv_m)  # 1/L_smooth with L = 2 lmax / m
-    eps = cfg.eps_frac * psi
+    return _run_while(*_agd_parts(Q, q, btb, m, mask, psi, cfg, y0))
 
-    def cond(state):
-        y, z, t, k, gnorm2 = state
-        return jnp.logical_and(k < cfg.max_iter, gnorm2 > eps * eps)
 
-    def body(state):
-        y, z, t, k, _ = state
-        g = quad_grad(Q, q, inv_m, z) * maskf
-        y_new = z - step * g
-        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-        z_new = y_new + ((t - 1.0) / t_new) * (y_new - y)
-        gnorm2 = g @ g
-        return (y_new, z_new * maskf, t_new, k + 1, gnorm2)
-
-    g0 = quad_grad(Q, q, inv_m, y0) * maskf
-    state = (y0, y0, jnp.asarray(1.0, dtype), jnp.asarray(0, jnp.int32), g0 @ g0)
-    y, _, _, k, gnorm2 = jax.lax.while_loop(cond, body, state)
-    f = quad_f(Q, q, btb, inv_m, y)
-    return SolveResult(y=y, f=f, gap=gnorm2, iters=k)
+@partial(jax.jit, static_argnames=("cfg", "schedule"))
+def solve_agd_scheduled(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None,
+                        schedule: Optional[int] = None) -> SolveResult:
+    if schedule is None:
+        schedule = schedule_budget(cfg)
+    return _run_scheduled(*_agd_parts(Q, q, btb, m, mask, psi, cfg, y0), schedule)
 
 
 # --------------------------------------------------------------------------
@@ -184,8 +297,31 @@ def _fw_cond(cfg, psi, state: _FWState):
     )
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def solve_cg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResult:
+def _fw_state0(Q, q, btb, inv_m, y0, wp0, wm0, mask, r):
+    """Entry state carrying the TRUE FW gap at ``y0`` (one gradient + LMO).
+
+    With the real gap known at iteration 0, the Section 6.1 certificates can
+    fire before any step is taken: a warm start that already vanishes
+    (``f <= psi``) or is certifiably infeasible (``f - gap > psi``) makes the
+    whole solve a no-op — which is what lets the fixed-schedule path run
+    IHB-warm fits at budget 0 (certificate check only) instead of paying a
+    full masked iteration per lane just to learn the gap."""
+    maskf = mask.astype(Q.dtype)
+    Qy = Q @ y0  # shared between f0 and grad: one matvec, not two
+    f0 = (vdot(y0, Qy) + 2.0 * vdot(q, y0) + btb) * inv_m
+    grad = (2.0 * inv_m) * (Qy + q) * maskf
+    i, val = _fw_vertex(grad, mask, r)
+    # <grad, w - y0> with w = val * e_i, without materializing w
+    gap0 = vdot(grad, y0) - grad[i] * val
+    return _FWState(y0, wp0, wm0, f0, gap0, jnp.asarray(0, jnp.int32))
+
+
+def _fw_finish(state: _FWState) -> SolveResult:
+    return SolveResult(y=state.y, f=state.f, gap=state.gap, iters=state.k,
+                       converged=jnp.asarray(True))
+
+
+def _cg_parts(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0):
     """Vanilla Frank-Wolfe (CG) with exact line search."""
     dtype = Q.dtype
     Lcap = Q.shape[0]
@@ -202,17 +338,15 @@ def solve_cg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResult
         i, val = _fw_vertex(grad, mask, r)
         w = jnp.zeros_like(y).at[i].set(val)
         d = w - y
-        gap = -(grad @ d)
+        gap = -vdot(grad, d)
         gamma = _line_search_quad(Q, inv_m, grad, d, jnp.asarray(1.0, dtype))
         y_new = y + gamma * d
         f = quad_f(Q, q, btb, inv_m, y_new)
         return _FWState(y_new, state.wp, state.wm, f, gap, state.k + 1)
 
-    f0 = quad_f(Q, q, btb, inv_m, y0)
     zero = jnp.zeros((Lcap,), dtype)
-    state = _FWState(y0, zero, zero, f0, jnp.asarray(jnp.inf, dtype), jnp.asarray(0, jnp.int32))
-    state = jax.lax.while_loop(partial(_fw_cond, cfg, psi), body, state)
-    return SolveResult(y=state.y, f=state.f, gap=state.gap, iters=state.k)
+    state0 = _fw_state0(Q, q, btb, inv_m, y0, zero, zero, mask, r)
+    return state0, partial(_fw_cond, cfg, psi), body, _fw_finish
 
 
 def _active_extrema(grad, wp, wm, r):
@@ -236,8 +370,7 @@ def _signed_unit(i, sign_plus, r, Lcap, dtype):
     return v.at[i].set(jnp.where(sign_plus, r, -r))
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def solve_pcg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResult:
+def _pcg_parts(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0):
     """Pairwise Conditional Gradients (Lacoste-Julien & Jaggi 2015)."""
     dtype = Q.dtype
     Lcap = Q.shape[0]
@@ -262,7 +395,7 @@ def solve_pcg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResul
         a_vec = _signed_unit(ia, a_is_p, r, Lcap, dtype)
         a_weight = jnp.where(a_is_p, wp[ia], wm[ia])
         d = w_vec - a_vec
-        gap = -(grad @ (w_vec - y))  # FW gap for stopping
+        gap = -vdot(grad, w_vec - y)  # FW gap for stopping
         gamma = _line_search_quad(Q, inv_m, grad, d, a_weight)
         # move weight gamma from away to FW vertex
         wp = jnp.where(a_is_p, wp.at[ia].add(-gamma), wp)
@@ -275,15 +408,17 @@ def solve_pcg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResul
         f = quad_f(Q, q, btb, inv_m, y_new)
         return _FWState(y_new, wp, wm, f, gap, state.k + 1)
 
-    f0 = quad_f(Q, q, btb, inv_m, y0)
-    state = _FWState(y0, wp0, wm0, f0, jnp.asarray(jnp.inf, dtype), jnp.asarray(0, jnp.int32))
-    state = jax.lax.while_loop(partial(_fw_cond, cfg, psi), body, state)
-    return SolveResult(y=state.y, f=state.f, gap=state.gap, iters=state.k)
+    state0 = _fw_state0(Q, q, btb, inv_m, y0, wp0, wm0, mask, r)
+    return state0, partial(_fw_cond, cfg, psi), body, _fw_finish
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def solve_bpcg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResult:
-    """Blended Pairwise Conditional Gradients (Tsuji et al. 2021, Alg. 3)."""
+def _bpcg_parts(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0):
+    """Blended Pairwise Conditional Gradients (Tsuji et al. 2021, Alg. 3).
+
+    The local/global branch is select-based (both branches computed, one
+    kept) rather than ``lax.cond`` so the body stays bit-stable under vmap;
+    the selected branch's values are identical either way.
+    """
     dtype = Q.dtype
     Lcap = Q.shape[0]
     inv_m = (1.0 / m).astype(dtype)
@@ -306,38 +441,77 @@ def solve_bpcg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResu
         a_weight = jnp.where(a_is_p, wp[ia], wm[ia])
         is_ = jnp.where(s_is_p, is_p, is_m)
         s_vec = _signed_unit(is_, s_is_p, r, Lcap, dtype)
-        gap = -(grad @ (w_vec - y))
+        gap = -vdot(grad, w_vec - y)
         # Line 7: local pairwise step iff <grad, w - y> >= <grad, s - a>
-        local = (grad @ (w_vec - y)) >= (grad @ (s_vec - a_vec))
+        local = vdot(grad, w_vec - y) >= vdot(grad, s_vec - a_vec)
 
-        def local_step():
-            d = s_vec - a_vec
-            gamma = _line_search_quad(Q, inv_m, grad, d, a_weight)
-            wp1 = jnp.where(a_is_p, wp.at[ia].add(-gamma), wp)
-            wm1 = jnp.where(a_is_p, wm, wm.at[ia].add(-gamma))
-            wp1 = jnp.where(s_is_p, wp1.at[is_].add(gamma), wp1)
-            wm1 = jnp.where(s_is_p, wm1, wm1.at[is_].add(gamma))
-            return y + gamma * d, wp1, wm1
+        # local pairwise step
+        d_l = s_vec - a_vec
+        gamma_l = _line_search_quad(Q, inv_m, grad, d_l, a_weight)
+        wp_l = jnp.where(a_is_p, wp.at[ia].add(-gamma_l), wp)
+        wm_l = jnp.where(a_is_p, wm, wm.at[ia].add(-gamma_l))
+        wp_l = jnp.where(s_is_p, wp_l.at[is_].add(gamma_l), wp_l)
+        wm_l = jnp.where(s_is_p, wm_l, wm_l.at[is_].add(gamma_l))
+        y_l = y + gamma_l * d_l
 
-        def global_step():
-            d = w_vec - y
-            gamma = _line_search_quad(Q, inv_m, grad, d, jnp.asarray(1.0, dtype))
-            wp1 = wp * (1.0 - gamma)
-            wm1 = wm * (1.0 - gamma)
-            wp1 = jnp.where(w_plus, wp1.at[iw].add(gamma), wp1)
-            wm1 = jnp.where(w_plus, wm1, wm1.at[iw].add(gamma))
-            return y + gamma * d, wp1, wm1
+        # global FW step
+        d_g = w_vec - y
+        gamma_g = _line_search_quad(Q, inv_m, grad, d_g, jnp.asarray(1.0, dtype))
+        wp_g = wp * (1.0 - gamma_g)
+        wm_g = wm * (1.0 - gamma_g)
+        wp_g = jnp.where(w_plus, wp_g.at[iw].add(gamma_g), wp_g)
+        wm_g = jnp.where(w_plus, wm_g, wm_g.at[iw].add(gamma_g))
+        y_g = y + gamma_g * d_g
 
-        y_new, wp_new, wm_new = jax.lax.cond(local, local_step, global_step)
-        wp_new = jnp.maximum(wp_new, 0.0)
-        wm_new = jnp.maximum(wm_new, 0.0)
+        y_new = jnp.where(local, y_l, y_g)
+        wp_new = jnp.maximum(jnp.where(local, wp_l, wp_g), 0.0)
+        wm_new = jnp.maximum(jnp.where(local, wm_l, wm_g), 0.0)
         f = quad_f(Q, q, btb, inv_m, y_new)
         return _FWState(y_new, wp_new, wm_new, f, gap, state.k + 1)
 
-    f0 = quad_f(Q, q, btb, inv_m, y0)
-    state = _FWState(y0, wp0, wm0, f0, jnp.asarray(jnp.inf, dtype), jnp.asarray(0, jnp.int32))
-    state = jax.lax.while_loop(partial(_fw_cond, cfg, psi), body, state)
-    return SolveResult(y=state.y, f=state.f, gap=state.gap, iters=state.k)
+    state0 = _fw_state0(Q, q, btb, inv_m, y0, wp0, wm0, mask, r)
+    return state0, partial(_fw_cond, cfg, psi), body, _fw_finish
+
+
+_PARTS = {
+    "agd": _agd_parts,
+    "cg": _cg_parts,
+    "pcg": _pcg_parts,
+    "bpcg": _bpcg_parts,
+}
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve_cg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResult:
+    return _run_while(*_cg_parts(Q, q, btb, m, mask, psi, cfg, y0))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve_pcg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResult:
+    return _run_while(*_pcg_parts(Q, q, btb, m, mask, psi, cfg, y0))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve_bpcg(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResult:
+    return _run_while(*_bpcg_parts(Q, q, btb, m, mask, psi, cfg, y0))
+
+
+def _make_scheduled(name: str):
+    @partial(jax.jit, static_argnames=("cfg", "schedule"))
+    def solve_scheduled_one(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None,
+                            schedule: Optional[int] = None) -> SolveResult:
+        if schedule is None:
+            schedule = schedule_budget(cfg)
+        parts = _PARTS[name](Q, q, btb, m, mask, psi, cfg, y0)
+        return _run_scheduled(*parts, schedule)
+
+    solve_scheduled_one.__name__ = f"solve_{name}_scheduled"
+    return solve_scheduled_one
+
+
+solve_cg_scheduled = _make_scheduled("cg")
+solve_pcg_scheduled = _make_scheduled("pcg")
+solve_bpcg_scheduled = _make_scheduled("bpcg")
 
 
 SOLVERS = {
@@ -347,6 +521,19 @@ SOLVERS = {
     "bpcg": solve_bpcg,
 }
 
+SCHEDULED_SOLVERS = {
+    "agd": solve_agd_scheduled,
+    "cg": solve_cg_scheduled,
+    "pcg": solve_pcg_scheduled,
+    "bpcg": solve_bpcg_scheduled,
+}
+
 
 def solve(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None) -> SolveResult:
     return SOLVERS[cfg.name](Q, q, btb, m, mask, psi, cfg, y0)
+
+
+def solve_scheduled(Q, q, btb, m, mask, psi, cfg: OracleConfig, y0=None,
+                    schedule: Optional[int] = None) -> SolveResult:
+    return SCHEDULED_SOLVERS[cfg.name](Q, q, btb, m, mask, psi, cfg, y0,
+                                       schedule=schedule)

@@ -7,8 +7,10 @@ construction is dispatched through :func:`repro.api.fit_classes` — with
 ``class_batch="auto"`` (default) eligible per-class OAVI fits are grouped
 into shared pow2 row buckets and driven through ONE vmapped jitted degree
 step (:mod:`repro.core.class_batch`; bit-exact vs sequential at matched
-capacity), with sequential fallback for stragglers and oracle-solver
-configs — the feature transform runs through the fused
+capacity) — oracle/WIHB configs run their masked fixed-schedule solvers
+under the vmap, stragglers fold into their cheapest warm bucket, and only
+the Cholesky engine falls back to sequential fits — the feature transform
+runs through the fused
 :func:`repro.api.feature_transform`, and the features are classified by the
 l1 squared-hinge :class:`~repro.core.svm.LinearSVM`.
 
@@ -59,9 +61,10 @@ class PipelineConfig:
     mesh: Optional[Any] = None  # jax Mesh for the sharded backend
     batch_size: Optional[int] = None  # fused-transform chunking (rows)
     # 'auto': batch eligible per-class OAVI fits through one vmapped degree
-    # step, grouped into shared pow2 row buckets (repro.core.class_batch);
-    # stragglers / oracle-solver configs fall back to sequential.  'off':
-    # always fit classes sequentially.
+    # step, grouped into shared pow2 row buckets with stragglers folded into
+    # their cheapest warm bucket (repro.core.class_batch.plan_class_groups);
+    # oracle/WIHB configs use the masked fixed-schedule solvers, only the
+    # chol engine falls back to sequential.  'off': always sequential.
     class_batch: str = "auto"
     # out-of-core generator construction: when set, each per-class OAVI fit
     # streams through repro.streaming.fit in chunk_rows-row chunks instead of

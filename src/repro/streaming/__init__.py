@@ -8,6 +8,7 @@ from .fit import (
     DEFAULT_CHUNK_ROWS,
     accumulate_source_range,
     fit,
+    fit_classes,
     pearson_moments,
     prefetch_map,
     streaming_pearson_order,
@@ -35,6 +36,7 @@ __all__ = [
     "accumulate_source_range",
     "as_source",
     "fit",
+    "fit_classes",
     "is_source",
     "iter_chunks",
     "pearson_moments",

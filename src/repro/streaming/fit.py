@@ -66,6 +66,7 @@ from ..core.oavi import (
     _np_dtype,
     apply_wavefronts,
     border_index_arrays,
+    class_batchable,
     collect_degree,
     degree_step_entry,
     init_fit_stats,
@@ -521,3 +522,264 @@ def fit(
         stats=stats,
         dtype=config.dtype,
     )
+
+
+# ---------------------------------------------------------------------------
+# Class-batched streaming fit: k out-of-core fits, ONE vmapped stats step
+# ---------------------------------------------------------------------------
+
+
+def _streaming_class_entry(config: OAVIConfig, schedule):
+    """Cached jitted ``vmap`` of the statistics-only degree step over a class
+    axis; ``schedule`` (oracle/WIHB configs) is part of the cache key so each
+    escalation level is its own compiled step."""
+    return degree_step_entry(
+        config,
+        backend_key=("streaming_class_batch", schedule),
+        jitted_builder=lambda: jax.jit(
+            jax.vmap(_make_stats_degree_step(config, schedule=schedule))
+        ),
+    )
+
+
+def fit_classes(
+    sources: Sequence,
+    config: OAVIConfig = OAVIConfig(),
+    *,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    prefetch: bool = True,
+) -> List[OAVIModel]:
+    """Fit one OAVI model per class out-of-core, with every class's
+    accept/reject decisions batched through ONE vmapped statistics-only
+    degree step per degree.
+
+    Unlike the in-memory class batch (:mod:`repro.core.class_batch`) there is
+    no shared row bucket and no row padding at all: each class streams its
+    own rows through its own chunk accumulator (the per-degree O(m_c) work is
+    inherently per-class), and only the m-independent acceptance loops — the
+    dispatch-bound part of a streaming fit — are stacked into ``(k, Lcap,
+    Kcap)`` statistics and decided in one dispatch.  Finished classes ride
+    along with all-``False`` validity masks (their zeroed accumulators make
+    the slice a bitwise no-op); oracle/WIHB configs run the fixed-schedule
+    solvers with the same budget-escalation protocol as the in-memory batch
+    (the stats step donates nothing, so re-dispatch is safe).
+
+    Bit-exact against per-class :func:`fit` calls at matched capacity (the
+    shared ``Lcap`` growth schedule — the accumulated statistics themselves
+    are per-class and identical by construction).  Local backend only; the
+    sharded streaming path stays per-class.
+    """
+    from ..core import class_batch as class_batch_mod
+    from ..core import oracles as oracles_mod
+
+    sources = [as_source(s) for s in sources]
+    chunk_rows = _check_chunk_rows(chunk_rows)
+    if not class_batchable(config):
+        raise ValueError(
+            "config is not class-batchable (inverse_engine='chol' batched "
+            "triangular solves are not vmap-bit-stable); use sequential fits"
+        )
+    if len(sources) == 0:
+        return []
+    if len(sources) == 1:
+        # mirror class_batch.fit_classes: a lone class rides with a discarded
+        # duplicate so results are independent of batch composition at k=1
+        return fit_classes(
+            [sources[0], sources[0]], config,
+            chunk_rows=chunk_rows, prefetch=prefetch,
+        )[:1]
+    k = len(sources)
+    n = sources[0].num_features
+    if any(s.num_features != n for s in sources):
+        raise ValueError("all classes must share one feature count n")
+    ms = [s.num_rows for s in sources]
+    dtype = config.jax_dtype()
+    np_dtype = _np_dtype(config.dtype)
+
+    group = next(class_batch_mod._GROUP_IDS)
+    batch = {
+        "group": group,
+        "size": k,
+        "recompiles": 0,
+        "regrowths": 0,
+        "degree_times": [],
+        "m": int(sum(ms)),
+        "n": n,
+    }
+    scope = FitScope(batch, backend="streaming_class_batch")
+    with scope:
+        perms: List[Optional[np.ndarray]] = []
+        for s in sources:
+            perm = None
+            if config.ordering in ("pearson", "reverse_pearson"):
+                perm = streaming_pearson_order(
+                    s, chunk_rows, reverse=(config.ordering == "reverse_pearson")
+                )
+            perms.append(perm)
+
+        books = [terms_mod.TermBook(n=n) for _ in range(k)]
+        generators: List[List[Generator]] = [[] for _ in range(k)]
+        ells = [1] * k
+        active = [True] * k
+
+        Lcap = pow2_bucket(config.cap_terms)
+        state = ihb_mod.batch_state(
+            ihb_mod.init_state(
+                Lcap, jnp.asarray(1.0, dtype), dtype, factors=config.ihb_factors()
+            ),
+            k,
+        )
+        schedule = (
+            oracles_mod.schedule_budget(config.solver)
+            if class_batch_mod.needs_solver_schedule(config)
+            else None
+        )
+        batch["solver_escalations"] = 0
+
+        m_total = jnp.asarray([float(m) for m in ms], dtype)
+        per_class = [
+            init_fit_stats(
+                ms[c], n,
+                streaming={"chunk_rows": chunk_rows, "num_chunks": 0, "passes": 0},
+            )
+            for c in range(k)
+        ]
+
+        d = 0
+        while any(active):
+            d += 1
+            if d > config.max_degree:
+                for c in range(k):
+                    if active[c]:
+                        per_class[c]["termination"] = f"max_degree={config.max_degree}"
+                break
+            borders: List[List] = []
+            for c in range(k):
+                b = books[c].border(d) if active[c] else []
+                if active[c] and not b:
+                    active[c] = False
+                    per_class[c]["termination"] = "empty_border"
+                borders.append(b)
+            if not any(active):
+                break
+            Ks = [len(b) for b in borders]
+            for c in range(k):
+                if borders[c]:
+                    per_class[c]["border_sizes"].append(Ks[c])
+                    per_class[c]["degrees"].append(d)
+
+            while max(ells[c] + Ks[c] for c in range(k)) > Lcap:
+                Lcap *= 2
+                scope.regrowth(Lcap)
+                state = ihb_mod.grow_state(state, Lcap)
+            Kcap = max(config.cap_border, pow2_bucket(max(Ks)))
+            valid = np.zeros((k, Kcap), bool)
+
+            with scope.degree(d, K=int(max(Ks)), k=k):
+                # per-class accumulation: each class streams its own rows
+                # through its own (book-keyed) chunk accumulator — identical
+                # statistics to its single-class streaming fit
+                accQLs = []
+                accCs = []
+                for c in range(k):
+                    if not borders[c]:
+                        accQLs.append(jnp.zeros((Lcap, Kcap), jnp.float32))
+                        accCs.append(jnp.zeros((Kcap, Kcap), jnp.float32))
+                        continue
+                    parents_c, vars_c, valid[c] = border_index_arrays(
+                        books[c], borders[c], Kcap
+                    )
+                    acc_fn, acc_seen, _ = _chunk_accumulator(
+                        books[c], config, Lcap, chunk_rows, None, ()
+                    )
+                    scope.note_signature(
+                        acc_seen, (Kcap, chunk_rows, n, str(dtype)),
+                        kind="fit/compile_accumulator",
+                    )
+                    accQL, accC, nchunks = accumulate_source_range(
+                        acc_fn,
+                        sources[c],
+                        0,
+                        ms[c],
+                        chunk_rows,
+                        (
+                            jnp.zeros((Lcap, Kcap), jnp.float32),
+                            jnp.zeros((Kcap, Kcap), jnp.float32),
+                        ),
+                        jnp.asarray(parents_c),
+                        jnp.asarray(vars_c),
+                        perm=perms[c],
+                        np_dtype=np_dtype,
+                        prefetch=prefetch,
+                    )
+                    per_class[c]["streaming"]["num_chunks"] += nchunks
+                    per_class[c]["streaming"]["passes"] += 1
+                    accQLs.append(accQL)
+                    accCs.append(accC)
+
+                accQL_b = jnp.stack(accQLs)
+                accC_b = jnp.stack(accCs)
+                ells_d = jnp.asarray(ells, jnp.int32)
+                valid_d = jnp.asarray(valid)
+
+                # ONE vmapped stats step for all classes; escalate the solver
+                # schedule while any valid lane's budget was cut short
+                while True:
+                    entry = _streaming_class_entry(config, schedule)
+                    scope.note_signature(
+                        entry.seen, (k, Lcap, Kcap, str(dtype), schedule)
+                    )
+                    st = entry.fn(accQL_b, accC_b, state, ells_d, valid_d, m_total)
+                    if schedule is None or not bool(
+                        np.any(jax.device_get(st.unconverged))
+                    ):
+                        break
+                    if schedule >= oracles_mod.max_schedule(config.solver):
+                        break
+                    schedule = oracles_mod.escalate_schedule(config.solver, schedule)
+                    batch["solver_escalations"] += 1
+                state = st.ihb
+                accepted, mses, coeffs, iters = jax.device_get(
+                    (st.accepted, st.mses, st.coeffs, st.iters)
+                )
+
+            for c in range(k):
+                if not borders[c]:
+                    continue
+                per_class[c]["solver_iters"].append(int(iters[c, : Ks[c]].sum()))
+                ells[c] = collect_degree(
+                    books[c], borders[c], accepted[c], mses[c], coeffs[c],
+                    generators[c],
+                )
+
+        batch["solver_schedule_len"] = schedule
+        models: List[OAVIModel] = []
+        for c in range(k):
+            stats = per_class[c]
+            stats["recompiles"] = batch["recompiles"]
+            stats["regrowths"] = batch["regrowths"]
+            stats["degree_times"] = list(batch["degree_times"])
+            stats["solver_schedule_len"] = schedule
+            stats["solver_escalations"] = batch["solver_escalations"]
+            stats["class_batch"] = {
+                "group": batch["group"],
+                "size": k,
+                "index": c,
+                "m_cap": None,  # streaming: no shared row bucket, no row padding
+                "streaming": True,
+                "recompiles": batch["recompiles"],
+                "regrowths": batch["regrowths"],
+            }
+            scope.finalize(books[c], generators[c], Lcap, config, stats=stats)
+            models.append(
+                OAVIModel(
+                    n=n,
+                    psi=config.psi,
+                    book=books[c],
+                    generators=generators[c],
+                    feature_perm=perms[c],
+                    stats=stats,
+                    dtype=config.dtype,
+                )
+            )
+    return models

@@ -54,11 +54,15 @@ def _assert_structure(a: oavi.OAVIModel, b: oavi.OAVIModel, tol=1e-4):
 
 def test_batchable_gate():
     assert class_batchable(CFG)
-    assert not class_batchable(OAVIConfig(engine="oracle"))
-    assert not class_batchable(OAVIConfig(engine="fast", wihb=True))
+    # oracle and WIHB configs batch through the fixed-schedule solvers now;
+    # only the Cholesky inverse (batched triangular solves are not
+    # vmap-bit-stable) stays sequential
+    assert class_batchable(OAVIConfig(engine="oracle"))
+    assert class_batchable(OAVIConfig(engine="fast", wihb=True))
     assert not class_batchable(OAVIConfig(engine="fast", inverse_engine="chol"))
+    assert not class_batchable(OAVIConfig(engine="oracle", inverse_engine="chol"))
     with pytest.raises(ValueError):
-        fit_classes([np.zeros((4, 2))], OAVIConfig(engine="oracle"))
+        fit_classes([np.zeros((4, 2))], OAVIConfig(engine="fast", inverse_engine="chol"))
 
 
 def test_batched_equals_sequential_bit_exact_equal_sizes():
@@ -144,7 +148,10 @@ def test_class_buckets_grouping():
 
 
 def test_api_fit_classes_mixed_buckets_and_straggler():
-    sizes = [256, 250, 17]  # two co-bucketed + one straggler
+    """Stragglers are folded into the nearest warm bucket, never sequential:
+    [256, 250, 17] plans as ONE padded group, and every model reports its
+    padding bill in stats['class_batch_padding']."""
+    sizes = [256, 250, 17]
     Xs = [
         np.clip(_planted_class(np.random.default_rng(i), m, 4), 0, 1).astype(
             np.float32
@@ -153,16 +160,38 @@ def test_api_fit_classes_mixed_buckets_and_straggler():
     ]
     models = api.fit_classes(Xs, "oavi:fast", psi=0.005)
     kinds = ["batched" if m.stats.get("class_batch") else "seq" for m in models]
-    assert kinds == ["batched", "batched", "seq"]
+    assert kinds == ["batched", "batched", "batched"]
     # class order is preserved
     for X, m in zip(Xs, models):
         assert m.stats["m"] == X.shape[0]
+    for m in models:
+        pad = m.stats["class_batch_padding"]
+        assert pad["m_cap"] == 256
+        assert pad["padded_rows"] == 256 - m.stats["m"]
+        assert pad["group_rows"] == sum(sizes)
+        assert 0.0 <= pad["waste"] < 1.0
     agg = api.aggregate_fit_stats(models)
-    assert agg["class_batched"] == 2
+    assert agg["class_batched"] == 3
     assert agg["class_batch_groups"] == 1
-    # shared group counted once + the straggler's own count
-    expect = models[0].stats["recompiles"] + models[2].stats["recompiles"]
-    assert agg["recompiles"] == expect
+    # one shared group: its recompile count is counted exactly once
+    assert agg["recompiles"] == models[0].stats["recompiles"]
+
+
+def test_plan_class_groups():
+    from repro.core.class_batch import plan_class_groups
+
+    # near-boundary buckets merge within the padding budget
+    assert plan_class_groups([256, 250, 17]) == [(256, [0, 1, 2])]
+    # a lone class still gets folded (never a size-1 group)
+    plans = plan_class_groups([1000, 900, 400, 40, 3])
+    assert all(len(idxs) >= 2 for _, idxs in plans)
+    assert sorted(i for _, idxs in plans for i in idxs) == list(range(5))
+    # single class: one group is fine (fit_classes rides it with a copy)
+    assert plan_class_groups([128]) == [(128, [0])]
+    # far-apart buckets stay separate when merging would blow the pad limit
+    plans = plan_class_groups([4096, 4000, 100, 90, 80])
+    assert len(plans) == 2
+    assert plans[0][1] == [0, 1] and plans[1][1] == [2, 3, 4]
 
 
 def test_api_fit_list_dispatch_and_off():
@@ -177,11 +206,23 @@ def test_api_fit_list_dispatch_and_off():
         api.fit_classes(Xs, "oavi:fast", class_batch="always")
 
 
-def test_api_fit_classes_oracle_and_abm_fallback():
-    """Non-batchable configs fall back to sequential fits with identical
-    results under class_batch='auto' and 'off'."""
+def test_api_fit_classes_oracle_batched_and_abm_fallback():
+    """Oracle-engine configs now ride the batched path (fixed-schedule
+    solvers) bit-exactly; non-OAVI methods (abm) still fall back to
+    sequential fits with identical results."""
     Xs = _classes(k=2, m=128, seed=5)
-    for method in ("oavi:cgavi-ihb", "abm"):
+    auto = api.fit_classes(Xs, "oavi:cgavi-ihb", psi=0.005, cap_terms=64)
+    off = api.fit_classes(
+        Xs, "oavi:cgavi-ihb", psi=0.005, cap_terms=64, class_batch="off"
+    )
+    assert all(m.stats.get("class_batch") for m in auto)
+    assert all(m.stats.get("class_batch") is None for m in off)
+    assert all(m.stats["solver_schedule_len"] is not None for m in auto)
+    assert all(m.stats["solver_escalations"] >= 0 for m in auto)
+    for a, b in zip(auto, off):
+        _assert_bit_exact(a, b)  # equal pow2 sizes: no row padding
+
+    for method in ("abm",):
         auto = api.fit_classes(Xs, method, psi=0.005, cap_terms=64)
         off = api.fit_classes(Xs, method, psi=0.005, cap_terms=64, class_batch="off")
         assert all(m.stats.get("class_batch") is None for m in auto)
@@ -189,6 +230,31 @@ def test_api_fit_classes_oracle_and_abm_fallback():
             assert np.array_equal(
                 np.asarray(a.transform(Xs[0])), np.asarray(b.transform(Xs[0]))
             )
+
+
+def test_batched_oracle_engines_bit_exact():
+    """Every oracle engine (and WIHB) through the batched path, bit-exact vs
+    its sequential while_loop-ref fit at matched (pow2, padding-free) sizes."""
+    from repro.core.oracles import OracleConfig
+
+    Xs = _classes(k=3, m=256, seed=21)
+    configs = [
+        OAVIConfig(psi=0.005, engine="oracle",
+                   solver=OracleConfig(name="bpcg"), ihb=True, cap_terms=64),
+        OAVIConfig(psi=0.005, engine="oracle",
+                   solver=OracleConfig(name="cg"), ihb=False, cap_terms=64),
+        OAVIConfig(psi=0.005, engine="oracle",
+                   solver=OracleConfig(name="agd"), ihb=True, cap_terms=64),
+        OAVIConfig(psi=0.005, engine="fast", wihb=True, cap_terms=64),
+    ]
+    for cfg in configs:
+        seq = [oavi.fit(X, cfg) for X in Xs]
+        bat = fit_classes(Xs, cfg)
+        for s, b in zip(seq, bat):
+            _assert_bit_exact(s, b)
+        assert bat[0].stats["solver_schedule_len"] is not None
+        warm = fit_classes(Xs, cfg)
+        assert warm[0].stats["recompiles"] == 0, cfg
 
 
 # ---------------------------------------------------------------------------

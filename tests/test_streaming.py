@@ -230,6 +230,51 @@ def test_streaming_fit_chunk_size_invariance_property(chunk_rows):
     _assert_models_bit_equal(mdl, ref)
 
 
+def test_streaming_fit_classes_bit_exact_multi_engine():
+    """Streaming multi-class fit (one vmapped stats step per degree, no row
+    padding) is bit-exact against per-class in-memory fits — for the fast
+    engine AND the oracle engines through the fixed-schedule solvers."""
+    from repro.core.oracles import OracleConfig
+
+    sizes = [1500, 900, 1200]
+    sources = [planted_source(m, n=3, seed=40 + i) for i, m in enumerate(sizes)]
+    scalers = [
+        StreamingMinMaxScaler(dtype="float32").fit_source(s, 512) for s in sources
+    ]
+    scaled = [ScaledSource(s, sc) for s, sc in zip(sources, scalers)]
+    Xs = [sc.transform(np.asarray(s.read(0, m)))
+          for s, sc, m in zip(sources, scalers, sizes)]
+
+    configs = [
+        OAVIConfig(psi=0.005, engine="fast", ordering="none", cap_terms=64),
+        OAVIConfig(psi=0.005, engine="oracle", solver=OracleConfig(name="bpcg"),
+                   ihb=True, ordering="none", cap_terms=64),
+    ]
+    for cfg in configs:
+        models = streaming.fit_classes(scaled, cfg, chunk_rows=512)
+        for X, mdl in zip(Xs, models):
+            _assert_models_bit_equal(mdl, oavi.fit(X, cfg))
+        assert all(m.stats["class_batch"]["streaming"] for m in models)
+        assert all(m.stats["class_batch"]["m_cap"] is None for m in models)
+        warm = streaming.fit_classes(scaled, cfg, chunk_rows=512)
+        assert warm[0].stats["recompiles"] == 0
+
+
+def test_api_fit_classes_streaming_route():
+    """api.fit_classes with chunk_rows routes through the streaming class
+    batch and tags stats accordingly."""
+    rng = np.random.default_rng(3)
+    Xs = [rng.uniform(0, 1, (m, 3)).astype(np.float32) for m in (700, 500)]
+    models = api.fit_classes(Xs, "oavi:fast", psi=0.005, cap_terms=64,
+                             chunk_rows=256)
+    assert all(m.stats["api"]["streaming"] for m in models)
+    assert all(m.stats["api"]["class_batch"] for m in models)
+    for X, mdl in zip(Xs, models):
+        ref = api.fit(X, "oavi:fast", psi=0.005, cap_terms=64)
+        assert mdl.book.terms == ref.book.terms
+        assert [g.term for g in mdl.generators] == [g.term for g in ref.generators]
+
+
 def test_gram_accumulate_chunked_equals_one_shot():
     """The kernel-level contract: carrying the accumulator across row chunks
     is bit-identical to one call over the concatenated rows."""

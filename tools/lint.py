@@ -1,12 +1,23 @@
-"""Dead-import linter for ``make lint``.
+"""Linter for ``make lint``: unused imports + solver-loop discipline.
 
-Prefers ``pyflakes`` when installed (``make dev-deps`` /
-requirements-dev.txt); otherwise falls back to a built-in AST check for
-unused imports, so the target works in the bare runtime container too.
+Unused imports: prefers ``pyflakes`` when installed (``make dev-deps`` /
+requirements-dev.txt); otherwise falls back to a built-in AST check, so the
+target works in the bare runtime container too.
+
+Solver-loop discipline: the batched-solver modules must not grow new
+data-dependent ``lax.while_loop``s — a while_loop under ``vmap`` runs every
+lane to the max trip count with no escape for converged lanes, and its trip
+count is invisible to the schedule-budget machinery.  Any new bounded loop
+there must follow the shared-parts discipline of :mod:`repro.core.oracles`:
+write ``cond``/``body``/``finish`` closures and run them through BOTH
+``_run_while`` (the while_loop ref, for sequential fits and parity tests)
+and ``_run_scheduled`` (the masked fixed-schedule twin the batched paths
+use).  ``WHILE_LOOP_ALLOWLIST`` names the one wrapper that legitimately
+calls ``while_loop``.
 
     python tools/lint.py [paths...]     (default: src/repro benchmarks tools)
 
-Exits non-zero when any unused import (pyflakes: any warning) is found.
+Exits non-zero on any finding.
 """
 
 from __future__ import annotations
@@ -17,6 +28,88 @@ import subprocess
 import sys
 
 DEFAULT_PATHS = ["src/repro", "benchmarks", "tools"]
+
+# module (repo-relative) -> function names allowed to call lax.while_loop
+WHILE_LOOP_ALLOWLIST = {
+    "src/repro/core/oracles.py": {"_run_while"},
+    "src/repro/core/oavi.py": set(),
+}
+
+
+def _enclosing_functions(tree: ast.AST):
+    """Map every node to the name of its innermost enclosing function."""
+    owner = {}
+
+    def walk(node, fn_name):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn_name = node.name
+        for child in ast.iter_child_nodes(node):
+            owner[child] = fn_name
+            walk(child, fn_name)
+
+    walk(tree, None)
+    return owner
+
+
+def _while_loop_violations(path: pathlib.Path, repo_root: pathlib.Path):
+    """Flag ``lax.while_loop`` calls outside the allowlisted wrappers.
+
+    Matches any call whose callee is literally named ``while_loop`` — as an
+    attribute (``jax.lax.while_loop``, ``lax.while_loop``) or a bare name
+    (``from jax.lax import while_loop``) — in the modules named by
+    ``WHILE_LOOP_ALLOWLIST``.  Other modules are not checked: the discipline
+    is about the batched-solver core, not the whole tree.
+    """
+    try:
+        rel = str(path.resolve().relative_to(repo_root))
+    except ValueError:
+        rel = str(path)
+    allowed = WHILE_LOOP_ALLOWLIST.get(rel)
+    if allowed is None:
+        return []
+    tree = ast.parse(path.read_text())
+    owner = _enclosing_functions(tree)
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = node.func
+        name = None
+        if isinstance(callee, ast.Attribute):
+            name = callee.attr
+        elif isinstance(callee, ast.Name):
+            name = callee.id
+        if name != "while_loop":
+            continue
+        fn = owner.get(node)
+        if fn not in allowed:
+            where = f"in {fn}()" if fn else "at module level"
+            findings.append(
+                (
+                    node.lineno,
+                    f"data-dependent lax.while_loop {where} — batched solver "
+                    f"modules must use the shared-parts discipline "
+                    f"(cond/body/finish through _run_while AND _run_scheduled); "
+                    f"allowlisted wrappers for this module: "
+                    f"{sorted(allowed) or '(none)'}",
+                )
+            )
+    return findings
+
+
+def _check_while_loops(paths) -> int:
+    repo_root = pathlib.Path(__file__).resolve().parent.parent
+    failures = 0
+    for root in paths:
+        root = pathlib.Path(root)
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            for lineno, msg in _while_loop_violations(f, repo_root):
+                print(f"{f}:{lineno}: {msg}")
+                failures += 1
+    if failures:
+        print(f"\n{failures} while_loop discipline violation(s)", file=sys.stderr)
+    return 1 if failures else 0
 
 
 def _pyflakes(paths) -> int:
@@ -86,12 +179,14 @@ def _fallback(paths) -> int:
 
 def main(argv=None) -> int:
     paths = (argv if argv is not None else sys.argv[1:]) or DEFAULT_PATHS
+    rc_loops = _check_while_loops(paths)
     try:
         import pyflakes  # noqa: F401
 
-        return _pyflakes(paths)
+        rc_imports = _pyflakes(paths)
     except ImportError:
-        return _fallback(paths)
+        rc_imports = _fallback(paths)
+    return rc_loops or rc_imports
 
 
 if __name__ == "__main__":
