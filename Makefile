@@ -4,7 +4,7 @@
 #   make test-api         just the unified-API tests (fast)
 #   make lint             dead-import lint (pyflakes when installed, AST fallback)
 #   make ci               lint + tier-1 tests + chaos-smoke + bench-smoke
-#                         artifact checks
+#                         artifact checks + bench-gate
 #                         (what .github/workflows/ci.yml runs)
 #   make bench-smoke      smoke benchmark subset (fig4_scaling, transform_fused,
 #                         fit_fused, serve_engine, multiclass_batched at quick
@@ -21,6 +21,8 @@
 #                         (BENCH_resilience.json)
 #   make bench-obs        observability overhead + sketch-fidelity benchmark
 #                         (BENCH_obs.json)
+#   make bench-gate       perf-regression gate: newest results/history.jsonl
+#                         record vs the rolling baseline of earlier records
 #   make obs-smoke        continuous loop with obs export (results/obs/trace.json,
 #                         metrics.jsonl) + post-hoc obs_report render
 #   make chaos-smoke      fault-injection harness (repro.launch.chaos_vi --fast):
@@ -38,8 +40,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-api lint ci bench bench-smoke bench-transform bench-fit \
         bench-serve bench-multiclass bench-streaming bench-online \
-        bench-resilience bench-obs chaos-smoke serve-smoke continuous-smoke \
-        obs-smoke clean dev-deps
+        bench-resilience bench-obs bench-gate chaos-smoke serve-smoke \
+        continuous-smoke obs-smoke clean dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -50,7 +52,7 @@ test-api:
 lint:
 	$(PYTHON) tools/lint.py src/repro benchmarks tools
 
-ci: lint test chaos-smoke bench-smoke
+ci: lint test chaos-smoke bench-smoke bench-gate
 
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --only fig4_scaling,transform_fused,fit_fused,serve_engine,multiclass_batched,streaming_oavi,online_oavi,resilience_chaos,obs_overhead
@@ -79,6 +81,9 @@ bench-resilience:
 
 bench-obs:
 	$(PYTHON) -m benchmarks.run --only obs_overhead
+
+bench-gate:
+	$(PYTHON) -m benchmarks.history --gate
 
 obs-smoke:
 	$(PYTHON) -m repro.launch.continuous_vi --base-rows 2048 --increments 2 \

@@ -173,7 +173,7 @@ def _fit_overhead_row(m: int, repeat: int) -> dict:
     return row, model_on
 
 
-def _serve_overhead_row(model: oavi.OAVIModel, repeat: int) -> dict:
+def _serve_overhead_row(model: oavi.OAVIModel, repeat: int):
     eng = TransformEngine([model], config=EngineConfig(min_bucket=64, max_bucket=4096))
     eng.warmup()
     rng = np.random.default_rng(3)
@@ -211,7 +211,7 @@ def _serve_overhead_row(model: oavi.OAVIModel, repeat: int) -> dict:
     }
     if noise is not None:
         row["noise_frac"] = round(noise, 4)
-    return row
+    return row, eng
 
 
 def _export_cost_row() -> dict:
@@ -233,6 +233,60 @@ def _export_cost_row() -> dict:
         "bytes": size,
         "valid_chrome_trace": True,
     }
+
+
+def _device_rows(model: oavi.OAVIModel, eng: TransformEngine) -> list:
+    """What the device-level flight recorder costs, and what it recorded.
+
+    The fit/serve overhead sections above already price the *whole* obs
+    stack (device capture included) against the disabled path; these rows
+    break out the two device-specific costs — per-signature HLO cost
+    capture and per-boundary memory sampling — and assert the stats
+    contract (every fit/serve stats dict carries the device fields).
+    """
+    from repro.obs import device as obs_device
+
+    # memory-timeline sampling: the per-degree/chunk-boundary price
+    mem_stats: dict = {}
+    n_samples = 200
+    t0 = time.perf_counter()
+    for _ in range(n_samples):
+        obs_device.sample_memory(mem_stats)
+    t_sample = (time.perf_counter() - t0) / n_samples
+    cap = obs_device.capture_stats()
+    assert "flops_per_degree" in model.stats, "fit stats lost flops_per_degree"
+    assert "compile_seconds" in model.stats, "fit stats lost compile_seconds"
+    eng_stats = eng.stats
+    assert "achieved_gflops" in eng_stats, "engine stats lost achieved_gflops"
+    fit_flops = [f for f in model.stats["flops_per_degree"] if f]
+    return [
+        {
+            "section": "device",
+            "metric": "memory_sample",
+            "calls": n_samples,
+            "mean_sample_us": round(t_sample * 1e6, 2),
+            "live_bytes_peak": int(mem_stats.get("live_bytes_peak") or 0),
+        },
+        {
+            "section": "device",
+            "metric": "cost_capture",
+            "captures": int(cap["captures"]),
+            "failures": int(cap["failures"]),
+            "total_capture_s": round(cap["seconds"], 4),
+            "mean_capture_ms": round(
+                cap["seconds"] / max(cap["captures"], 1) * 1e3, 3
+            ),
+        },
+        {
+            "section": "device",
+            "metric": "stats_contract",
+            "fit_degrees_with_cost": len(fit_flops),
+            "fit_flops_total": float(sum(fit_flops)),
+            "fit_compile_seconds": float(model.stats["compile_seconds"]),
+            "serve_flops_dispatched": float(eng_stats["flops_dispatched"]),
+            "serve_achieved_gflops": float(eng_stats["achieved_gflops"] or 0.0),
+        },
+    ]
 
 
 def _sketch_rows() -> list:
@@ -277,9 +331,9 @@ def run(rep: Reporter, quick: bool = True):
     obs.reset()
 
     fit_row, model = _fit_overhead_row(m, repeat)
-    serve_row = _serve_overhead_row(model, repeat)
+    serve_row, eng = _serve_overhead_row(model, repeat)
     export_row = _export_cost_row()
-    rows = [fit_row, serve_row, export_row] + _sketch_rows()
+    rows = [fit_row, serve_row, export_row] + _device_rows(model, eng) + _sketch_rows()
     for row in rows:
         rep.add("obs_overhead", **row)
 

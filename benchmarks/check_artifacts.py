@@ -23,6 +23,8 @@ DEFAULT_NAMES = [
 # class-batch speedup must actually be recorded, not silently dropped)
 REQUIRED_SECTIONS = {
     "multiclass": ("equal_sizes", "bpcg_oracle", "lognormal_sizes"),
+    "obs": ("fit_overhead", "serve_overhead", "trace_export",
+            "sketch_accuracy", "device"),
 }
 
 

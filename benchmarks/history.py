@@ -1,0 +1,261 @@
+"""Bench history writer + the noise-aware perf-regression gate CLI.
+
+Every ``benchmarks/run.py`` invocation appends ONE record to
+``results/history.jsonl``: git SHA, an environment fingerprint, every
+headline number flattened out of the ``results/BENCH_*.json`` artifacts,
+and serialized histogram-sketch snapshots of the run's timing series.  The
+file is append-only JSONL so the history survives schema evolution (old
+records with a foreign schema tag are skipped, never deleted) and a torn
+tail (killed writer) loses at most the last record.
+
+``--gate`` is the regression decision (``make bench-gate``): the newest
+record is compared against the rolling baseline of all earlier ones via
+:func:`repro.obs.baseline.check_regression` — per-metric spread-aware
+allowances plus merged-sketch p99 bands.  Two escapes keep the gate honest
+on noisy runners, both borrowed from ``bench_obs``:
+
+* a **zero-overhead control run** (the paired estimator timing a workload
+  against itself) measures this machine's noise floor right now; when the
+  floor cannot resolve the tolerance, a failure downgrades to a warning;
+* ``BENCH_SOFT=1`` downgrades any remaining failure to a warning (shared
+  constrained-CI idiom).
+
+    PYTHONPATH=src python -m benchmarks.history            # append a record
+    PYTHONPATH=src python -m benchmarks.history --gate     # regression check
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import platform
+import subprocess
+import time
+from typing import Dict, Optional
+
+from repro import obs
+from repro.obs import baseline
+from repro.obs.metrics import Histogram
+
+DEFAULT_RESULTS = "results"
+DEFAULT_HISTORY = os.path.join(DEFAULT_RESULTS, "history.jsonl")
+
+
+def git_sha() -> Optional[str]:
+    """HEAD commit of the working tree (None outside a git checkout)."""
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+    except Exception:
+        return None
+    sha = proc.stdout.strip()
+    return sha if proc.returncode == 0 and sha else None
+
+
+def env_fingerprint() -> Dict:
+    """Enough environment to explain a perf shift without ssh'ing anywhere."""
+    env: Dict = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "cpus": os.cpu_count(),
+    }
+    try:
+        import jax
+
+        env["jax"] = jax.__version__
+        env["backend"] = jax.default_backend()
+        env["device_count"] = jax.device_count()
+    except Exception:
+        pass
+    return env
+
+
+def flatten_bench(doc: Dict) -> Dict[str, float]:
+    """Flatten one ``bench.v1`` document into gateable metric keys.
+
+    Key shape: ``<bench>[.quick|.full]/<section>/<i>:<field>`` — the index
+    is the row's position within its section, stable because bench rows are
+    emitted deterministically.  Quick and full runs get distinct keys so a
+    ``--full`` run never poisons the quick baseline (or vice versa).  Only
+    scalar numbers survive; booleans are config, not measurements.
+    """
+    name = str(doc.get("bench", "?"))
+    meta = doc.get("meta") or {}
+    if "quick" in meta:
+        name += ".quick" if meta["quick"] else ".full"
+    out: Dict[str, float] = {}
+    counters: Dict[str, int] = {}
+    for row in doc.get("rows", []):
+        if not isinstance(row, dict):
+            continue
+        section = str(row.get("section", "rows"))
+        i = counters.get(section, 0)
+        counters[section] = i + 1
+        for field, v in row.items():
+            if field == "section" or isinstance(v, bool):
+                continue
+            if isinstance(v, (int, float)):
+                out[f"{name}/{section}/{i}:{field}"] = float(v)
+    return out
+
+
+def registry_sketch_states(reg=None) -> Dict[str, Dict]:
+    """Serialized states of every non-empty histogram series in a registry."""
+    reg = reg if reg is not None else obs.registry()
+    states: Dict[str, Dict] = {}
+    names = {r["name"] for r in reg.snapshot() if r.get("type") == "histogram"}
+    for name in sorted(names):
+        for labels, metric in reg.find(name):
+            if not isinstance(metric, Histogram) or metric.count == 0:
+                continue
+            key = name
+            if labels:
+                inner = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+                key = f"{name}{{{inner}}}"
+            states[key] = metric.to_state()
+    return states
+
+
+def collect_record(results_dir: str = DEFAULT_RESULTS) -> Dict:
+    """One history record from the BENCH artifacts currently on disk."""
+    benches: Dict[str, Dict] = {}
+    metrics: Dict[str, float] = {}
+    for path in sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            continue  # torn artifact of a dead run; the gate never guesses
+        if doc.get("schema") != "bench.v1":
+            continue
+        name = str(doc.get("bench") or os.path.basename(path))
+        benches[name] = {
+            "created_unix": doc.get("created_unix"),
+            "rows": len(doc.get("rows") or []),
+            "meta": doc.get("meta") or {},
+        }
+        metrics.update(flatten_bench(doc))
+    return {
+        "schema": baseline.RECORD_SCHEMA,
+        "created_unix": time.time(),
+        "git_sha": git_sha(),
+        "env": env_fingerprint(),
+        "benches": benches,
+        "metrics": metrics,
+        "sketches": registry_sketch_states(),
+    }
+
+
+def append_record(record: Dict, path: str = DEFAULT_HISTORY) -> str:
+    """Append one record (single JSON line, flushed) to the history file."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    line = json.dumps(record, sort_keys=True)
+    with open(path, "a") as f:
+        f.write(line + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    return path
+
+
+def measure_noise_floor(repeat: int = 5) -> float:
+    """This machine's timing-noise floor, right now: the paired best-of-N
+    estimator from ``bench_obs`` timing a fixed workload against itself.
+    The true overhead is exactly zero, so anything it reads is noise."""
+    from .bench_obs import _paired_overhead
+
+    payload = list(range(20_000))
+
+    def work():
+        acc = 0
+        for v in payload:
+            acc += v * v
+        return acc
+
+    _, _, control = _paired_overhead(work, work, repeat)
+    return abs(control)
+
+
+def run_gate(history_path: str, *, tolerance: float = 0.25) -> int:
+    """The ``make bench-gate`` decision; returns a process exit code."""
+    records, warnings = baseline.load_history(history_path)
+    for w in warnings:
+        print(f"bench-gate: {w}")
+    if len(records) < 2:
+        print(
+            f"bench-gate: {len(records)} history record(s) in {history_path}; "
+            f"need >= 2 to compare — vacuous pass"
+        )
+        return 0
+    current, base = records[-1], records[:-1]
+    verdict = baseline.check_regression(current, base, tolerance=tolerance)
+    sha = (current.get("git_sha") or "?")[:12]
+    print(
+        f"bench-gate: {verdict['status']} at {sha} — {verdict['checked']} "
+        f"metric(s) checked against {len(base)} baseline record(s), "
+        f"{len(verdict['skipped'])} skipped"
+    )
+    for s in verdict["skipped"]:
+        print(f"  skip {s}")
+    for f in verdict["findings"]:
+        print(
+            f"  REGRESSION [{f['kind']}] {f['key']}: {f['current']:.4g} vs "
+            f"baseline {f['baseline_best']:.4g} "
+            f"(allowed {f['allowed']:.4g}, {f['ratio']:.2f}x)"
+        )
+    if verdict["status"] != "fail":
+        return 0
+    # escape 1: can this box even resolve the tolerance right now?
+    floor = measure_noise_floor()
+    if floor > tolerance / 2:
+        print(
+            f"WARNING: bench-gate found regressions but the zero-overhead "
+            f"control measured {floor:.1%} noise — this machine cannot "
+            f"resolve the {tolerance:.0%} tolerance; not failing"
+        )
+        return 0
+    # escape 2: the shared constrained-CI idiom
+    if os.environ.get("BENCH_SOFT"):
+        print(
+            f"WARNING: {len(verdict['findings'])} perf regression(s) "
+            f"(BENCH_SOFT set; not failing)"
+        )
+        return 0
+    print(f"bench-gate: FAILED with {len(verdict['findings'])} regression(s)")
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--results-dir", type=str, default=DEFAULT_RESULTS)
+    ap.add_argument("--history", type=str, default=None,
+                    help=f"history JSONL path (default: <results-dir>/"
+                    f"{os.path.basename(DEFAULT_HISTORY)})")
+    ap.add_argument("--gate", action="store_true",
+                    help="check the newest record against the rolling "
+                    "baseline instead of appending a new one")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="fractional slowdown allowed over the baseline best")
+    args = ap.parse_args(argv)
+    history_path = args.history or os.path.join(
+        args.results_dir, os.path.basename(DEFAULT_HISTORY)
+    )
+    if args.gate:
+        return run_gate(history_path, tolerance=args.tolerance)
+    rec = collect_record(args.results_dir)
+    path = append_record(rec, history_path)
+    print(
+        f"history: appended record ({len(rec['metrics'])} metrics, "
+        f"{len(rec['sketches'])} sketches, sha {(rec['git_sha'] or '?')[:12]}) "
+        f"-> {path}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

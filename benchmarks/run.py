@@ -9,10 +9,12 @@ paper-scale sample counts (up to 2M).  Results go to results/benchmarks.csv.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 from . import (
+    history,
     bench_ablation,
     bench_bound,
     bench_fit,
@@ -72,6 +74,12 @@ def main(argv=None) -> None:
         BENCHES[name](rep, quick=not args.full)
         print(f"=== {name} done in {time.time() - t1:.1f}s ===", flush=True)
     rep.write_csv(args.out)
+    # one history record per invocation: the perf-regression gate's raw data
+    results_dir = os.path.dirname(args.out) or "results"
+    history.append_record(
+        history.collect_record(results_dir),
+        os.path.join(results_dir, "history.jsonl"),
+    )
     print(f"all benchmarks done in {time.time() - t0:.1f}s")
 
 

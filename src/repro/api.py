@@ -67,6 +67,7 @@ OAVI_VARIANTS: Dict[str, Tuple[str, str, bool, bool]] = {
 import jax
 import jax.numpy as jnp
 
+from . import obs
 from . import streaming as streaming_mod
 from .checkpoint import store as ckpt_store
 from .core import abm as abm_mod
@@ -645,18 +646,43 @@ def fit_classes(
 
 
 def aggregate_fit_stats(models: Sequence) -> Dict:
-    """Classifier-level ``recompiles`` / ``regrowths`` over per-class models.
+    """Classifier-level fit counters over per-class models.
 
     Class-batched models share ONE compile/regrowth schedule per batch group
     (their per-model stats all carry the same counts), so naively summing
     per-class stats overcounts by the group size; this counts each group
-    once and each sequentially-fitted model individually."""
+    once and each sequentially-fitted model individually.  The same dedup
+    applies to the solver-discipline outcome (``solver_escalations`` is per
+    batch, not per class); ``solver_schedule_len`` reports the longest
+    schedule any group ran.  ``class_batch_padding`` rolls the per-model
+    padding accounting up to dispatched/padded row totals and the overall
+    waste fraction, and the aggregate is mirrored into the metric registry
+    (``fit.solver_*`` / ``fit.class_batch_padding_waste`` with
+    ``backend="aggregate"``) so obs_report sees the classifier-level view."""
     recompiles = regrowths = 0
+    escalations = 0
+    schedule_len: Optional[int] = None
     batched = 0
     groups = set()
+    pad_groups = set()
+    dispatched_rows = padded_rows = 0
     for model in models:
         stats = getattr(model, "stats", None) or {}
+        sched = stats.get("solver_schedule_len")
+        if sched is not None:
+            schedule_len = max(int(sched), schedule_len or 0)
         group = stats.get("class_batch")
+        padding = stats.get("class_batch_padding")
+        if padding is not None:
+            # group totals are replicated on every member; count each once
+            pad_key = (padding["m_cap"], padding["group_rows"],
+                       padding["group_padded_rows"])
+            if pad_key not in pad_groups:
+                pad_groups.add(pad_key)
+                dispatched_rows += int(padding["group_rows"]) + int(
+                    padding["group_padded_rows"]
+                )
+                padded_rows += int(padding["group_padded_rows"])
         if group is not None:
             batched += 1
             if group["group"] in groups:
@@ -664,15 +690,40 @@ def aggregate_fit_stats(models: Sequence) -> Dict:
             groups.add(group["group"])
             recompiles += int(group["recompiles"])
             regrowths += int(group["regrowths"])
+            escalations += int(stats.get("solver_escalations", 0))
         else:
             recompiles += int(stats.get("recompiles", 0))
             regrowths += int(stats.get("regrowths", 0))
-    return {
+            escalations += int(stats.get("solver_escalations", 0))
+    out: Dict = {
         "recompiles": recompiles,
         "regrowths": regrowths,
         "class_batched": batched,
         "class_batch_groups": len(groups),
+        "solver_schedule_len": schedule_len,
+        "solver_escalations": escalations,
     }
+    if dispatched_rows:
+        out["class_batch_padding"] = {
+            "dispatched_rows": dispatched_rows,
+            "padded_rows": padded_rows,
+            "waste": padded_rows / float(dispatched_rows),
+        }
+    if obs.enabled():
+        reg = obs.registry()
+        if schedule_len is not None:
+            reg.gauge(
+                "fit.solver_schedule_len", backend="aggregate"
+            ).set(float(schedule_len))
+        if escalations:
+            reg.counter(
+                "fit.solver_escalations", backend="aggregate"
+            ).inc(escalations)
+        if dispatched_rows:
+            reg.gauge("fit.class_batch_padding_waste").set(
+                padded_rows / float(dispatched_rows)
+            )
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -75,6 +75,7 @@ import numpy as np
 
 from . import ihb as ihb_mod
 from . import oracles as oracles_mod
+from .. import obs
 from . import terms as terms_mod
 from .oavi import (
     FitScope,
@@ -329,12 +330,16 @@ def fit_classes(
                 # iterations bit-for-bit, then continues).
                 while True:
                     entry = _batched_entry(config, mesh, data_axes, schedule)
-                    scope.note_signature(
-                        entry.seen, (k, mc, n, Lcap, Kcap, str(dtype), schedule)
-                    )
-                    A_next, st = entry.fn(
+                    sig = (k, mc, n, Lcap, Kcap, str(dtype), schedule)
+                    step_args = (
                         A, Xd, state, ells_d, parents_d, vars_d, valid_d, m_total
                     )
+                    scope.note_signature(entry.seen, sig)
+                    # cost capture rides the cold path: this degree window
+                    # already absorbs the jit compile for a new signature
+                    # (see FitScope docstring), lowering is a fraction of it
+                    scope.step_cost(entry.fn, sig, step_args)
+                    A_next, st = entry.fn(*step_args)
                     # one host sync per degree: the escalation verdict rides
                     # the same transfer as the accept/reject results
                     accepted, mses, coeffs, iters, unconverged = jax.device_get(
@@ -358,6 +363,16 @@ def fit_classes(
                 )
 
         batch["solver_schedule_len"] = schedule
+        # publish the solver-discipline outcome so obs_report can diagnose
+        # the escalation-bound regime (one hard lane taxing a whole batch)
+        if schedule is not None:
+            obs.registry().gauge(
+                "fit.solver_schedule_len", backend="class_batch"
+            ).set(float(schedule))
+        if batch["solver_escalations"]:
+            obs.registry().counter(
+                "fit.solver_escalations", backend="class_batch"
+            ).inc(batch["solver_escalations"])
         models: List[OAVIModel] = []
         for c in range(k):
             stats = per_class[c]
@@ -366,6 +381,9 @@ def fit_classes(
             stats["recompiles"] = batch["recompiles"]
             stats["regrowths"] = batch["regrowths"]
             stats["degree_times"] = list(batch["degree_times"])
+            # one dispatch serves all classes: device cost is per batch, not
+            # per class (escalation re-runs append their own entries)
+            stats["flops_per_degree"] = list(batch.get("flops_per_degree", []))
             stats["solver_schedule_len"] = schedule
             stats["solver_escalations"] = batch["solver_escalations"]
             stats["class_batch"] = {

@@ -51,6 +51,7 @@ else:
 
 from . import ihb as ihb_mod
 from . import terms as terms_mod
+from .. import obs
 from .oavi import (
     FitScope,
     Generator,
@@ -84,6 +85,35 @@ def num_data_shards(mesh: Mesh, data_axes: Sequence[str]) -> int:
     return int(np.prod([mesh.shape[a] for a in data_axes]))
 
 
+def _emit_shard_event(name, shard) -> None:
+    """Host half of the per-shard probe (``jax.debug.callback`` target)."""
+    obs.event(str(name), shard=int(shard))
+
+
+def shard_probe(step, mesh: Mesh, axes: Sequence[str], name: str):
+    """Compile a per-shard instant-event probe into a shard_map'ed step.
+
+    ``jax.debug.callback`` is an effect-only op — it changes no numerics and
+    costs one host callback per shard per dispatch — so the probe lives in
+    the cached compiled step unconditionally (the degree-step cache key is
+    unchanged) and the *recording* is gated at runtime by
+    :func:`repro.obs.enabled` inside ``obs.event``.  The emitted
+    ``fit/shard_step`` instants are the per-shard visibility the PR 8 span
+    work could not reach from host-side spans: one marker per device per
+    degree step, labeled with the flat shard index.
+    """
+    sizes = [int(mesh.shape[a]) for a in axes]
+
+    def probed(*args):
+        idx = jnp.int32(0)
+        for a, size in zip(axes, sizes):
+            idx = idx * jnp.int32(size) + jax.lax.axis_index(a)
+        jax.debug.callback(_emit_shard_event, name, idx)
+        return step(*args)
+
+    return probed
+
+
 def make_sharded_degree_step(
     cfg: OAVIConfig, mesh: Mesh, data_axes: Sequence[str] = ("data",)
 ):
@@ -91,6 +121,7 @@ def make_sharded_degree_step(
     axes = tuple(data_axes)
     reduce_fn = lambda x: jax.lax.psum(x, axes)  # noqa: E731
     step = _make_degree_step(cfg, reduce_fn=reduce_fn)
+    step = shard_probe(step, mesh, axes, "fit/shard_step")
     dspec = data_spec(axes)
     rep = P()
 
@@ -126,6 +157,9 @@ def make_class_batched_sharded_degree_step(
     axes = tuple(data_axes)
     reduce_fn = lambda x: jax.lax.psum(x, axes)  # noqa: E731
     step = jax.vmap(_make_degree_step(cfg, reduce_fn=reduce_fn, schedule=schedule))
+    # probe outside the vmap, inside the shard_map: one instant per device
+    # per dispatch (not per class)
+    step = shard_probe(step, mesh, axes, "fit/shard_step")
     bspec = class_data_spec(axes)
     rep = P()
 
@@ -242,19 +276,22 @@ def fit(
             Kcap = max(config.cap_border, pow2_bucket(K))
             parents, vars_, valid = border_index_arrays(book, border, Kcap)
 
-            scope.note_signature(entry.seen, (m_pad, n, Lcap, Kcap, str(dtype)))
+            step_args = (
+                A,
+                Xd,
+                state,
+                jnp.asarray(ell, jnp.int32),
+                jnp.asarray(parents),
+                jnp.asarray(vars_),
+                jnp.asarray(valid),
+                m_total,
+            )
+            sig = (m_pad, n, Lcap, Kcap, str(dtype))
+            scope.note_signature(entry.seen, sig)
+            scope.step_cost(entry.fn, sig, step_args)
 
             with scope.degree(d, K=K):
-                A, st = entry.fn(
-                    A,
-                    Xd,
-                    state,
-                    jnp.asarray(ell, jnp.int32),
-                    jnp.asarray(parents),
-                    jnp.asarray(vars_),
-                    jnp.asarray(valid),
-                    m_total,
-                )
+                A, st = entry.fn(*step_args)
                 state = st.ihb
                 accepted = np.asarray(st.accepted)
                 mses = np.asarray(st.mses)

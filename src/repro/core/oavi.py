@@ -700,26 +700,12 @@ def class_batchable(config: OAVIConfig) -> bool:
     return config.inverse_engine == "inverse"
 
 
-def device_memory_stats() -> Dict:
-    """Best-effort ``memory_stats()`` of the first local device.  TPU/GPU
-    runtimes report allocator counters (``peak_bytes_in_use``); CPU returns
-    nothing — callers must treat every key as optional."""
-    try:
-        stats = jax.local_devices()[0].memory_stats()
-    except Exception:
-        return {}
-    return dict(stats or {})
-
-
-def live_buffer_bytes() -> Optional[int]:
-    """Total bytes of all live device arrays — the measured fallback for the
-    memory benchmarks on backends without allocator stats (this container's
-    CPU).  Dominated by the persistent fit buffers (A, IHB state), which is
-    exactly the footprint the streaming fit is built to flatten."""
-    try:
-        return int(sum(x.nbytes for x in jax.live_arrays()))
-    except Exception:
-        return None
+# Memory accounting moved to repro.obs.device (PR 10) — these aliases keep
+# the long-standing call sites and benchmark imports working.  The device
+# module adds the registry gauges and the trace-counter memory timeline on
+# top of the same sampling.
+device_memory_stats = obs.device.device_memory_stats
+live_buffer_bytes = obs.device.live_buffer_bytes
 
 
 def sample_memory_stats(stats: Dict) -> None:
@@ -733,13 +719,10 @@ def sample_memory_stats(stats: Dict) -> None:
     inherits it (compare against ``peak_bytes_start`` from
     :func:`init_fit_stats` to bound this fit's contribution).
     ``live_bytes_peak`` is sampled per fit and is the per-fit comparable
-    quantity the memory benchmarks prefer."""
-    peak = device_memory_stats().get("peak_bytes_in_use")
-    if peak is not None:
-        stats["peak_bytes"] = max(int(peak), int(stats.get("peak_bytes") or 0))
-    live = live_buffer_bytes()
-    if live is not None:
-        stats["live_bytes_peak"] = max(live, int(stats.get("live_bytes_peak") or 0))
+    quantity the memory benchmarks prefer.  Delegates to
+    :func:`repro.obs.device.sample_memory`, which also refreshes the
+    ``device.*`` gauges and appends the trace memory-timeline sample."""
+    obs.device.sample_memory(stats)
 
 
 def init_fit_stats(m: int, n: int, **extra) -> Dict:
@@ -757,6 +740,13 @@ def init_fit_stats(m: int, n: int, **extra) -> Dict:
         # escalate it; None/0 on paths using the while_loop refs.
         "solver_schedule_len": None,
         "solver_escalations": 0,
+        # device-level accounting (repro.obs.device): HLO flop estimate per
+        # degree step (None entries when capture is off/unavailable), XLA
+        # backend-compile seconds attributed to this fit, and the realized
+        # FLOP rate over the degree-step time.
+        "flops_per_degree": [],
+        "compile_seconds": 0.0,
+        "achieved_gflops": None,
         "time_total": 0.0,
         "m": m,
         "n": n,
@@ -836,13 +826,22 @@ class FitScope:
         self._t_last_degree_end: Optional[float] = None
         self._time_degrees = 0.0
         self._timing: Optional[Dict] = None
+        self._flops = 0.0
+        # XLA compile attribution window: always-on (reading the listener's
+        # accumulator never touches numerics or the device)
+        self._compile0 = obs.device.compile_snapshot()
 
     def __enter__(self) -> "FitScope":
         self._span.__enter__()
+        # env-gated jax.profiler window (OBS_JAX_PROFILE=<dir>): the whole
+        # fit in one device-timeline capture, interleaved with obs spans
+        self._profile = obs.device.profile_window(f"fit/{self.backend}")
+        self._profile.__enter__()
         self._t_start = time.perf_counter()
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
+        self._profile.__exit__(exc_type, exc, tb)
         self._span.__exit__(exc_type, exc, tb)
 
     def degree(self, d: int, **attrs) -> _DegreeScope:
@@ -869,6 +868,26 @@ class FitScope:
         self.stats["regrowths"] += 1
         obs.registry().counter("fit.regrowths", backend=self.backend).inc()
         obs.event("fit/regrowth", backend=self.backend, Lcap=int(Lcap))
+
+    def step_cost(self, fn, sig, args) -> None:
+        """Record the degree step's HLO flop estimate for this signature.
+
+        Call *between* :meth:`note_signature` and the :meth:`degree` window:
+        the one-time lowering cost per new signature then lands in
+        ``time_unattributed``, keeping ``degree_times`` pure device+sync
+        time.  Appends to ``stats["flops_per_degree"]`` (None when capture
+        is off) so the list stays aligned with ``stats["degrees"]``.
+        """
+        cost = obs.device.step_cost(fn, sig, args)
+        self.record_flops(None if cost is None else cost["flops"])
+
+    def record_flops(self, flops: Optional[float]) -> None:
+        """Append one degree's flop estimate (None = capture unavailable).
+        Composite paths (streaming: accumulator x chunks + stats step) sum
+        their components and record through this."""
+        self.stats.setdefault("flops_per_degree", []).append(flops)
+        if flops:
+            self._flops += flops
 
     def timing_fields(self) -> Dict:
         """The timing-contract fields, computed once (shared by every class
@@ -903,6 +922,15 @@ class FitScope:
         stats = self.stats if stats is None else stats
         sample_memory_stats(stats)
         stats.update(self.timing_fields())
+        s1, c1 = obs.device.compile_snapshot()
+        stats["compile_seconds"] = round(s1 - self._compile0[0], 6)
+        stats["xla_compiles"] = c1 - self._compile0[1]
+        degrees_t = self._timing["time_degrees"] if self._timing else 0.0
+        if self._flops > 0.0 and degrees_t > 0.0:
+            stats["achieved_gflops"] = round(self._flops / degrees_t / 1e9, 3)
+            obs.registry().gauge(
+                "device.achieved_gflops", backend=self.backend
+            ).set(stats["achieved_gflops"])
         stats["num_G"] = len(generators)
         stats["num_O"] = len(book)
         stats["G_plus_O"] = len(generators) + len(book)
@@ -1004,19 +1032,22 @@ def fit(
             Kcap = max(config.cap_border, pow2_bucket(K))
             parents, vars_, valid = border_index_arrays(book, border, Kcap)
 
-            scope.note_signature(entry.seen, (m, n, Lcap, Kcap, str(dtype)))
+            step_args = (
+                A,
+                Xd,
+                state,
+                jnp.asarray(ell, jnp.int32),
+                jnp.asarray(parents),
+                jnp.asarray(vars_),
+                jnp.asarray(valid),
+                m_total,
+            )
+            sig = (m, n, Lcap, Kcap, str(dtype))
+            scope.note_signature(entry.seen, sig)
+            scope.step_cost(entry.fn, sig, step_args)
 
             with scope.degree(d, K=K):
-                A, st = entry.fn(
-                    A,
-                    Xd,
-                    state,
-                    jnp.asarray(ell, jnp.int32),
-                    jnp.asarray(parents),
-                    jnp.asarray(vars_),
-                    jnp.asarray(valid),
-                    m_total,
-                )
+                A, st = entry.fn(*step_args)
                 state = st.ihb
                 accepted = np.asarray(st.accepted)
                 mses = np.asarray(st.mses)

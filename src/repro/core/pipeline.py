@@ -228,9 +228,13 @@ class VanishingIdealClassifier:
             "recompiles": agg["recompiles"],
             "regrowths": agg["regrowths"],
             "class_batched": agg["class_batched"],
+            "solver_schedule_len": agg["solver_schedule_len"],
+            "solver_escalations": agg["solver_escalations"],
             "per_class": gen_stats,
             "svm": self.svm.stats,
         }
+        if "class_batch_padding" in agg:
+            self.stats["class_batch_padding"] = agg["class_batch_padding"]
         return self
 
     def transform(self, X) -> np.ndarray:

@@ -33,6 +33,13 @@ luck):
     raise :class:`~repro.resilience.integrity.IntegrityError` naming the
     file — corrupt rows are never served to a fit.
 
+Trace export: every ``kill_resume`` kill runs its controller subprocesses
+with the obs flight recorder on, then merges the killed run's trace with
+the resumed run's (:func:`repro.obs.merge_traces`) into ONE Perfetto-valid
+``--trace-dir/kill_<phase>_<at>.trace.json`` — two processes on one
+timeline with ``chaos/sigkill`` / ``chaos/recovery`` instant markers at
+the crash boundary, so the recovery story is *visible*, not just asserted.
+
 Usage::
 
     PYTHONPATH=src python -m repro.launch.chaos_vi --fast --out report.json
@@ -50,6 +57,8 @@ import time
 from typing import Dict, List, Optional
 
 import numpy as np
+
+from .. import obs
 
 # small enough that one controller subprocess finishes in seconds, large
 # enough for two drift-quiet updates (the phases kill_resume targets)
@@ -70,6 +79,7 @@ def _run_controller(
     chaos_path: Optional[str] = None,
     timeout_s: float = 300.0,
     extra: Optional[List[str]] = None,
+    obs_dir: Optional[str] = None,
 ) -> subprocess.CompletedProcess:
     out = os.path.join(workdir, "report.json")
     cmd = [
@@ -81,9 +91,36 @@ def _run_controller(
     env = dict(os.environ)
     src = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    if obs_dir:
+        # flight recorder on: each activation re-exports, so even the
+        # SIGKILL'd run leaves a usable (if partial) trace behind
+        cmd += ["--obs-dir", obs_dir]
+        env["OBS_ENABLED"] = "1"
     return subprocess.run(
         cmd, capture_output=True, text=True, timeout=timeout_s, env=env
     )
+
+
+def _merge_scenario_trace(
+    trace_dir: str, name: str, run_obs_dirs: List[str], markers: List[Dict]
+) -> Optional[str]:
+    """Merge per-run flight-recorder traces into one validated timeline."""
+    docs = []
+    for d in run_obs_dirs:
+        p = os.path.join(d, "trace.json")
+        if not os.path.exists(p):
+            return None  # a run died before its first export; nothing to show
+        with open(p) as f:
+            docs.append(json.load(f))
+    merged = obs.merge_traces(docs, markers=markers)
+    obs.validate_chrome_trace(merged)
+    os.makedirs(trace_dir, exist_ok=True)
+    out = os.path.join(trace_dir, f"{name}.trace.json")
+    tmp_path = out + ".tmp"
+    with open(tmp_path, "w") as f:
+        json.dump(merged, f)
+    os.replace(tmp_path, out)
+    return out
 
 
 def _report(workdir: str) -> Dict:
@@ -117,7 +154,9 @@ def _check_completed(rep: Dict, label: str) -> None:
 # ---------------------------------------------------------------------------
 
 
-def scenario_kill_resume(tmp: str, reference: Dict, phases) -> Dict:
+def scenario_kill_resume(
+    tmp: str, reference: Dict, phases, trace_dir: Optional[str] = None
+) -> Dict:
     from ..resilience.chaos import Fault, FaultPlan
 
     results = []
@@ -127,13 +166,15 @@ def scenario_kill_resume(tmp: str, reference: Dict, phases) -> Dict:
         FaultPlan([Fault(site=f"controller.{phase}", at=at, action="sigkill")]).save(
             plan_path
         )
+        obs_killed = os.path.join(workdir, "obs_killed")
+        obs_resumed = os.path.join(workdir, "obs_resumed")
         t0 = time.perf_counter()
-        proc = _run_controller(workdir, chaos_path=plan_path)
+        proc = _run_controller(workdir, chaos_path=plan_path, obs_dir=obs_killed)
         assert proc.returncode == -9, (
             f"kill at {phase}#{at}: expected SIGKILL exit, got "
             f"{proc.returncode}\n{proc.stderr[-2000:]}"
         )
-        proc = _run_controller(workdir)  # resume, no faults
+        proc = _run_controller(workdir, obs_dir=obs_resumed)  # resume, no faults
         recovery_s = time.perf_counter() - t0
         assert proc.returncode == 0, (
             f"resume after kill at {phase}#{at} failed:\n{proc.stderr[-2000:]}"
@@ -147,9 +188,23 @@ def scenario_kill_resume(tmp: str, reference: Dict, phases) -> Dict:
         _assert_bit_identical(
             _final_leaves(workdir), reference, f"kill at {phase}#{at}"
         )
+        trace_path = None
+        if trace_dir:
+            trace_path = _merge_scenario_trace(
+                trace_dir,
+                f"kill_{phase}_{at}",
+                [obs_killed, obs_resumed],
+                markers=[
+                    {"name": "chaos/sigkill", "after_doc": 0,
+                     "args": {"phase": phase, "at": at}},
+                    {"name": "chaos/recovery", "after_doc": 0,
+                     "args": {"phase": phase}},
+                ],
+            )
         results.append(
             {"phase": phase, "at": at, "recovery_s": recovery_s,
-             "caught_up_rows": rep["resume"]["caught_up_rows"]}
+             "caught_up_rows": rep["resume"]["caught_up_rows"],
+             "trace": trace_path}
         )
     return {"ok": True, "kills": results}
 
@@ -309,6 +364,9 @@ def main(argv=None) -> Dict:
                     help="comma-separated subset to run (default: all)")
     ap.add_argument("--tmp", type=str, default=None)
     ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--trace-dir", type=str, default="results/chaos",
+                    help="write merged kill/resume Perfetto traces here "
+                    "(empty string: skip trace export)")
     args = ap.parse_args(argv)
 
     tmp = args.tmp or tempfile.mkdtemp(prefix="chaos_vi_")
@@ -343,8 +401,14 @@ def main(argv=None) -> Dict:
             phases += [("update_start", 1), ("staged", 1), ("update_start", 2)]
         print(f"chaos_vi: kill_resume at {len(phases)} phases ...")
         report["scenarios"]["kill_resume"] = scenario_kill_resume(
-            tmp, reference, phases
+            tmp, reference, phases, trace_dir=args.trace_dir or None
         )
+        traces = [
+            k["trace"] for k in report["scenarios"]["kill_resume"]["kills"]
+            if k.get("trace")
+        ]
+        if traces:
+            print(f"chaos_vi: {len(traces)} merged traces -> {args.trace_dir}")
     if want("corrupt_state"):
         print("chaos_vi: corrupt_state ...")
         report["scenarios"]["corrupt_state"] = scenario_corrupt_state(tmp, reference)

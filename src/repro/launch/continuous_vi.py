@@ -203,8 +203,16 @@ def main(argv=None) -> Dict:
                     help="compact the journal after an activation once it "
                     "exceeds this many records (0: never compact)")
     ap.add_argument("--obs-dir", type=str, default=None,
-                    help="export obs artifacts here on exit: trace.json "
-                    "(Chrome/Perfetto) and metrics.jsonl")
+                    help="export obs artifacts here: trace.json "
+                    "(Chrome/Perfetto), metrics.jsonl and slo.json — "
+                    "re-exported after every activation (flight recorder), "
+                    "so a SIGKILL'd run still leaves its last snapshot")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="serve latency SLO: at most --slo-budget of probe "
+                    "requests may exceed this many milliseconds")
+    ap.add_argument("--slo-budget", type=float, default=0.01,
+                    help="error-budget fraction of the latency SLO "
+                    "(0.01 == a p99 target at --slo-p99-ms)")
     args = ap.parse_args(argv)
 
     if args.increment_rows % args.shard_rows or args.base_rows % args.shard_rows:
@@ -282,6 +290,45 @@ def main(argv=None) -> Dict:
     old_handles: List[ServingHandle] = []
     updating = threading.Event()
 
+    # -- SLO monitor: burn-rate alerting drives the health state -----------
+    # Serve latency reads the per-engine serve.transform_seconds histograms
+    # the engines already feed; update reliability reads the loop counters
+    # incremented below.  An alert degrades health long before
+    # --max-failures would abort the process.
+    updates_total_ctr = obs.registry().counter("loop.updates_total")
+    update_failures_ctr = obs.registry().counter("loop.update_failures")
+    slo_monitor = obs.slo.SLOMonitor([
+        obs.slo.latency_objective(
+            "serve-latency", "serve.transform_seconds",
+            threshold_s=args.slo_p99_ms / 1e3, budget_frac=args.slo_budget,
+        ),
+        # a quarter of update attempts may fail before the budget burns:
+        # transient faults are survivable by design (degrade, don't die)
+        obs.slo.error_objective(
+            "update-errors", "loop.update_failures", "loop.updates_total",
+            budget_frac=0.25,
+        ),
+    ])
+    slo_alerts_fired = 0
+
+    def export_obs() -> Dict:
+        """Flight-recorder export: trace + metrics + SLO state, atomically
+        re-written after every activation so a killed run keeps its last
+        consistent snapshot (the chaos harness merges these per-run docs)."""
+        os.makedirs(args.obs_dir, exist_ok=True)
+        paths = {
+            "trace": os.path.join(args.obs_dir, "trace.json"),
+            "metrics": os.path.join(args.obs_dir, "metrics.jsonl"),
+            "slo": os.path.join(args.obs_dir, "slo.json"),
+        }
+        obs.export_trace(paths["trace"])
+        obs.export_metrics(paths["metrics"])
+        tmp = paths["slo"] + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(slo_monitor.state(), f, indent=1)
+        os.replace(tmp, paths["slo"])
+        return paths
+
     # -- journaled update cycle --------------------------------------------
     # Each chaos site fires AFTER its journal append: a sigkill fault there
     # is a crash between durable transitions, the exact case resume covers.
@@ -307,6 +354,7 @@ def main(argv=None) -> Dict:
         new_handle = None
         updating.set()
         t_up = time.perf_counter()
+        updates_total_ctr.inc()
         journal.append("update_start", update=idx, rows_visible=src.num_rows)
         chaos.fire("controller.update_start", update=idx)
         try:
@@ -346,6 +394,7 @@ def main(argv=None) -> Dict:
                 if dropped:
                     print(f"journal compacted: dropped {dropped} records")
         except Exception as e:
+            update_failures_ctr.inc()
             journal.append(
                 "update_failed", update=idx, error=f"{type(e).__name__}: {e}"
             )
@@ -418,6 +467,8 @@ def main(argv=None) -> Dict:
             f"in {t_base_fit:.2f}s ({model.stats['recompiles']} compiles)"
         )
     monitor = DriftMonitor.from_fit_state(state, DriftConfig())
+    if args.obs_dir:
+        export_obs()  # first flight-recorder snapshot: base fit / catch-up
 
     # -- serving traffic: closed-loop probers, bitwise-checked -------------
     stop_serving = threading.Event()
@@ -496,6 +547,27 @@ def main(argv=None) -> Dict:
         while fitted_rows < total_rows:
             if ingest_errors:
                 raise ingest_errors[0]
+            alerts = slo_monitor.tick()
+            if alerts:
+                slo_alerts_fired += len(alerts)
+                if health["state"] == "ok":
+                    health["state"] = "degraded"
+                    a = alerts[0]
+                    obs.event(
+                        "slo/alert", objective=a["objective"],
+                        burn=round(a["burn"], 2),
+                    )
+                    print(
+                        f"SLO alert [{a['objective']}]: burn "
+                        f"{a['burn']:.1f}x >= {a['max_burn']}x "
+                        f"(bad_frac {a['bad_frac']:.4f} vs budget "
+                        f"{a['budget_frac']}); health degraded"
+                    )
+            elif health["state"] == "degraded" and not health["consecutive_failures"]:
+                # the short window drained and updates are healthy again
+                health["state"] = "ok"
+                obs.event("slo/recovered")
+                print("SLO recovered; health ok")
             grew = raw_src.refresh()
             if grew:
                 # fold the freshly visible rows into the drift window
@@ -533,10 +605,13 @@ def main(argv=None) -> Dict:
                 time.sleep(0.002)
                 continue
             health["consecutive_failures"] = 0
-            health["state"] = "ok"
+            if not slo_monitor.alerting():
+                health["state"] = "ok"
             rec["drift"] = sig
             updates.append(rec)
             monitor.rebase()
+            if args.obs_dir:
+                export_obs()  # flight recorder: survive a SIGKILL mid-loop
             print(
                 f"update v{rec['version']}: +{rec['new_rows']} rows -> "
                 f"{fitted_rows}, folded {rec['folded_degrees']} / replayed "
@@ -600,6 +675,17 @@ def main(argv=None) -> Dict:
         "workdir": workdir,
         "final_model": final_dir,
     }
+    slo_monitor.tick()
+    report["slo"] = {
+        "alerts_fired": slo_alerts_fired,
+        "alerting": slo_monitor.alerting(),
+        "p99_target_ms": args.slo_p99_ms,
+        "budget_frac": args.slo_budget,
+        "objectives": [
+            {k: o.get(k) for k in ("name", "kind", "total", "bad", "alerting")}
+            for o in slo_monitor.state().get("objectives", [])
+        ],
+    }
     print(
         f"{len(updates)} updates to m={total_rows} "
         f"({report['warm_recompiles']} warm recompiles), staleness "
@@ -619,16 +705,17 @@ def main(argv=None) -> Dict:
         )
     if mismatches:
         print("ERROR: served responses diverged from their version's expected output")
-    if args.obs_dir:
-        os.makedirs(args.obs_dir, exist_ok=True)
-        trace_path = os.path.join(args.obs_dir, "trace.json")
-        metrics_path = os.path.join(args.obs_dir, "metrics.jsonl")
-        obs.export_trace(trace_path)
-        obs.export_metrics(metrics_path)
-        report["obs"] = {"trace": trace_path, "metrics": metrics_path}
+    if report["slo"]["alerts_fired"]:
         print(
-            f"obs: trace -> {trace_path} (load in ui.perfetto.dev), "
-            f"metrics -> {metrics_path}"
+            f"SLO: {report['slo']['alerts_fired']} alert ticks fired "
+            f"(final health: {health['state']})"
+        )
+    if args.obs_dir:
+        paths = export_obs()
+        report["obs"] = paths
+        print(
+            f"obs: trace -> {paths['trace']} (load in ui.perfetto.dev), "
+            f"metrics -> {paths['metrics']}, slo -> {paths['slo']}"
         )
     if args.out:
         with open(args.out, "w") as f:

@@ -157,12 +157,12 @@ def _cost_compile(arch_id: str, shape_name: str, mesh, n_periods: int) -> Dict:
 
 def run_cell(arch_id: str, shape_name: str, mesh, mesh_name: str,
              *, with_cost: bool = True) -> Dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, meta = lower_cell(arch_id, shape_name, mesh)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     hlo = compiled.as_text()
@@ -236,7 +236,7 @@ def run_oavi_cell(mesh, mesh_name: str, *, m_global: int = 4_194_304,
         )
     )
     i32 = jnp.int32
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         lowered = step.lower(
             aA, aX, astate,
@@ -246,10 +246,10 @@ def run_oavi_cell(mesh, mesh_name: str, *, m_global: int = 4_194_304,
             jax.ShapeDtypeStruct((Kcap,), jnp.bool_),
             jax.ShapeDtypeStruct((), dt),
         )
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
     cost = compiled.cost_analysis()
     mem = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())

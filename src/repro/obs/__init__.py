@@ -22,8 +22,10 @@ public ``stats`` dicts are views over them.  See ``core.py`` for the full
 contract and the ``OBS_*`` env toggles.
 """
 
+from . import baseline, device, slo  # noqa: F401
 from .core import (  # noqa: F401
     configure,
+    counter_event,
     current_stack,
     disable,
     disabled,
@@ -52,14 +54,18 @@ from .metrics import (  # noqa: F401
 from .trace import (  # noqa: F401
     chrome_trace,
     export_chrome_trace,
+    merge_traces,
     validate_chrome_trace,
 )
 
 __all__ = [
-    "configure", "current_stack", "disable", "disabled", "enable", "enabled",
-    "event", "export_metrics", "export_trace", "registry", "report_lines",
-    "reset", "snapshot", "span", "trace_document", "trace_events",
+    "baseline", "device", "slo",
+    "configure", "counter_event", "current_stack", "disable", "disabled",
+    "enable", "enabled", "event", "export_metrics", "export_trace",
+    "registry", "report_lines", "reset", "snapshot", "span",
+    "trace_document", "trace_events",
     "BUCKETS_PER_OCTAVE", "Counter", "Gauge", "Histogram", "Registry",
     "bucket_relative_error", "percentile_summary",
-    "chrome_trace", "export_chrome_trace", "validate_chrome_trace",
+    "chrome_trace", "export_chrome_trace", "merge_traces",
+    "validate_chrome_trace",
 ]

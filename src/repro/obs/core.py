@@ -33,8 +33,8 @@ from .metrics import Registry
 from .trace import TraceBuffer, chrome_trace, export_chrome_trace
 
 __all__ = [
-    "span", "event", "enabled", "enable", "disable", "disabled",
-    "configure", "reset", "registry", "trace_events", "snapshot",
+    "span", "event", "counter_event", "enabled", "enable", "disable",
+    "disabled", "configure", "reset", "registry", "trace_events", "snapshot",
     "export_trace", "export_metrics", "report_lines",
 ]
 
@@ -155,6 +155,17 @@ def event(name: str, **args) -> None:
     _STATE.buffer.add_instant(name, _STATE.now_us(), args or None)
 
 
+def counter_event(name: str, **values) -> None:
+    """Record a counter sample (``ph: "C"``) on the trace timeline.
+
+    Values must be numbers; Perfetto renders them as a stacked counter track
+    (the live-memory timeline).  No-op when obs is disabled.
+    """
+    if not _STATE.enabled:
+        return
+    _STATE.buffer.add_counter(name, _STATE.now_us(), values)
+
+
 def current_stack() -> List[str]:
     """Names of the open spans on this thread, outermost first."""
     return list(getattr(_LOCAL, "stack", ()))
@@ -263,10 +274,11 @@ def report_lines(snap: Optional[dict] = None) -> List[str]:
         elif m["type"] == "gauge":
             rows.append((name, "gauge", f"{m['value']:g}"))
         else:
+            fmt = lambda v: "-" if v is None else f"{v:.6g}"  # noqa: E731
             rows.append((
                 name, "histogram",
-                f"n={m['count']} mean={m['mean']:.6g} p50={m['p50']:.6g} "
-                f"p99={m['p99']:.6g} p999={m['p999']:.6g} max={m['max']:.6g}",
+                f"n={m['count']} mean={fmt(m['mean'])} p50={fmt(m['p50'])} "
+                f"p99={fmt(m['p99'])} p999={fmt(m['p999'])} max={fmt(m['max'])}",
             ))
     if not rows:
         return ["(no metrics recorded)"]

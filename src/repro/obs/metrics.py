@@ -160,13 +160,17 @@ class Histogram:
                 self.max = hi
         return self
 
-    def quantile(self, q: float) -> float:
-        """Upper-edge quantile estimate, clamped to the observed [min, max]."""
+    def quantile(self, q: float) -> Optional[float]:
+        """Upper-edge quantile estimate, clamped to the observed [min, max].
+
+        Returns None on an empty sketch — there is no sample to estimate, and
+        a fabricated 0.0 would read as a real (excellent) latency downstream.
+        """
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile must be in [0, 1], got {q}")
         with self._lock:
             if self.count == 0:
-                return 0.0
+                return None
             rank = q * (self.count - 1)  # np.percentile-style rank
             seen = self._underflow
             if rank < seen:
@@ -177,6 +181,48 @@ class Histogram:
                     est = _bucket_upper(idx)
                     return min(max(est, self.min), self.max)
             return self.max
+
+    def count_above(self, threshold: float) -> int:
+        """Samples strictly above ``threshold`` (to sketch resolution).
+
+        Counts every bucket whose upper edge exceeds the threshold, so values
+        in the threshold's own bucket are attributed as "above" — the estimate
+        errs pessimistic by at most one bucket (~4.4%).  Used by the SLO
+        monitor to turn a latency sketch into a bad-event count.
+        """
+        with self._lock:
+            above = sum(c for idx, c in self._buckets.items()
+                        if _bucket_upper(idx) > threshold)
+            if threshold < 0.0:
+                above += self._underflow
+            return above
+
+    def to_state(self) -> dict:
+        """Serializable sketch state; exact round-trip via :meth:`from_state`.
+
+        Bucket keys are stringified for JSON; ``min``/``max`` are None when
+        empty (the inf sentinels are not JSON-representable).
+        """
+        with self._lock:
+            return {
+                "buckets": {str(i): c for i, c in self._buckets.items()},
+                "underflow": self._underflow,
+                "count": self.count,
+                "sum": self.sum,
+                "min": None if self.count == 0 else self.min,
+                "max": None if self.count == 0 else self.max,
+            }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "Histogram":
+        h = cls()
+        h._buckets = {int(i): int(c) for i, c in state.get("buckets", {}).items()}
+        h._underflow = int(state.get("underflow", 0))
+        h.count = int(state.get("count", 0))
+        h.sum = float(state.get("sum", 0.0))
+        h.min = math.inf if state.get("min") is None else float(state["min"])
+        h.max = -math.inf if state.get("max") is None else float(state["max"])
+        return h
 
     @property
     def mean(self) -> float:
@@ -189,15 +235,20 @@ class Histogram:
             return len(self._buckets) + (1 if self._underflow else 0)
 
     def summary(self) -> dict:
-        """Point-in-time summary with SLO quantiles."""
+        """Point-in-time summary with SLO quantiles.
+
+        An empty sketch returns a None-valued summary (``count`` 0, ``sum``
+        0.0, every statistic None) rather than NaN or a divide-by-zero — the
+        consumer can tell "no data" from "observed zeros".
+        """
         with self._lock:
             count, total = self.count, self.sum
-            lo = self.min if count else 0.0
-            hi = self.max if count else 0.0
+            lo = self.min if count else None
+            hi = self.max if count else None
         return {
             "count": count,
             "sum": total,
-            "mean": total / count if count else 0.0,
+            "mean": total / count if count else None,
             "min": lo,
             "max": hi,
             "p50": self.quantile(0.50),
@@ -256,6 +307,28 @@ class Registry:
         with self._lock:
             items = list(self._metrics.items())
         return [(dict(key[1]), m) for key, m in items if key[0] == name]
+
+    def percentile_summary(self, name: str, **labels) -> Optional[dict]:
+        """Merged histogram summary across every series under ``name``.
+
+        Series are filtered to those whose labels are a superset of the given
+        ``labels``.  Returns None for an unknown metric name, for a name with
+        no matching histogram series, or when every matching sketch is empty
+        — never a NaN-valued dict.
+        """
+        want = {k: str(v) for k, v in labels.items()}
+        merged = Histogram()
+        matched = False
+        for got, metric in self.find(name):
+            if not isinstance(metric, Histogram):
+                continue
+            if any(got.get(k) != v for k, v in want.items()):
+                continue
+            matched = True
+            merged.merge(metric)
+        if not matched or merged.count == 0:
+            return None
+        return merged.summary()
 
     def snapshot(self) -> List[dict]:
         """Stable-ordered list of metric snapshots (one dict per series)."""

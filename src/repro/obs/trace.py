@@ -8,6 +8,7 @@ Event vocabulary (the subset of the spec we emit):
 
 - ``ph: "X"`` — complete event: a span with ``ts``/``dur`` in microseconds.
 - ``ph: "i"`` — instant event (compile, recompile, regrowth, activation...).
+- ``ph: "C"`` — counter sample (live-memory timeline gauges).
 - ``ph: "M"`` — metadata (process/thread names), emitted at export time.
 
 ``pid`` is the real process id; ``tid`` is a stable small integer per Python
@@ -26,6 +27,7 @@ __all__ = [
     "TraceBuffer",
     "chrome_trace",
     "export_chrome_trace",
+    "merge_traces",
     "validate_chrome_trace",
 ]
 
@@ -46,6 +48,7 @@ class TraceBuffer:
         # tuple append, so it is deferred to :meth:`events` at export time:
         #   ("X", name, ts_us, dur_us, tid, args)   complete (span)
         #   ("i", name, ts_us, tid, args)           instant
+        #   ("C", name, ts_us, tid, values)         counter sample
         self._events: deque = deque(maxlen=maxlen)
         self._tids: Dict[int, int] = {}
         self._pid = os.getpid()
@@ -68,6 +71,15 @@ class TraceBuffer:
                     args: Optional[dict] = None) -> None:
         self._added += 1
         self._events.append(("i", name, ts_us, self._tid(), args))
+
+    def add_counter(self, name: str, ts_us: float, values: dict) -> None:
+        """Record a Chrome counter sample (``ph: "C"``).
+
+        ``values`` maps series name -> number; Perfetto renders one stacked
+        counter track per (pid, name).  Used for the live-memory timeline.
+        """
+        self._added += 1
+        self._events.append(("C", name, ts_us, self._tid(), values))
 
     def __len__(self) -> int:
         return len(self._events)
@@ -92,6 +104,12 @@ class TraceBuffer:
                 out.append({
                     "name": name, "ph": "X", "ts": ts, "dur": dur,
                     "pid": pid, "tid": tid, "args": args or {},
+                })
+            elif rec[0] == "C":
+                _, name, ts, tid, args = rec
+                out.append({
+                    "name": name, "ph": "C", "ts": ts, "pid": pid,
+                    "tid": tid, "args": args or {},
                 })
             else:
                 _, name, ts, tid, args = rec
@@ -149,6 +167,71 @@ def export_chrome_trace(events: List[dict], path: str,
         json.dump(doc, f)
     os.replace(tmp, path)
     return path
+
+
+def merge_traces(docs: List[dict], markers: Optional[List[dict]] = None,
+                 gap_us: float = 1_000.0,
+                 harness_name: str = "harness") -> dict:
+    """Merge per-process trace documents onto one sequential timeline.
+
+    Each document keeps its own process track (its real ``pid``; a synthetic
+    one on collision) but is shifted so document ``i`` begins after document
+    ``i-1`` ends — per-process ``perf_counter`` epochs share no origin, so
+    only within-process ordering is meaningful and a sequential layout is the
+    honest rendering of e.g. a killed controller followed by its resume.
+
+    ``markers`` inject instant events from the merging (harness) process onto
+    a dedicated track: ``{"name": ..., "after_doc": i, "args": {...}}`` lands
+    on the merged timeline at the boundary after document ``i`` (``-1`` = the
+    very start).  Used by ``launch/chaos_vi.py`` for kill/recovery markers.
+    """
+    merged: List[dict] = []
+    seen_pids: set = set()
+    boundaries: Dict[int, float] = {-1: 0.0}
+    cursor = 0.0
+    for i, doc in enumerate(docs):
+        events = doc.get("traceEvents", [])
+        payload = [e for e in events if e.get("ph") != "M"]
+        meta = [e for e in events if e.get("ph") == "M"]
+        pids = {e["pid"] for e in payload} | {e["pid"] for e in meta}
+        pid_map = {}
+        for pid in sorted(pids):
+            new = pid
+            while new in seen_pids:
+                new += 100_000  # same-pid docs still get distinct tracks
+            pid_map[pid] = new
+            seen_pids.add(new)
+        t0 = min((e["ts"] for e in payload), default=0.0)
+        end = cursor
+        for e in meta:
+            e = dict(e)
+            e["pid"] = pid_map[e["pid"]]
+            merged.append(e)
+        for e in payload:
+            e = dict(e)
+            e["pid"] = pid_map[e["pid"]]
+            e["ts"] = e["ts"] - t0 + cursor
+            end = max(end, e["ts"] + e.get("dur", 0.0))
+            merged.append(e)
+        boundaries[i] = end
+        cursor = end + gap_us
+    harness_pid = os.getpid()
+    while harness_pid in seen_pids:
+        harness_pid += 100_000
+    if markers:
+        merged.append({
+            "name": "process_name", "ph": "M", "ts": 0,
+            "pid": harness_pid, "tid": 0, "args": {"name": harness_name},
+        })
+        last = max(boundaries.values())
+        for k, m in enumerate(markers):
+            ts = boundaries.get(m.get("after_doc", -1), last) + gap_us * 0.5
+            merged.append({
+                "name": m["name"], "ph": "i", "ts": round(ts, 3) + k * 1e-3,
+                "pid": harness_pid, "tid": 1, "s": "g",  # global-scoped
+                "args": m.get("args") or {},
+            })
+    return {"traceEvents": merged, "displayTimeUnit": "ms"}
 
 
 def validate_chrome_trace(doc: dict) -> List[dict]:

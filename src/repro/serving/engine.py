@@ -137,10 +137,21 @@ class TransformEngine:
         self._slo = obs.registry().histogram(
             "serve.transform_seconds", backend=self.backend
         )
+        # device-level accounting: HLO flop estimate per bucket (captured
+        # once per bucket via lowering, no XLA compile), cumulative flops
+        # actually dispatched, and XLA backend-compile seconds attributed to
+        # this engine's warmup/first-call compiles
+        self._bucket_flops: Dict[int, Optional[float]] = {}
+        self._flops_dispatched = 0.0
+        self._compile_seconds = 0.0
 
     @property
     def stats(self) -> Dict:
         """Point-in-time counter view (same keys as the historical dict)."""
+        lat = self.latency.summary()
+        achieved = None
+        if self._flops_dispatched > 0.0 and lat["sum"] > 0.0:
+            achieved = round(self._flops_dispatched / lat["sum"] / 1e9, 3)
         return {
             "requests": self._requests.value,
             "rows": self._rows.value,
@@ -149,7 +160,11 @@ class TransformEngine:
             "recompiles": self._recompiles.value,
             "warmup_compiles": self._warmup_compiles.value,
             "buckets": {b: c.value for b, c in sorted(self._bucket_calls.items())},
-            "latency": self.latency.summary(),
+            "latency": lat,
+            "flops_per_bucket": dict(sorted(self._bucket_flops.items())),
+            "flops_dispatched": self._flops_dispatched,
+            "compile_seconds": round(self._compile_seconds, 6),
+            "achieved_gflops": achieved,
         }
 
     # -- plan / shape machinery -------------------------------------------
@@ -197,6 +212,21 @@ class TransformEngine:
 
     # -- execution ---------------------------------------------------------
 
+    def _bucket_cost(self, b: int) -> Optional[float]:
+        """Flop estimate of one ``b``-row device call (HLO cost analysis,
+        captured once per bucket — lowering traces without XLA-compiling)."""
+        if not obs.device.device_enabled():
+            return None
+        with self._lock:
+            if b in self._bucket_flops:
+                return self._bucket_flops[b]
+        aval = jax.ShapeDtypeStruct((b, self.consts.n), self.plan.dtype)
+        cost = obs.device.step_cost(self._fn, ("serve", b), (aval,))
+        flops = None if cost is None else cost["flops"]
+        with self._lock:
+            self._bucket_flops.setdefault(b, flops)
+        return flops
+
     def warmup(self, max_rows: Optional[int] = None) -> int:
         """Trace-and-compile every bucket up to ``max_rows`` (default: all).
 
@@ -205,34 +235,53 @@ class TransformEngine:
         """
         top = self.max_bucket if max_rows is None else self.bucket_for(max_rows)
         compiled = 0
-        for b in self.buckets():
-            if b > top:
-                break
-            with self._lock:
-                if b in self._seen_buckets:
-                    continue
-                self._seen_buckets.add(b)
-            Zb = np.zeros((b, self.consts.n), self.plan.dtype)
-            with obs.span("serve/warmup_compile", bucket=b, backend=self.backend):
-                jax.block_until_ready(self._fn(jnp.asarray(Zb)))
-            compiled += 1
+        with obs.device.profile_window("serve/warmup"):
+            for b in self.buckets():
+                if b > top:
+                    break
+                with self._lock:
+                    if b in self._seen_buckets:
+                        continue
+                    self._seen_buckets.add(b)
+                self._bucket_cost(b)
+                Zb = np.zeros((b, self.consts.n), self.plan.dtype)
+                with obs.span(
+                    "serve/warmup_compile", bucket=b, backend=self.backend
+                ), obs.device.CompileWindow() as cw:
+                    jax.block_until_ready(self._fn(jnp.asarray(Zb)))
+                with self._lock:
+                    self._compile_seconds += cw.seconds
+                compiled += 1
         self._warmup_compiles.inc(compiled)
         return compiled
 
     def _dispatch(self, Zp: np.ndarray) -> np.ndarray:
         """One padded device call at a bucket shape; updates compile stats."""
         b = Zp.shape[0]
+        fresh = False
         with self._lock:
             if b not in self._seen_buckets:
                 self._seen_buckets.add(b)
                 self._recompiles.inc()
+                fresh = True
                 obs.event("serve/recompile", bucket=b, backend=self.backend)
             bucket = self._bucket_calls.get(b)
             if bucket is None:
                 bucket = self._bucket_calls.setdefault(b, obs.Counter())
         self._device_calls.inc()
         bucket.inc()
-        return np.asarray(self._fn(jnp.asarray(Zp)))
+        flops = self._bucket_cost(b)
+        if flops:
+            with self._lock:
+                self._flops_dispatched += flops
+        if not fresh:
+            return np.asarray(self._fn(jnp.asarray(Zp)))
+        # cold bucket outside warmup: attribute the XLA compile to the engine
+        with obs.device.CompileWindow() as cw:
+            out = np.asarray(self._fn(jnp.asarray(Zp)))
+        with self._lock:
+            self._compile_seconds += cw.seconds
+        return out
 
     def transform(self, Z) -> np.ndarray:
         """(FT) features for one request: (q, num_features) in plan dtype.

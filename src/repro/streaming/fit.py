@@ -55,6 +55,7 @@ from ..core.distributed import (
     data_spec,
     num_data_shards,
     shard_map_compat,
+    shard_probe,
 )
 from ..core.oavi import (
     FitScope,
@@ -310,6 +311,11 @@ def _streaming_stats_entry(
         def per_shard(accQL, accC, state, ell0, valid, m_total):
             return stats_step(accQL[0], accC[0], state, ell0, valid, m_total)
 
+        # per-shard instant marker, once per degree (NOT on the per-chunk
+        # accumulator hot path) — the sharded streaming half of the PR 8
+        # span-coverage remainder
+        per_shard = shard_probe(per_shard, mesh, axes, "fit/shard_step")
+
         return jax.jit(
             shard_map_compat(
                 per_shard,
@@ -460,7 +466,51 @@ def fit(
             # so its first signature always counts — same rule as before
             acc_sig = (Kcap, chunk_rows, n, str(dtype))
             scope.note_signature(acc_seen, acc_sig, kind="fit/compile_accumulator")
-            scope.note_signature(entry.seen, (Lcap, Kcap, str(dtype)))
+            sig = (Lcap, Kcap, str(dtype))
+            scope.note_signature(entry.seen, sig)
+
+            # HLO cost of the degree = accumulator flops x chunk count plus
+            # the stats step, lowered from abstract shapes (the real buffers
+            # only exist inside the degree window).  The accumulator re-lowers
+            # each degree because its jitted fn is book-specific — the same
+            # degree already pays a full jit trace + compile for it, so the
+            # extra lowering rides an inherently cold path.
+            sample_chunks = obs.device.device_enabled()
+            if sample_chunks:
+                aval = jax.ShapeDtypeStruct
+                f32 = jnp.float32
+                rows_cap = shards * chunk_rows if mesh is not None else chunk_rows
+                if mesh is None:
+                    acc_shapes = ((Lcap, Kcap), (Kcap, Kcap))
+                else:
+                    acc_shapes = ((shards, Lcap, Kcap), (shards, Kcap, Kcap))
+                idx_aval = aval((Kcap,), jnp.int32)
+                acc_avals = (
+                    aval(acc_shapes[0], f32), aval(acc_shapes[1], f32),
+                    aval((rows_cap, n), dtype), aval((rows_cap,), dtype),
+                    idx_aval, idx_aval,
+                )
+                state_avals = jax.tree_util.tree_map(
+                    lambda x: aval(jnp.shape(x), x.dtype), state
+                )
+                step_avals = (
+                    aval(acc_shapes[0], f32), aval(acc_shapes[1], f32),
+                    state_avals, aval((), jnp.int32),
+                    aval((Kcap,), jnp.bool_), aval((), dtype),
+                )
+                acc_cost = obs.device.step_cost(
+                    acc_fn, ("acc", len(book), shards) + acc_sig, acc_avals
+                )
+                st_cost = obs.device.step_cost(entry.fn, sig, step_avals)
+                flops = None
+                if acc_cost is not None or st_cost is not None:
+                    flops = (
+                        (acc_cost["flops"] if acc_cost else 0.0) * steps_per_pass
+                        + (st_cost["flops"] if st_cost else 0.0)
+                    )
+                scope.record_flops(flops)
+            else:
+                scope.record_flops(None)
 
             with scope.degree(d, K=K):
                 parents_d = jnp.asarray(parents)
@@ -492,6 +542,11 @@ def fit(
                         accQL, accC = acc_fn(
                             accQL, accC, rows_d, mask_d, parents_d, vars_d
                         )
+                        if sample_chunks:
+                            # chunk-boundary memory timeline (gauges + trace
+                            # counter); intra-degree peaks are invisible to
+                            # the per-degree sample alone
+                            obs.device.sample_memory(stats)
                 stats["streaming"]["num_chunks"] += steps_per_pass
                 stats["streaming"]["passes"] += 1
 
@@ -726,10 +781,11 @@ def fit_classes(
                 # schedule while any valid lane's budget was cut short
                 while True:
                     entry = _streaming_class_entry(config, schedule)
-                    scope.note_signature(
-                        entry.seen, (k, Lcap, Kcap, str(dtype), schedule)
-                    )
-                    st = entry.fn(accQL_b, accC_b, state, ells_d, valid_d, m_total)
+                    csig = (k, Lcap, Kcap, str(dtype), schedule)
+                    cargs = (accQL_b, accC_b, state, ells_d, valid_d, m_total)
+                    scope.note_signature(entry.seen, csig)
+                    scope.step_cost(entry.fn, csig, cargs)
+                    st = entry.fn(*cargs)
                     if schedule is None or not bool(
                         np.any(jax.device_get(st.unconverged))
                     ):
@@ -753,12 +809,21 @@ def fit_classes(
                 )
 
         batch["solver_schedule_len"] = schedule
+        if schedule is not None:
+            obs.registry().gauge(
+                "fit.solver_schedule_len", backend="streaming_class_batch"
+            ).set(float(schedule))
+        if batch["solver_escalations"]:
+            obs.registry().counter(
+                "fit.solver_escalations", backend="streaming_class_batch"
+            ).inc(batch["solver_escalations"])
         models: List[OAVIModel] = []
         for c in range(k):
             stats = per_class[c]
             stats["recompiles"] = batch["recompiles"]
             stats["regrowths"] = batch["regrowths"]
             stats["degree_times"] = list(batch["degree_times"])
+            stats["flops_per_degree"] = list(batch.get("flops_per_degree", []))
             stats["solver_schedule_len"] = schedule
             stats["solver_escalations"] = batch["solver_escalations"]
             stats["class_batch"] = {

@@ -1,8 +1,15 @@
-"""Linter for ``make lint``: unused imports + solver-loop discipline.
+"""Linter for ``make lint``: unused imports, solver-loop and clock discipline.
 
 Unused imports: prefers ``pyflakes`` when installed (``make dev-deps`` /
 requirements-dev.txt); otherwise falls back to a built-in AST check, so the
 target works in the bare runtime container too.
+
+Clock discipline: ``time.time()`` is banned in ``src/repro`` — it is a
+wall clock (NTP steps it backwards), so measuring durations with it yields
+negative or torn intervals exactly when the machine is under stress.  Every
+duration must come from ``time.perf_counter()`` (or ``time.monotonic``);
+the few legitimate *timestamp* uses (e.g. a registry entry's ``loaded_at``)
+are named in ``TIME_TIME_ALLOWLIST``.
 
 Solver-loop discipline: the batched-solver modules must not grow new
 data-dependent ``lax.while_loop``s — a while_loop under ``vmap`` runs every
@@ -34,6 +41,15 @@ WHILE_LOOP_ALLOWLIST = {
     "src/repro/core/oracles.py": {"_run_while"},
     "src/repro/core/oavi.py": set(),
 }
+
+# module (repo-relative) -> function names allowed to call time.time():
+# genuine wall-clock *timestamps*, never duration measurement
+TIME_TIME_ALLOWLIST = {
+    "src/repro/serving/registry.py": {"register"},  # loaded_at timestamp
+}
+
+# only library code is clock-checked; benchmarks/tools may timestamp freely
+TIME_TIME_ROOT = "src/repro"
 
 
 def _enclosing_functions(tree: ast.AST):
@@ -112,6 +128,72 @@ def _check_while_loops(paths) -> int:
     return 1 if failures else 0
 
 
+def _time_time_violations(path: pathlib.Path, repo_root: pathlib.Path):
+    """Flag ``time.time()`` calls in library code outside the allowlist.
+
+    Matches ``time.time()`` attribute calls and bare ``time()`` calls bound
+    by ``from time import time``.  Only files under ``TIME_TIME_ROOT`` are
+    checked; allowlisted (module, function) pairs are wall-clock timestamps,
+    not duration measurements.
+    """
+    try:
+        rel = str(path.resolve().relative_to(repo_root))
+    except ValueError:
+        rel = str(path)
+    if not rel.startswith(TIME_TIME_ROOT):
+        return []
+    tree = ast.parse(path.read_text())
+    # does this module bind the bare name `time` to the function (not module)?
+    bare_time = any(
+        isinstance(node, ast.ImportFrom) and node.module == "time"
+        and any(a.name == "time" and a.asname is None for a in node.names)
+        for node in ast.walk(tree)
+    )
+    owner = _enclosing_functions(tree)
+    allowed = TIME_TIME_ALLOWLIST.get(rel, set())
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = node.func
+        hit = (
+            isinstance(callee, ast.Attribute)
+            and callee.attr == "time"
+            and isinstance(callee.value, ast.Name)
+            and callee.value.id == "time"
+        ) or (bare_time and isinstance(callee, ast.Name) and callee.id == "time")
+        if not hit:
+            continue
+        fn = owner.get(node)
+        if fn in allowed:
+            continue
+        where = f"in {fn}()" if fn else "at module level"
+        findings.append(
+            (
+                node.lineno,
+                f"time.time() {where} — wall clocks step backwards; use "
+                f"time.perf_counter() for durations (or add a genuine "
+                f"timestamp use to TIME_TIME_ALLOWLIST)",
+            )
+        )
+    return findings
+
+
+def _check_time_time(paths) -> int:
+    repo_root = pathlib.Path(__file__).resolve().parent.parent
+    failures = 0
+    for root in paths:
+        root = pathlib.Path(root)
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            for lineno, msg in _time_time_violations(f, repo_root):
+                print(f"{f}:{lineno}: {msg}")
+                failures += 1
+    if failures:
+        print(f"\n{failures} clock discipline violation(s)", file=sys.stderr)
+    return 1 if failures else 0
+
+
 def _pyflakes(paths) -> int:
     proc = subprocess.run([sys.executable, "-m", "pyflakes", *paths])
     return proc.returncode
@@ -180,13 +262,14 @@ def _fallback(paths) -> int:
 def main(argv=None) -> int:
     paths = (argv if argv is not None else sys.argv[1:]) or DEFAULT_PATHS
     rc_loops = _check_while_loops(paths)
+    rc_clock = _check_time_time(paths)
     try:
         import pyflakes  # noqa: F401
 
         rc_imports = _pyflakes(paths)
     except ImportError:
         rc_imports = _fallback(paths)
-    return rc_loops or rc_imports
+    return rc_loops or rc_clock or rc_imports
 
 
 if __name__ == "__main__":
